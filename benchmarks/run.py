@@ -1,0 +1,231 @@
+"""Benchmark harness — one function per paper table + framework benches.
+
+Prints ``name,us_per_call,derived`` CSV rows and a human-readable summary
+per table. Heavy benches keep sizes CPU-friendly; the dry-run/roofline
+artifacts cover the production scale.
+
+  PYTHONPATH=src python -m benchmarks.run [--only table1,table3]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+
+def _timeit(fn, *args, repeat=3, number=1):
+    best = float("inf")
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        for _ in range(number):
+            out = fn(*args)
+        best = min(best, (time.perf_counter() - t0) / number)
+    return best * 1e6, out
+
+
+def table1_area_power():
+    """Paper Table I: pipelined online multiplier, full vs reduced working
+    precision — latches/area/power, model vs paper."""
+    from repro.core.hwmodel import PAPER_TABLE1, online_multiplier_cost
+    from repro.core.precision import OnlinePrecision
+    print("\n== Table I: full vs reduced working precision (model | paper) ==")
+    print(f"{'n':>3} {'metric':>8} {'full':>10} {'reduced':>10} "
+          f"{'save%':>7} {'paper_save%':>11}")
+    rows = []
+    for n in (8, 16, 24, 32):
+        t0 = time.perf_counter()
+        full = online_multiplier_cost(
+            OnlinePrecision(n=n, truncated=False, tail_gating=False))
+        red = online_multiplier_cost(OnlinePrecision(n=n))
+        us = (time.perf_counter() - t0) * 1e6
+        for metric, fu, re_ in (("latches", full.latches, red.latches),
+                                ("area", full.area, red.area),
+                                ("power", full.power, red.power)):
+            save = 100 * (1 - re_ / fu)
+            p = PAPER_TABLE1[metric]
+            psave = 100 * (1 - p["reduced"][n] / p["full"][n])
+            print(f"{n:>3} {metric:>8} {fu:>10.0f} {re_:>10.0f} "
+                  f"{save:>7.1f} {psave:>11.1f}")
+            rows.append((f"table1/{metric}/n{n}", us, save))
+    for name, us, save in rows:
+        print(f"{name},{us:.1f},{save:.2f}")
+
+
+def table2_multiplier_comparison():
+    """Paper Table II: 8-bit multiplier families (model vs paper)."""
+    from repro.core.hwmodel import (PAPER_TABLE2, array_multiplier_cost,
+                                    nonpipelined_online_cost,
+                                    online_multiplier_cost,
+                                    serial_parallel_cost)
+    from repro.core.precision import OnlinePrecision
+    print("\n== Table II: 8-bit multiplier comparison (model | paper) ==")
+    designs = {
+        "serial-parallel": serial_parallel_cost(8),
+        "array": array_multiplier_cost(8),
+        "online-iterative": nonpipelined_online_cost(8),
+        "olm-pipelined-full": online_multiplier_cost(
+            OnlinePrecision(n=8, truncated=False, tail_gating=False)),
+        "olm-pipelined-reduced": online_multiplier_cost(OnlinePrecision(n=8)),
+    }
+    print(f"{'design':>22} {'latches':>8} {'area':>9} {'power':>10} "
+          f"{'paper(latch/area/power)':>26}")
+    for name, c in designs.items():
+        p = PAPER_TABLE2[name]
+        print(f"{name:>22} {c.latches:>8} {c.area:>9.0f} {c.power:>10.0f} "
+              f"{p['latches']:>8}/{p['area']:>8.1f}/{p['power']:>8.1f}")
+        print(f"table2/{name},0.0,{c.area:.2f}")
+
+
+def table3_cycles():
+    """Paper Table III: cycles to process k=8 vectors, measured on the
+    cycle-accurate pipeline simulator vs closed forms."""
+    from repro.core.pipeline import run_pipeline
+    from repro.core.precision import OnlinePrecision
+    rng = np.random.default_rng(0)
+    k = 8
+    print("\n== Table III: clock cycles for k=8 vector stream ==")
+    print(f"{'n':>3} {'SP(n+1)k':>9} {'array nk':>9} {'online':>7} "
+          f"{'pipelined':>10} {'simulated':>10}")
+    for n in (8, 16, 24, 32):
+        pairs = [([int(d) for d in rng.integers(-1, 2, n)],
+                  [int(d) for d in rng.integers(-1, 2, n)]) for _ in range(k)]
+        us, run = _timeit(run_pipeline, pairs, OnlinePrecision(n=n), repeat=1)
+        sp, ar = (n + 1) * k, n * k
+        ol, pl = (n + 4) * k, (n + 4) + (k - 1)
+        assert run.cycles == pl
+        print(f"{n:>3} {sp:>9} {ar:>9} {ol:>7} {pl:>10} {run.cycles:>10}")
+        print(f"table3/n{n},{us:.1f},{run.cycles}")
+
+
+def error_profile():
+    """Eq. 8 validation: empirical max error vs working precision."""
+    from repro.core.online_mul import online_multiply
+    from repro.core.precision import OnlinePrecision, reduced_precision
+    from repro.core.sd import int_to_digits
+    rng = np.random.default_rng(7)
+    print("\n== Error profile: |z - x*y| in output ulp (randomized) ==")
+    print(f"{'n':>3} {'p(Eq.8)':>8} {'full':>7} {'truncated':>10} "
+          f"{'trunc+tail(G=2)':>16}")
+    for n in (8, 16, 24, 32):
+        errs = {}
+        for label, cfg in (
+                ("full", OnlinePrecision(n=n, truncated=False, tail_gating=False)),
+                ("trunc", OnlinePrecision(n=n, tail_gating=False)),
+                ("tail", OnlinePrecision(n=n))):
+            e = 0.0
+            for _ in range(800):
+                xi = int(rng.integers(-(2**n) + 1, 2**n))
+                yi = int(rng.integers(-(2**n) + 1, 2**n))
+                tr = online_multiply(int_to_digits(xi, n),
+                                     int_to_digits(yi, n), cfg)
+                e = max(e, abs(tr.z_value - (xi * yi) / float(1 << (2 * n)))
+                        * (1 << n))
+            errs[label] = e
+        print(f"{n:>3} {reduced_precision(n):>8} {errs['full']:>7.3f} "
+              f"{errs['trunc']:>10.3f} {errs['tail']:>16.3f}")
+        print(f"error_profile/n{n},0.0,{errs['tail']:.4f}")
+
+
+def tpmm_bench():
+    """TPU adaptation: truncated digit-plane matmul — MXU-op savings and
+    error at each delivered precision (DESIGN.md §2)."""
+    import jax.numpy as jnp
+    from repro.kernels.tpmm.ops import tpmm, tpmm_cost_model
+    rng = np.random.default_rng(0)
+    print("\n== tpmm: plane-matmul savings vs delivered precision ==")
+    print(f"{'n_bits':>6} {'planes':>7} {'pairs':>11} {'save%':>7} "
+          f"{'rel_err':>9} {'us':>9}")
+    for nb in (8, 16, 24, 32):
+        dim = 256 if nb <= 16 else 128  # n=24/32 run many plane pairs
+        a = rng.standard_normal((dim, dim)).astype(np.float32)
+        b = rng.standard_normal((dim, dim)).astype(np.float32)
+        exact = a @ b
+        cm = tpmm_cost_model(nb)
+        pairs = f"{cm['pair_matmuls_truncated']}/{cm['pair_matmuls_full']}"
+        if nb * 1 > 28:  # int32 quantizer limit; f32 inputs cap at 24 bits
+            print(f"{nb:>6} {cm['planes']:>7} {pairs:>11} "
+                  f"{cm['mxu_savings_pct']:>7.1f} {'(cost model)':>9} {'-':>9}")
+            print(f"tpmm/n{nb},0.0,{cm['mxu_savings_pct']:.2f}")
+            continue
+        fn = lambda: tpmm(jnp.asarray(a), jnp.asarray(b), n_bits=nb,
+                          use_pallas=False)
+        fn()  # compile
+        us, got = _timeit(fn, repeat=2)
+        rel = float(np.max(np.abs(np.asarray(got) - exact)) / np.abs(exact).max())
+        print(f"{nb:>6} {cm['planes']:>7} {pairs:>11} "
+              f"{cm['mxu_savings_pct']:>7.1f} {rel:>9.2e} {us:>9.1f}")
+        print(f"tpmm/n{nb},{us:.1f},{cm['mxu_savings_pct']:.2f}")
+
+
+def pipeline_activity():
+    """Fig. 7 reproduction: per-cycle live slices + measured switching."""
+    from repro.core.pipeline import run_pipeline
+    from repro.core.precision import OnlinePrecision
+    rng = np.random.default_rng(1)
+    n, k = 16, 16
+    pairs = [([int(d) for d in rng.integers(-1, 2, n)],
+              [int(d) for d in rng.integers(-1, 2, n)]) for _ in range(k)]
+    full = run_pipeline(pairs, OnlinePrecision(n=n, truncated=False,
+                                               tail_gating=False))
+    red = run_pipeline(pairs, OnlinePrecision(n=n))
+    act_save = 100 * (1 - sum(red.active_slices_per_cycle) /
+                      sum(full.active_slices_per_cycle))
+    flip_save = 100 * (1 - red.flips_total / full.flips_total)
+    print("\n== Fig. 7: activity & measured switching (n=16, k=16) ==")
+    print(f"slice-cycles: full {sum(full.active_slices_per_cycle)} "
+          f"reduced {sum(red.active_slices_per_cycle)} ({act_save:.1f}% saved)")
+    print(f"register flips: full {full.flips_total} reduced {red.flips_total} "
+          f"({flip_save:.1f}% saved)")
+    print(f"fig7/activity,0.0,{act_save:.2f}")
+    print(f"fig7/flips,0.0,{flip_save:.2f}")
+
+
+def roofline_report():
+    """Aggregate dry-run JSONs into the §Roofline table (if present)."""
+    import json
+    from pathlib import Path
+    d = Path("results/dryrun")
+    files = sorted(d.glob("*.json")) if d.exists() else []
+    if not files:
+        print("\n== Roofline: no dry-run artifacts found (run "
+              "repro.launch.dryrun) ==")
+        return
+    print("\n== Roofline terms from dry-run (seconds; dominant term) ==")
+    print(f"{'cell':>52} {'compute':>9} {'memory':>9} {'collective':>11} "
+          f"{'dominant':>12}")
+    for f in files:
+        r = json.loads(f.read_text())
+        if r.get("skipped"):
+            continue
+        t = r["roofline"]
+        name = f"{r['arch']}|{r['shape']}|{r['mesh']}"
+        print(f"{name:>52} {t['compute_s']:>9.4f} {t['memory_s']:>9.4f} "
+              f"{t['collective_s']:>11.4f} {t['dominant']:>12}")
+
+
+BENCHES = {
+    "table1": table1_area_power,
+    "table2": table2_multiplier_comparison,
+    "table3": table3_cycles,
+    "error_profile": error_profile,
+    "tpmm": tpmm_bench,
+    "fig7": pipeline_activity,
+    "roofline": roofline_report,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names")
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(BENCHES)
+    for name in names:
+        BENCHES[name]()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Serve a small model with continuous batching (deliverable (b) example).
+
+  PYTHONPATH=src python examples/serve_batched.py
+"""
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    rep = serve_main([
+        "--arch", "internlm2_1_8b", "--smoke",
+        "--requests", "10", "--slots", "4",
+        "--max-new", "12", "--max-len", "96",
+    ])
+    print("served", rep["n"], "requests; mean TTFT",
+          f"{rep['ttft_mean_s'] * 1e3:.1f} ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,132 @@
+"""Fault-tolerant checkpointing: atomic, sharded, keep-K, elastic restore.
+
+Layout:
+  <dir>/step_000100.tmp/...   (written first)
+  <dir>/step_000100/          (atomic rename on completion)
+      manifest.json           tree structure, shapes, dtypes, step
+      shard_<i>.npz           leaf arrays (flattened tree order)
+
+Properties:
+  * atomicity — a crash mid-write never corrupts the latest checkpoint
+    (readers only ever see fully renamed directories);
+  * keep-K garbage collection;
+  * async save (background thread) so the train loop is not blocked;
+  * ELASTIC restore — arrays are saved unsharded (gathered) with the tree
+    manifest, so a restore onto a different mesh shape just reshards via
+    jax.device_put with the new sharding tree (tested in
+    tests/test_checkpoint.py with changed mesh sizes);
+  * data-pipeline state is implicit: the synthetic pipeline is keyed by
+    (seed, step), so restoring `step` resumes the exact stream.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["CheckpointManager"]
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | Path, *, keep: int = 3,
+                 async_save: bool = True):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+
+    # ----------------- save -----------------
+    def save(self, step: int, tree: Any, *, block: bool = False) -> None:
+        leaves, treedef = _flatten(tree)
+        host_leaves = [np.asarray(l) for l in leaves]
+        if self._thread is not None:
+            self._thread.join()  # one in-flight save at a time
+        if self.async_save and not block:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host_leaves, treedef))
+            self._thread.start()
+        else:
+            self._write(step, host_leaves, treedef)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, leaves, treedef) -> None:
+        name = f"step_{step:08d}"
+        tmp = self.dir / (name + ".tmp")
+        final = self.dir / name
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        manifest = {
+            "step": step,
+            "treedef": str(treedef),
+            "n_leaves": len(leaves),
+            "leaves": [{"shape": list(l.shape), "dtype": str(l.dtype)}
+                       for l in leaves],
+        }
+        np.savez(tmp / "shard_0.npz",
+                 **{f"leaf_{i}": l for i, l in enumerate(leaves)})
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        if final.exists():
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    # ----------------- restore -----------------
+    def all_steps(self):
+        out = []
+        for p in self.dir.glob("step_*"):
+            if p.suffix == ".tmp" or not p.is_dir():
+                continue
+            try:
+                out.append(int(p.name.split("_")[1]))
+            except ValueError:
+                continue
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, tree_like: Any, step: Optional[int] = None,
+                shardings: Any = None) -> Any:
+        """Restore into the structure of `tree_like`. If `shardings` (a
+        pytree of NamedSharding, possibly for a NEW mesh) is given, leaves
+        are device_put with it — elastic re-sharding on load."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = self.dir / f"step_{step:08d}"
+        data = np.load(path / "shard_0.npz")
+        leaves, treedef = _flatten(tree_like)
+        n = json.loads((path / "manifest.json").read_text())["n_leaves"]
+        if n != len(leaves):
+            raise ValueError(
+                f"checkpoint has {n} leaves, target structure has {len(leaves)}")
+        restored = [data[f"leaf_{i}"] for i in range(n)]
+        if shardings is not None:
+            sh_leaves = treedef.flatten_up_to(shardings)
+            restored = [jax.device_put(r, s) if s is not None else r
+                        for r, s in zip(restored, sh_leaves)]
+        return jax.tree_util.tree_unflatten(treedef, restored)

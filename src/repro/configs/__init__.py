@@ -1,0 +1,80 @@
+"""Architecture registry: one module per assigned architecture.
+
+get_config(arch_id)    -> full published config (dry-run only; never
+                          allocated on CPU)
+smoke_config(arch_id)  -> reduced same-family config for CPU smoke tests
+list_archs()           -> all registered ids
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+
+_ARCHS = [
+    "qwen3_moe_235b_a22b",
+    "mixtral_8x22b",
+    "recurrentgemma_9b",
+    "chatglm3_6b",
+    "qwen1_5_110b",
+    "internlm2_1_8b",
+    "yi_34b",
+    "seamless_m4t_medium",
+    "mamba2_130m",
+    "llama_3_2_vision_11b",
+]
+
+ALIASES = {a.replace("_", "-"): a for a in _ARCHS}
+ALIASES.update({
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "chatglm3-6b": "chatglm3_6b",
+    "qwen1.5-110b": "qwen1_5_110b",
+    "internlm2-1.8b": "internlm2_1_8b",
+    "yi-34b": "yi_34b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "mamba2-130m": "mamba2_130m",
+    "llama-3.2-vision-11b": "llama_3_2_vision_11b",
+})
+
+
+def list_archs() -> List[str]:
+    return list(_ARCHS)
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod_name = ALIASES.get(arch, arch).replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def smoke_config(arch: str) -> ModelConfig:
+    """Reduced same-family config: small widths/layers/experts/vocab,
+    runnable on CPU for one forward/train step."""
+    cfg = get_config(arch)
+    pat_len = len(cfg.block_pattern)
+    n_layers = max(2 * pat_len, pat_len + cfg.n_layers % pat_len)
+    upd = dict(
+        n_layers=n_layers,
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 2) or 2,
+        head_dim=32,
+        d_ff=256,
+        vocab_size=512,
+        n_experts=8 if cfg.n_experts else 0,
+        experts_per_token=min(cfg.experts_per_token, 2),
+        capacity_factor=4.0,  # avoid drops in tiny smoke batches
+        rnn_width=128 if cfg.rnn_width else None,
+        ssm_state=16 if cfg.ssm_state else 0,
+        ssm_headdim=32 if cfg.ssm_state else 64,
+        ssm_chunk=8,
+        n_enc_layers=2 if cfg.n_enc_layers else 0,
+        n_frontend_tokens=16 if cfg.n_frontend_tokens else 0,
+        sliding_window=16 if cfg.sliding_window else None,
+        remat="none",
+    )
+    return dataclasses.replace(cfg, **upd)

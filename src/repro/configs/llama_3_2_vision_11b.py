@@ -1,0 +1,22 @@
+"""Llama-3.2-Vision-11B [hf:meta-llama/Llama-3.2-11B-Vision; unverified].
+
+40L text backbone d_model=4096 32H (GQA kv=8) d_ff=14336, vocab 128256,
+cross-attention image layers every 5th layer: 8 * (attn x4, cross) = 40.
+Vision frontend is a STUB: input_specs provides projected patch
+embeddings (B, M, d_model).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-11b",
+    family="vlm",
+    n_layers=40,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab_size=128256,
+    block_pattern=("attn", "attn", "attn", "attn", "cross"),
+    n_frontend_tokens=1024,
+    sharding_profile="fsdp_tp",
+)

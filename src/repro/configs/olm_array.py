@@ -1,0 +1,9 @@
+"""The paper's own configuration: pipelined online-multiplier inner-product
+arrays at n = 8/16/24/32 bits (delta=3, t=2, Eq.8 truncation, G=2 tail)."""
+from repro.core.precision import OnlinePrecision
+
+ARRAY_PRECISIONS = {n: OnlinePrecision(n=n) for n in (8, 16, 24, 32)}
+FULL_PRECISIONS = {
+    n: OnlinePrecision(n=n, truncated=False, tail_gating=False)
+    for n in (8, 16, 24, 32)
+}

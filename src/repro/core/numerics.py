@@ -1,0 +1,48 @@
+"""DotEngine: pluggable matmul numerics for the whole model stack.
+
+Modes:
+  native  — dot in the model's compute dtype (bf16 on TPU); baseline.
+  tpmm16 / tpmm8 — the paper's truncated-precision inner products
+    (kernels/tpmm): operands decomposed into digit planes, plane pairs
+    beyond the significance cutoff never computed. n_bits = 16 / 8.
+
+The engine is threaded through every dense, attention and MoE matmul, so
+the paper's technique is a first-class numerics choice per model config,
+not a bolted-on demo. einsum falls back to native numerics for the
+attention contractions (their operands are activations on both sides;
+tpmm targets the weight-bearing GEMMs, which dominate FLOPs).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["DotEngine"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DotEngine:
+    mode: str = "native"          # native | tpmm16 | tpmm8
+    interpret: bool = True        # Pallas interpret mode (CPU container)
+    use_pallas: bool = False      # jnp oracle by default inside big models
+
+    def dot(self, x: jax.Array, w: jax.Array) -> jax.Array:
+        """x (..., K) @ w (K, N) -> (..., N). Weights (stored in the param
+        dtype, fp32 master copies under training) are cast to the
+        activation compute dtype at use."""
+        w = w.astype(x.dtype)
+        if self.mode == "native":
+            return jnp.einsum("...k,kn->...n", x, w)
+        n_bits = 16 if self.mode == "tpmm16" else 8
+        from repro.kernels.tpmm.ops import tpmm
+        lead = x.shape[:-1]
+        K = x.shape[-1]
+        x2 = x.reshape(-1, K)
+        out = tpmm(x2, w.astype(jnp.float32), n_bits=n_bits,
+                   use_pallas=self.use_pallas, interpret=self.interpret)
+        return out.reshape(*lead, w.shape[-1]).astype(x.dtype)
+
+    def einsum(self, spec: str, a: jax.Array, b: jax.Array) -> jax.Array:
+        return jnp.einsum(spec, a, b)

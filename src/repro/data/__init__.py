@@ -1,0 +1,1 @@
+from .synthetic import SyntheticLMDataset, make_batches

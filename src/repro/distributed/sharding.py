@@ -1,0 +1,229 @@
+"""Sharding rules: param/activation/cache PartitionSpecs per profile.
+
+Profiles (cfg.sharding_profile):
+  tp       — weights sharded over the `model` axis only (Megatron TP);
+             batch over ('pod','data'). For models that fit replicated
+             per data shard (<= ~10B params).
+  fsdp_tp  — additionally shard the non-TP weight axis over `data`
+             (ZeRO-3): per-layer all-gathers inserted by GSPMD. Required
+             for the >= 30B configs (fp32 master + Adam state is 12 B/param).
+
+MoE (cfg.moe_sharding):
+  ep — expert axis over `model` (E % model == 0, e.g. qwen3 128/16=8);
+  tp — d_ff over `model` inside each expert (mixtral: 8 experts < 16).
+
+Small attention-free models (mamba2) replicate weights and spread the
+batch over BOTH axes — TP buys nothing at 130M, DP over 256 chips does.
+
+Rules are path-based over the param pytree, so they apply uniformly to
+scanned (stacked (G, ...) leaves) and remainder blocks.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+__all__ = ["Sharder"]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+class Sharder:
+    def __init__(self, mesh: Mesh, cfg: ModelConfig):
+        self.mesh = mesh
+        self.cfg = cfg
+        self.dp: Tuple[str, ...] = tuple(
+            a for a in ("pod", "data") if a in mesh.axis_names)
+        self.model_size = mesh.shape["model"]
+        self.data_size = int(np.prod([mesh.shape[a] for a in self.dp]))
+        self.fsdp = cfg.sharding_profile == "fsdp_tp"
+        # mamba2-style tiny models: replicate weights, batch over all axes
+        self.replicated = cfg.family == "ssm"
+        self._batch_ax: Optional[Tuple[str, ...]] = None
+
+    def set_batch(self, global_batch: int) -> None:
+        """Pick the batch-sharding axes as the longest prefix of the DP
+        axes (+ model for replicated-weight models) that divides the
+        global batch — small serving batches degrade gracefully to fewer
+        axes instead of failing divisibility."""
+        axes = self.dp + (("model",) if self.replicated else ())
+        chosen: Tuple[str, ...] = ()
+        size = 1
+        for a in axes:
+            s = self.mesh.shape[a]
+            if global_batch % (size * s) == 0:
+                chosen = chosen + (a,)
+                size *= s
+        self._batch_ax = chosen
+
+    # -------------- helpers --------------
+    def _fs(self) -> Optional[str]:
+        """The FSDP axis for the non-TP weight dimension ('data' or None).
+        Only 'data' (not 'pod') is used so a pod holds a full copy and
+        cross-pod traffic stays gradient-only."""
+        return "data" if (self.fsdp and "data" in self.mesh.axis_names) else None
+
+    def named(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    # -------------- params --------------
+    def param_spec(self, path: str, shape: Tuple[int, ...]) -> P:
+        cfg = self.cfg
+        fs = self._fs()
+        # scanned leaves carry a leading (G,) axis; `pad` right-aligns the
+        # rule so it applies to stacked and unstacked leaves alike
+        def pad(spec_dims):
+            extra = len(shape) - len(spec_dims)
+            return P(*([None] * extra + list(spec_dims)))
+
+        if self.replicated:
+            return P(*([None] * len(shape)))
+        leaf = path.split("/")[-1]
+        parent = path.split("/")[-2] if "/" in path else ""
+
+        # embeddings / unembedding: vocab over model, d over fsdp axis
+        if leaf == "table":
+            return pad(["model", fs])
+        # router: small, replicated
+        if leaf == "router":
+            return pad([None, None])
+        # MoE experts (E, d, f) / (E, f, d) — discriminated by path, the
+        # dense MLP uses the same leaf names
+        if parent == "moe" or "/moe/" in path:
+            if cfg.moe_sharding == "ep" and cfg.n_experts % self.model_size == 0:
+                # EP: experts over `model`, FSDP over `data` on d_model.
+                # (Replicating expert master+opt over data was tried and
+                # refuted: 94 layers x 8 experts x 18.9M x 12 B = 170 GiB
+                # per device — §Perf iteration 4.)
+                return pad(["model", fs, None])
+            return pad([None, fs, "model"]) if leaf in ("wg", "wu") else \
+                pad([None, "model", fs])
+        # attention projections
+        if leaf in ("wq", "wk", "wv"):
+            return pad([fs, "model"])
+        if leaf == "wo" and parent in ("attn", "cross", "rec"):
+            return pad(["model", fs])
+        if leaf in ("bq", "bk", "bv"):
+            return pad(["model"])
+        # dense MLP
+        if leaf in ("wg", "wu"):
+            return pad([fs, "model"])
+        if leaf == "wd":
+            return pad(["model", fs])
+        # RG-LRU
+        if leaf in ("wx", "wy"):
+            return pad([fs, "model"])
+        if leaf in ("wa", "wi"):
+            return pad([None, "model"])
+        if leaf in ("ba", "bi", "lam"):
+            return pad(["model"])
+        if leaf == "conv":
+            return pad([None, "model"])
+        # SSD (only reached when not `replicated`, e.g. scaled-up ssm)
+        if leaf == "win":
+            return pad([fs, "model"])
+        if leaf == "wout":
+            return pad(["model", fs])
+        if leaf in ("a_log", "dt_bias", "d_skip", "norm"):
+            return pad([None])
+        # norms and anything residual-width
+        if leaf == "scale":
+            return pad([None])
+        return P(*([None] * len(shape)))
+
+    def param_specs(self, params) -> Any:
+        return jax.tree_util.tree_map_with_path(
+            lambda path, leaf: self.param_spec(_path_str(path), leaf.shape),
+            params)
+
+    # -------------- activations / batch --------------
+    def batch_spec(self) -> P:
+        """tokens (B, S): batch over DP axes (and model too for replicated
+        tiny models, using every chip for DP)."""
+        if self._batch_ax is not None:
+            return P(self._batch_ax or None, None)
+        if self.replicated:
+            return P(self.dp + ("model",), None)
+        return P(self.dp, None)
+
+    def batch_specs(self, batch_keys) -> Dict[str, P]:
+        out = {}
+        for k in batch_keys:
+            if k in ("tokens", "mask"):
+                out[k] = self.batch_spec()
+            else:  # frontend embeddings (B, M, d)
+                b = self.batch_spec()
+                out[k] = P(b[0], None, None)
+        return out
+
+    def activation_spec(self, *, seq_sharded: bool = False) -> P:
+        """Residual stream (B, S, d)."""
+        bd = self.batch_spec()[0]
+        if seq_sharded:
+            return P(bd, "model", None)
+        return P(bd, None, None)
+
+    def vocab_axis(self) -> Optional[str]:
+        """Axis for the vocab dim of logits; None when 'model' already
+        carries the batch (replicated-weight profile)."""
+        bd = self.batch_spec()[0]
+        names = (bd,) if isinstance(bd, str) else tuple(bd or ())
+        return None if (self.replicated or "model" in names) else "model"
+
+    def logits_spec(self) -> P:
+        return P(self.batch_spec()[0], None, self.vocab_axis())
+
+    # -------------- caches --------------
+    def cache_spec(self, path: str, shape: Tuple[int, ...]) -> P:
+        """KV / recurrent cache leaves. Scanned leaves have a leading (G,).
+        kv: (..., B, T, Hkv, D); rec h: (..., B, w); ssm h: (..., B,H,P,N)."""
+        bd = self.batch_spec()[0]
+        leaf = path.split("/")[-1]
+        def pad(dims):
+            extra = len(shape) - len(dims)
+            return P(*([None] * extra + list(dims)))
+        if leaf == "len":
+            return pad([])
+        if self.replicated:
+            if leaf in ("k", "v"):
+                return pad([bd, None, None, None])
+            if leaf == "h":
+                return pad([bd, None, None, None]) if len(shape) >= 4 else pad([bd, None])
+            if leaf == "conv":
+                return pad([bd, None, None])
+        if leaf in ("k", "v"):
+            # Prefer sharding kv heads over `model`; when the head count
+            # does not divide (GQA kv < mesh), shard the cache LENGTH axis
+            # instead — GSPMD partitions the softmax/contraction reductions
+            # into the partial-softmax combine (all-reduce of (B,H) stats),
+            # keeping the decode cache at 1/model_size per device.
+            if self.cfg.n_kv_heads % self.model_size == 0:
+                return pad([bd, None, "model", None])
+            return pad([bd, "model", None, None])
+        if leaf == "h":
+            if len(shape) >= 4:  # ssm state (..., B, H, P, N)
+                return pad([bd, None, None, None])
+            return pad([bd, "model"])  # rg-lru (..., B, w)
+        if leaf == "conv":
+            return pad([bd, None, "model"])
+        return P(*([None] * len(shape)))
+
+    def cache_specs(self, cache) -> Any:
+        return jax.tree_util.tree_map_with_path(
+            lambda path, leaf: self.cache_spec(_path_str(path), leaf.shape),
+            cache)

@@ -1,0 +1,209 @@
+"""Distributed train / prefill / decode step builders (pjit).
+
+build_train_step: loss + grad + AdamW update, with
+  * microbatched gradient accumulation (lax.scan) — XLA overlaps the
+    microbatch-k gradient reduce-scatter with microbatch-(k+1) compute,
+    the software-pipelining analogue of the paper's overlapped online
+    operators;
+  * optional int8 error-feedback gradient compression before the DP
+    reduction (cross-pod DCN traffic);
+  * sharding constraints on the residual stream (optional sequence
+    sharding, cuts activation memory by the model-axis size).
+
+All builders return (jitted_fn, in_shardings, out_shardings) so the
+dry-run can .lower()/.compile() against ShapeDtypeStructs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.model import Model, lm_loss
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.compression import ef_compress_tree
+from repro.optim.schedule import cosine_schedule
+from .sharding import Sharder
+
+__all__ = ["TrainState", "build_train_step", "build_prefill_step",
+           "build_decode_step", "init_train_state"]
+
+
+def init_train_state(model: Model, key) -> Dict[str, Any]:
+    params = model.init(key)
+    return {
+        "params": params,
+        "opt": adamw_init(params),
+        "ef": None,  # error-feedback state, created on first compressed step
+    }
+
+
+def train_state_specs(sharder: Sharder, state) -> Any:
+    pspecs = sharder.param_specs(state["params"])
+    return {
+        "params": pspecs,
+        "opt": {
+            "m": pspecs,
+            "v": pspecs,
+            "step": P(),
+        },
+        "ef": None if state["ef"] is None else pspecs,
+    }
+
+
+def build_train_step(
+    model: Model,
+    sharder: Sharder,
+    *,
+    opt_cfg: Optional[AdamWConfig] = None,
+    microbatches: int = 1,
+    compress_grads: bool = False,
+    schedule_total: int = 10_000,
+):
+    """Returns (train_step(state, batch) -> (state, metrics), specs)."""
+    cfg = model.cfg
+    opt_cfg = opt_cfg or AdamWConfig()
+    act_spec = sharder.activation_spec()
+
+    def _cast_params(params):
+        """Mixed precision with the cast pinned BEFORE the FSDP gathers:
+        convert f32 master weights to the compute dtype while still
+        sharded (with_sharding_constraint to the param spec), so GSPMD
+        all-gathers bf16 instead of f32 — halves ZeRO-3 gather bytes.
+        Grads flow back through the convert and arrive f32."""
+        leaves, td = jax.tree_util.tree_flatten(params)
+        specs = td.flatten_up_to(sharder.param_specs(params))
+        out = []
+        for p, spec in zip(leaves, specs):
+            if p.ndim >= 2 and p.dtype == jnp.float32:
+                p = jax.lax.with_sharding_constraint(
+                    p.astype(cfg.cdtype), spec)
+            out.append(p)
+        return td.unflatten(out)
+
+    def loss_fn(params, batch):
+        return lm_loss(model, _cast_params(params), batch)
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    def train_step(state, batch):
+        params = state["params"]
+        if microbatches > 1:
+            def mb(batch_slice):
+                return grads_of(params, batch_slice)
+
+            bspec = sharder.batch_spec()
+
+            def split(x):
+                # (B, ...) -> (mb, B/mb, ...) keeping the ORIGINAL batch
+                # sharding on the B/mb axis: reshape to (B/mb, mb) first so
+                # each microbatch takes a strided slice of rows — a direct
+                # (mb, B/mb) reshape interleaves shard blocks across both
+                # factors and GSPMD silently replicates the batch (observed:
+                # multi-pod gave zero speedup on the dense-FSDP archs).
+                B = x.shape[0]
+                y = x.reshape(B // microbatches, microbatches, *x.shape[1:])
+                y = jnp.swapaxes(y, 0, 1)
+                spec = P(None, bspec[0], *([None] * (y.ndim - 2)))
+                return jax.lax.with_sharding_constraint(y, spec)
+
+            mb_batches = {k: split(v) for k, v in batch.items()}
+
+            def scan_body(carry, mb_batch):
+                acc, loss_acc = carry
+                mb_batch = {
+                    k: jax.lax.with_sharding_constraint(
+                        v, P(bspec[0], *([None] * (v.ndim - 1))))
+                    for k, v in mb_batch.items()}
+                loss, metrics, grads = mb(mb_batch)
+                acc = jax.tree.map(jnp.add, acc, grads)
+                return (acc, loss_acc + loss), metrics
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), metrics = jax.lax.scan(
+                scan_body, (zero, jnp.zeros((), jnp.float32)), mb_batches)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss_sum / microbatches
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+        else:
+            loss, metrics, grads = grads_of(params, batch)
+
+        ef = state["ef"]
+        if compress_grads:
+            grads, ef = ef_compress_tree(grads, ef)
+
+        lr_scale = cosine_schedule(state["opt"]["step"], total=schedule_total)
+        new_params, new_opt, opt_metrics = adamw_update(
+            opt_cfg, grads, state["opt"], params, lr_scale)
+        metrics = {**metrics, **opt_metrics, "loss_total": loss}
+        return {"params": new_params, "opt": new_opt, "ef": ef}, metrics
+
+    return train_step
+
+
+def jit_train_step(model, sharder, state, batch_keys, **kw):
+    """pjit the train step with explicit in/out shardings."""
+    step = build_train_step(model, sharder, **kw)
+    sspecs = train_state_specs(sharder, state)
+    bspecs = sharder.batch_specs(batch_keys)
+    mspecs = None  # metrics replicated
+    return jax.jit(
+        step,
+        in_shardings=(sspecs, bspecs),
+        out_shardings=(sspecs, mspecs),
+        donate_argnums=(0,),
+    )
+
+
+def build_prefill_step(model: Model, sharder: Sharder):
+    def prefill(params, batch, cache):
+        return model.prefill(params, batch, cache)
+    return prefill
+
+
+def jit_prefill_step(model, sharder, params, batch_keys, cache):
+    pspecs = sharder.param_specs(params)
+    bspecs = sharder.batch_specs(batch_keys)
+    cspecs = sharder.cache_specs(cache)
+    lspec = P(sharder.batch_spec()[0], sharder.vocab_axis())
+    has_mem = model.cfg.family in ("encdec", "vlm")
+    mem_spec = P(sharder.batch_spec()[0], None, None) if has_mem else None
+    return jax.jit(
+        build_prefill_step(model, sharder),
+        in_shardings=(pspecs, bspecs, cspecs),
+        out_shardings=(lspec, cspecs, mem_spec),
+        donate_argnums=(2,),
+    )
+
+
+def build_decode_step(model: Model, sharder: Sharder):
+    def decode(params, token, pos, cache, memory=None):
+        return model.decode_step(params, token, pos, cache, memory)
+    return decode
+
+
+def jit_decode_step(model, sharder, params, cache, *, has_memory: bool):
+    pspecs = sharder.param_specs(params)
+    cspecs = sharder.cache_specs(cache)
+    bd = sharder.batch_spec()[0]
+    tok_spec = P(bd)
+    lspec = P(bd, sharder.vocab_axis())
+    mem_spec = P(bd, None, None) if has_memory else None
+    in_sh = (pspecs, tok_spec, tok_spec, cspecs) + ((mem_spec,) if has_memory else ())
+    fn = build_decode_step(model, sharder)
+    if not has_memory:
+        fn = functools.partial(fn, memory=None)
+        fn = lambda p, t, ps, c: build_decode_step(model, sharder)(p, t, ps, c, None)
+    return jax.jit(
+        fn,
+        in_shardings=in_sh,
+        out_shardings=(lspec, cspecs),
+        donate_argnums=(3,),
+    )

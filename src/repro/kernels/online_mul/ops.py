@@ -1,0 +1,84 @@
+"""Public jit'd wrappers for the batched online multiplier.
+
+`online_mul` picks the Pallas kernel when the configuration fits the int32
+datapath (see kernel.py) and falls back to the int64 jnp reference
+otherwise. `online_dot_planes` runs the multiplier across a (B, K) operand
+grid and accumulates the exact product integers — the PE-array inner
+product in one call.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import OnlinePrecision
+from .kernel import online_mul_pallas
+from .ref import online_mul_batch_ref, schedule_arrays
+
+__all__ = ["online_mul", "online_dot"]
+
+
+def _fits_int32(cfg: OnlinePrecision) -> bool:
+    return int(schedule_arrays(cfg).max()) + 3 <= 31
+
+
+def _decode_digits(z: jax.Array, n: int):
+    """Digits -> integer scaled 2^n (host-side int64, exact for n <= 62)."""
+    import numpy as np
+    w = (np.int64(1) << np.arange(n - 1, -1, -1, dtype=np.int64))
+    return np.asarray(z).astype(np.int64) @ w
+
+
+def online_mul(
+    x_digits: jax.Array,
+    y_digits: jax.Array,
+    cfg: OnlinePrecision,
+    *,
+    use_pallas: bool | None = None,
+    block_b: int = 1024,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Batched online multiply.
+
+    Returns (z_digits (B, n) int32 jax array, z_int (B,) host np.int64).
+    Dispatches to the Pallas kernel when the int32 datapath suffices (all
+    Eq.8-truncated configs up to n=32), else the int64 jnp reference.
+    """
+    B, n = x_digits.shape
+    assert cfg.n == n
+    if use_pallas is None:
+        use_pallas = _fits_int32(cfg)
+    if use_pallas and _fits_int32(cfg):
+        pad = (-B) % block_b
+        xp, yp = x_digits, y_digits
+        if pad:
+            xp = jnp.pad(xp, ((0, pad), (0, 0)))
+            yp = jnp.pad(yp, ((0, pad), (0, 0)))
+        z = online_mul_pallas(
+            xp, yp, n=cfg.n, delta=cfg.delta, t=cfg.t,
+            truncated=cfg.truncated, tail_gating=cfg.tail_gating,
+            tail_guard=cfg.tail_guard, block_b=block_b,
+            interpret=interpret)[:B]
+    else:
+        z, _ = online_mul_batch_ref(
+            x_digits, y_digits, n=cfg.n, delta=cfg.delta, t=cfg.t,
+            truncated=cfg.truncated, tail_gating=cfg.tail_gating,
+            tail_guard=cfg.tail_guard)
+    return z, _decode_digits(z, n)
+
+
+def online_dot(
+    x_digits: jax.Array,  # (B, K, n) operand digit grids
+    y_digits: jax.Array,
+    cfg: OnlinePrecision,
+    **kw,
+) -> jax.Array:
+    """Inner products over K pairs per batch row via the online multiplier;
+    returns (B,) host float64 dot values (products decoded at 2^-n output
+    granularity, matching the PE-array + adder-tree semantics up to the
+    documented 1-ulp product truncation)."""
+    import numpy as np
+    B, K, n = x_digits.shape
+    _, zint = online_mul(x_digits.reshape(B * K, n),
+                         y_digits.reshape(B * K, n), cfg, **kw)
+    return (zint.reshape(B, K).astype(np.float64) / (2.0 ** n)).sum(axis=1)

@@ -1,0 +1,114 @@
+"""Pure-jnp oracle for the batched online multiplier kernel.
+
+Vectorized (batch) digit recurrence in int64, bit-identical to the exact
+Python reference core.online_mul.online_multiply (property-tested). This is
+the `ref.py` oracle that the Pallas kernel is allclose-asserted against
+across shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.online_mul import working_precision
+from repro.core.precision import OnlinePrecision
+
+__all__ = ["schedule_arrays", "online_mul_batch_ref"]
+
+
+def schedule_arrays(cfg: OnlinePrecision) -> np.ndarray:
+    """Static T(j) schedule for j = -delta .. n-1, as an (n+delta,) array."""
+    return np.array(
+        [working_precision(cfg, j) for j in range(-cfg.delta, cfg.n)],
+        dtype=np.int32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("n", "delta", "t", "truncated",
+                                             "tail_gating", "tail_guard"))
+def online_mul_batch_ref(
+    x_digits: jax.Array,  # (B, n) int32 digits in {-1,0,1}
+    y_digits: jax.Array,  # (B, n)
+    *,
+    n: int,
+    delta: int = 3,
+    t: int = 2,
+    truncated: bool = True,
+    tail_gating: bool = True,
+    tail_guard: int = 2,
+) -> tuple[jax.Array, jax.Array]:
+    """Batched online multiplication.
+
+    Returns:
+      z_digits: (B, n) int32 output SD digits.
+      z_int:    (B,)  int64 product scaled by 2^n.
+    """
+    cfg = OnlinePrecision(n=n, delta=delta, t=t, truncated=truncated,
+                          tail_gating=tail_gating, tail_guard=tail_guard)
+    F = n + delta
+    if F + 3 > 31 and jax.dtypes.canonicalize_dtype(jnp.int64) != jnp.int64:
+        raise ValueError(
+            f"online_mul_batch_ref with n={n} needs int64 (F+3={F+3} bits); "
+            "enable x64 (jax.experimental.enable_x64) or use the Pallas "
+            "kernel, whose Eq.8-truncated datapath fits int32")
+    sched = jnp.asarray(schedule_arrays(cfg))  # (n+delta,)
+    B = x_digits.shape[0]
+    xd = x_digits.astype(jnp.int64)
+    yd = y_digits.astype(jnp.int64)
+
+    def floor_at(v, T):
+        drop = jnp.maximum(F - T, 0).astype(jnp.int64)
+        return (v >> drop) << drop
+
+    def body(s, carry):
+        X, Y, W, Z, zout = carry
+        j = s - delta
+        T = sched[s].astype(jnp.int64)
+        q = j + 1 + delta  # arriving digit position (1-indexed)
+        in_range = jnp.logical_and(q >= 1, q <= n)
+        col = jnp.clip(q - 1, 0, n - 1)
+        xn = jnp.where(in_range, jax.lax.dynamic_index_in_dim(
+            xd, col, axis=1, keepdims=False), 0)
+        yn = jnp.where(in_range, jax.lax.dynamic_index_in_dim(
+            yd, col, axis=1, keepdims=False), 0)
+        # Register-slice gating: the arriving digit's own bit is stored only
+        # while its slice is live (q <= T); it always drives the muxes.
+        wq = jnp.where(
+            jnp.asarray(q, jnp.int64) <= T,
+            jnp.int64(1) << jnp.maximum(F - q, 0).astype(jnp.int64),
+            jnp.int64(0),
+        )
+        Yf = Y + yn * wq
+        term = X * yn + Yf * xn
+        append = floor_at(term >> delta, T)
+        Xf = X + xn * wq
+        Xn = floor_at(Xf, T)
+        Yn = floor_at(Yf, T)
+        V = 2 * W + append
+        vq = V >> (F - t)
+        zj = jnp.where(vq >= 2, 1, jnp.where(vq >= -2, 0, -1)).astype(jnp.int64)
+        is_out = j >= 0
+        zj = jnp.where(is_out, zj, 0)
+        Zn = jnp.where(is_out, 2 * Z + zj, Z)
+        Wn = floor_at(jnp.where(is_out, V - (zj << F), V), T)
+        zcol = jnp.clip(j, 0, n - 1)
+        zout = jnp.where(
+            is_out,
+            jax.lax.dynamic_update_index_in_dim(
+                zout, zj.astype(jnp.int32), zcol, axis=1),
+            zout,
+        )
+        return Xn, Yn, Wn, Zn, zout
+
+    init = (
+        jnp.zeros((B,), jnp.int64),
+        jnp.zeros((B,), jnp.int64),
+        jnp.zeros((B,), jnp.int64),
+        jnp.zeros((B,), jnp.int64),
+        jnp.zeros((B, n), jnp.int32),
+    )
+    X, Y, W, Z, zout = jax.lax.fori_loop(0, n + delta, body, init)
+    return zout, Z

@@ -1,0 +1,67 @@
+"""Signed digit-plane decomposition for the truncated-precision matmul.
+
+Maps the paper's radix-2 MSDF digit representation onto MXU-friendly
+radix-2^b planes: a tensor row is scaled into (-1, 1) by a power-of-two
+scale, then split into D balanced base-2^b digits (MSD plane first), each
+an int8 plane. Exactly:
+
+    a = scale * sum_{d=0}^{D-1} plane_d * 2^(-b*(d+1)),   plane_d in [-B/2, B/2]
+
+with B = 2^b. Power-of-two scales keep the decomposition bit-exact, like
+the SD representation in the hardware design.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["plane_decompose", "plane_reconstruct"]
+
+
+@functools.partial(jax.jit, static_argnames=("num_planes", "plane_bits", "axis"))
+def plane_decompose(
+    a: jax.Array, *, num_planes: int, plane_bits: int = 4, axis: int = -1
+) -> tuple[jax.Array, jax.Array]:
+    """Decompose `a` (float) into signed int8 digit planes along new axis 0.
+
+    Returns:
+      planes: (D, *a.shape) int8, MSD plane first (balanced digits).
+      scale:  a.shape with `axis` reduced to 1; power-of-two, float32.
+    """
+    if plane_bits < 2 or plane_bits > 7:
+        raise ValueError("plane_bits must be in [2, 7] for int8 planes")
+    if plane_bits * num_planes > 30:
+        raise ValueError(
+            f"plane_bits*num_planes = {plane_bits * num_planes} overflows "
+            "the int32 quantizer scale (max 30); n_bits > 28 operand "
+            "significance exceeds float32 inputs' 24-bit mantissa anyway")
+    B = 1 << plane_bits
+    D = num_planes
+    amax = jnp.max(jnp.abs(a), axis=axis, keepdims=True)
+    # power-of-two scale; strictly > max so u in (-1, 1)
+    scale = jnp.exp2(jnp.ceil(jnp.log2(jnp.maximum(amax, 1e-30))) + 1.0)
+    scale = scale.astype(jnp.float32)
+    u = (a / scale).astype(jnp.float32)
+    v = jnp.round(u * (B ** D)).astype(jnp.int32)  # |v| <= B^D / 2
+    planes = []
+    for _ in range(D):
+        # Balanced digit extraction LSD-first, digits in [-B/2, B/2]
+        # (symmetric, like the SD digit set): round-to-nearest carry with
+        # ties toward zero so both extremes +-B/2 are representable and
+        # |v| <= B^D/2 never overflows (covered range is (B/2)*sum B^k).
+        q = jnp.sign(v) * ((jnp.abs(v) + B // 2 - 1) // B)
+        r = v - B * q
+        planes.append(r.astype(jnp.int8))
+        v = q
+    planes = jnp.stack(planes[::-1], axis=0)  # MSD first
+    return planes, scale
+
+
+@functools.partial(jax.jit, static_argnames=("plane_bits",))
+def plane_reconstruct(planes: jax.Array, scale: jax.Array, *, plane_bits: int = 4):
+    """Inverse of plane_decompose (float32)."""
+    D = planes.shape[0]
+    w = jnp.exp2(-plane_bits * jnp.arange(1, D + 1, dtype=jnp.float32))
+    return scale * jnp.tensordot(w, planes.astype(jnp.float32), axes=(0, 0))

@@ -1,0 +1,85 @@
+"""Pure-jnp oracle for the truncated-precision digit-plane matmul.
+
+Computes exactly what the Pallas kernel computes: integer plane-pair
+matmuls accumulated in int32, keeping only plane pairs whose total
+significance level L = da + db is below the Eq.8-derived cutoff, then one
+float32 scale-and-sum. Used for bitwise kernel validation; `tpmm_error`
+additionally bounds the truncation error against the exact float matmul.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import reduced_precision
+
+__all__ = ["kept_levels", "num_planes_for", "tpmm_ref"]
+
+
+def num_planes_for(n_bits: int, plane_bits: int) -> int:
+    """Planes needed to carry n_bits of operand significance."""
+    return -(-n_bits // plane_bits)
+
+
+def kept_levels(n_bits: int, plane_bits: int, *, mode: str = "nbit") -> int:
+    """Number of significance levels L = da+db kept in the product.
+
+    mode="full": all 2D-1 levels (the exact 2n-bit product).
+    mode="nbit": L <= D-1 — the paper's headline semantics transposed to
+      plane space: an n-bit-accurate product from the triangular half
+      (~(D^2+D)/2 of D^2) of the plane pairs; dropped levels contribute
+      < ~1 ulp at 2^-n. This is the default truncation.
+    mode="eq8": aggressive cutoff at the Eq. 8 residual width
+      p = ceil((2n + delta + t)/3): keep L <= ceil(p/b) - 1. Delivers
+      ~p-bit products at even fewer MXU ops; use when the consumer
+      tolerates reduced precision (e.g. early fwd layers).
+    """
+    D = num_planes_for(n_bits, plane_bits)
+    if mode == "full":
+        return 2 * D - 1
+    if mode == "nbit":
+        return D
+    if mode == "eq8":
+        p = reduced_precision(n_bits)
+        return min(max(-(-p // plane_bits) - 1, 1), 2 * D - 1)
+    raise ValueError(f"unknown tpmm mode {mode!r}")
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_bits", "plane_bits", "mode"))
+def tpmm_ref(
+    a_planes: jax.Array,  # (D, M, K) int8
+    b_planes: jax.Array,  # (D, K, N) int8
+    a_scale: jax.Array,   # (M, 1) float32
+    b_scale: jax.Array,   # (1, N) float32
+    *,
+    n_bits: int,
+    plane_bits: int = 4,
+    mode: str = "nbit",
+) -> jax.Array:
+    """Oracle matmul over digit planes; returns (M, N) float32."""
+    D = a_planes.shape[0]
+    Lmax = kept_levels(n_bits, plane_bits, mode=mode)
+    out = None
+    for L in range(min(Lmax, 2 * D - 1)):
+        acc = None
+        for da in range(min(L + 1, D)):
+            db = L - da
+            if db < 0 or db >= D:
+                continue
+            prod = jax.lax.dot_general(
+                a_planes[da].astype(jnp.int32),
+                b_planes[db].astype(jnp.int32),
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32,
+            )
+            acc = prod if acc is None else acc + prod
+        if acc is None:
+            continue
+        w = jnp.float32(2.0 ** (-plane_bits * (L + 2)))
+        term = acc.astype(jnp.float32) * w
+        out = term if out is None else out + term
+    assert out is not None
+    return out * a_scale * b_scale

@@ -1,0 +1,185 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count on first
+init, and the production meshes need 512 placeholder host devices. Do NOT
+replicate this flag anywhere else (smoke tests and benches must see the
+single real CPU device).
+
+For each cell this driver:
+  1. builds the model + sharder on the requested mesh,
+  2. jits the train/prefill/decode step with explicit in/out shardings,
+  3. .lower(**ShapeDtypeStructs).compile()   — no array allocation,
+  4. records compiled.memory_analysis() (proves it fits),
+     compiled.cost_analysis() (FLOPs/bytes for §Roofline), and the
+     collective-bytes breakdown parsed from the HLO (launch/roofline.py).
+
+Results land in results/dryrun/<arch>__<shape>__<mesh>.json and feed
+EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch internlm2_1_8b \
+      --shape train_4k [--multi-pod] [--all] [--out results/dryrun]
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, list_archs
+from repro.distributed.sharding import Sharder
+from repro.distributed.train import (init_train_state, jit_decode_step,
+                                     jit_prefill_step, jit_train_step,
+                                     train_state_specs)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import collective_bytes, roofline_terms
+from repro.launch.shapes import SHAPES, applicable, input_specs
+from repro.models.model import Model
+
+
+def _microbatches(cfg, case) -> int:
+    if case.kind != "train":
+        return 1
+    big = cfg.param_count() > 20e9
+    return 8 if big else 1
+
+
+def eval_shape_tree(fn, *args):
+    return jax.eval_shape(fn, *args)
+
+
+def _serve_params(params_sh):
+    """Serving runs bf16 weights (f32 masters are a training artifact);
+    halves serve-time weight memory and FSDP gather bytes."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, jnp.bfloat16 if s.dtype == jnp.float32 and
+            len(s.shape) >= 2 else s.dtype),
+        params_sh)
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool, out_dir: Path,
+             seq_sharding: bool = False) -> dict:
+    cfg = get_config(arch)
+    case = SHAPES[shape]
+    ok, why = applicable(cfg, shape)
+    rec = {"arch": arch, "shape": shape,
+           "mesh": "2x16x16" if multi_pod else "16x16", "skipped": not ok}
+    if not ok:
+        rec["skip_reason"] = why
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = Model(cfg)
+    sharder = Sharder(mesh, cfg)
+    sharder.set_batch(case.global_batch)
+
+    t0 = time.time()
+    specs = input_specs(cfg, shape)
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+    with jax.set_mesh(mesh):
+        if case.kind == "train":
+            state_sh = eval_shape_tree(
+                lambda k: init_train_state(model, k), key)
+            mb = _microbatches(cfg, case)
+            step = jit_train_step(model, sharder, state_sh,
+                                  tuple(specs["batch"].keys()),
+                                  microbatches=mb)
+            lowered = step.lower(state_sh, specs["batch"])
+        elif case.kind == "prefill":
+            params_sh = _serve_params(eval_shape_tree(model.init, key))
+            cache_sh = eval_shape_tree(
+                lambda: model.init_cache(case.global_batch, case.seq_len))
+            step = jit_prefill_step(model, sharder, params_sh,
+                                    tuple(specs["batch"].keys()), cache_sh)
+            lowered = step.lower(params_sh, specs["batch"], cache_sh)
+        else:  # decode
+            params_sh = _serve_params(eval_shape_tree(model.init, key))
+            cache_sh = eval_shape_tree(
+                lambda: model.init_cache(case.global_batch, case.seq_len))
+            has_mem = cfg.family in ("encdec", "vlm")
+            step = jit_decode_step(model, sharder, params_sh, cache_sh,
+                                   has_memory=has_mem)
+            args = (params_sh, specs["token"], specs["pos"], cache_sh)
+            if has_mem:
+                args = args + (specs["memory"],)
+            lowered = step.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    n_chips = 512 if multi_pod else 256
+    rec.update({
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "microbatches": _microbatches(cfg, case),
+        "bytes_per_device": {
+            "argument": getattr(mem, "argument_size_in_bytes", None),
+            "output": getattr(mem, "output_size_in_bytes", None),
+            "temp": getattr(mem, "temp_size_in_bytes", None),
+            "peak": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        "flops": cost.get("flops"),
+        "bytes_accessed": cost.get("bytes accessed"),
+        "collectives": coll,
+        "roofline": roofline_terms(cost, coll, n_chips=n_chips,
+                                   cfg=cfg, case=case),
+    })
+    out_dir.mkdir(parents=True, exist_ok=True)
+    fn = out_dir / f"{arch}__{shape}__{rec['mesh']}.json"
+    fn.write_text(json.dumps(rec, indent=1, default=str))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    archs = list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    out = Path(args.out)
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch} x {shape} x {'2x16x16' if mp else '16x16'}"
+                try:
+                    rec = run_cell(arch, shape, multi_pod=mp, out_dir=out)
+                    if rec.get("skipped"):
+                        print(f"SKIP {tag}: {rec['skip_reason']}")
+                        continue
+                    peak = rec["bytes_per_device"]["peak"]
+                    peak_gb = (peak or 0) / 2**30
+                    print(f"OK   {tag}: peak {peak_gb:.2f} GiB/dev, "
+                          f"flops {rec['flops']:.3g}, "
+                          f"coll {rec['collectives']['total_bytes']:.3g} B, "
+                          f"compile {rec['compile_s']}s")
+                except Exception as e:  # noqa
+                    failures += 1
+                    print(f"FAIL {tag}: {type(e).__name__}: {e}")
+                    traceback.print_exc(limit=3)
+    if failures:
+        raise SystemExit(f"{failures} dry-run cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,334 @@
+"""Roofline terms from the compiled dry-run artifact.
+
+Three terms per (arch, mesh), in seconds (TPU v5e per-chip constants):
+
+    compute    = HLO_FLOPs / (chips * 197e12 FLOP/s bf16)
+    memory     = HLO_bytes / (chips * 819e9 B/s HBM)
+    collective = collective_bytes / (chips * 50e9 B/s per ICI link)
+
+cost_analysis() reports per-device numbers under SPMD partitioning, so
+`flops` is already FLOPs-per-chip; we therefore divide the GLOBAL model
+FLOPs estimate by chips only in the MODEL_FLOPS ratio, not in the terms.
+collective_bytes is parsed from the compiled HLO text: operand bytes of
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12     # bf16 per chip
+HBM_BW = 819e9          # B/s per chip
+ICI_BW = 50e9           # B/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLL_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start|-done)?\(", re.I)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO result type like 'bf16[4,128]' or a tuple thereof."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_CALLSITE_RE = re.compile(
+    r"(?:condition|body|to_apply|branch_computations|called_computations|"
+    r"calls)=\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str) -> Dict[str, list]:
+    """Computation name -> body lines. A computation header is any
+    non-indented line ending in '{' (params may contain nested parens);
+    the name is the first %token (or the token after ENTRY)."""
+    comps: Dict[str, list] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        if line and not line[0].isspace() and line.rstrip().endswith("{"):
+            toks = line.strip().split()
+            name = toks[1] if toks[0] == "ENTRY" and len(toks) > 1 else toks[0]
+            cur = name.lstrip("%").split("(")[0].rstrip(",")
+            comps[cur] = []
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+def _line_collective(line):
+    m = _COLL_RE.search(line)
+    if not m or "-done(" in line:
+        return None
+    eq = line.find("=")
+    if eq < 0 or m.start() < eq:
+        return None
+    return m.group(1).lower(), _shape_bytes(line[eq + 1:m.start()])
+
+
+_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _comp_defs(lines) -> Dict[str, list]:
+    """name -> result dims (first array shape) for every op in a
+    computation body (used to recover dot operand shapes)."""
+    defs: Dict[str, list] = {}
+    for line in lines:
+        s = line.strip()
+        if not s.startswith("%") or "=" not in s:
+            continue
+        name = s[1:s.find("=")].strip().split(" ")[0]
+        m = _SHAPE_RE.search(s[s.find("=") + 1:][:160])
+        if m:
+            defs[name] = [int(x) for x in m.group(2).split(",") if x]
+    return defs
+
+
+def _line_dot_flops(line, defs: Dict[str, list]) -> float:
+    """2 * prod(result dims) * prod(lhs contracting dims) for dot ops.
+    Operand shapes come from the computation's def map (optimized HLO does
+    not inline operand types)."""
+    if " dot(" not in line:
+        return 0.0
+    eq = line.find("=")
+    d = line.find(" dot(")
+    if eq < 0 or d < eq:
+        return 0.0
+    res = _SHAPE_RE.search(line[eq + 1:d])
+    if not res:
+        return 0.0
+    rdims = [int(x) for x in res.group(2).split(",") if x]
+    ml = re.search(r"%([\w.\-]+)", line[d + 5:])
+    ldims = defs.get(ml.group(1), []) if ml else []
+    mc = _CDIMS_RE.search(line)
+    k = 1
+    if mc and ldims:
+        for c in (int(x) for x in mc.group(1).split(",") if x):
+            if c < len(ldims):
+                k *= ldims[c]
+    elif ldims:  # canonical dot: last lhs dim contracts
+        k = ldims[-1]
+    out = 1
+    for r in rdims:
+        out *= r
+    return 2.0 * out * k
+
+
+# Ops that materialize results to HBM on a TPU backend. The CPU text
+# leaves elementwise chains unfused (convert/broadcast/multiply/... would
+# dominate a naive count by ~4x) — on TPU those fuse into the consumer,
+# so the write-traffic proxy counts only genuinely-materializing ops.
+_COUNT_OPS = {
+    "fusion", "dot", "convolution", "reduce", "reduce-window", "scatter",
+    "gather", "dynamic-slice", "transpose",
+    "concatenate", "pad", "sort", "select-and-scatter", "custom-call",
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "rng", "rng-bit-generator", "cholesky",
+    "triangular-solve",
+    # NOT dynamic-update-slice: its result aliases operand 0 in-place on
+    # TPU (scan carries / KV-cache writes); the true write is the update
+    # slice, which is negligible next to the aliased buffer size.
+}
+
+
+def _line_result_bytes(line) -> float:
+    """Result bytes of materializing ops (HBM write-traffic proxy)."""
+    s = line.strip()
+    if not s.startswith("%") or "=" not in s:
+        return 0.0
+    rest = s[s.find("=") + 1:].strip()
+    par = rest.find("(")
+    if par <= 0:
+        return 0.0
+    sp = rest.rfind(" ", 0, par)
+    if sp <= 0:
+        return 0.0
+    opname = rest[sp + 1:par].lstrip("%").split(".")[0]
+    if opname not in _COUNT_OPS:
+        return 0.0
+    return _shape_bytes(rest[:sp])
+
+
+def _trip_count(while_line: str, comp_lines, comps) -> int:
+    """Trip count of a lax.scan-lowered while.
+
+    The loop bound is an s32 constant; after XLA's while-widening it is
+    hoisted into the carry tuple, so we trace the while's input tuple
+    operands (one copy-hop deep) for integer constants and take the
+    largest plausible one. Fallback: constants in the condition body.
+    """
+    defs = {}
+    for line in comp_lines:
+        s = line.strip()
+        if s.startswith("%") and "=" in s:
+            defs[s.split("=", 1)[0].strip().lstrip("%").split(" ")[0]] = s
+    m = re.search(r"while\(%?([\w.\-]+)\)", while_line)
+    cands = []
+    if m and m.group(1) in defs:
+        tup = defs[m.group(1)]
+        args = re.findall(r"%([\w.\-]+)", tup.split("(", 1)[-1])
+        for a in args:
+            d = defs.get(a, "")
+            if "copy" in d or "convert" in d:
+                inner = re.findall(r"%([\w.\-]+)", d.split("(", 1)[-1])
+                d = defs.get(inner[0], "") if inner else d
+            if "s32[]" in d or "u32[]" in d:
+                for c in _CONST_RE.findall(d):
+                    cands.append(int(c))
+    mcond = re.search(r"condition=%?([\w.\-]+)", while_line)
+    if mcond:
+        for line in comps.get(mcond.group(1), []):
+            for c in _CONST_RE.findall(line):
+                cands.append(int(c))
+    good = [c for c in cands if 2 <= c <= 1_000_000]
+    return max(good) if good else 1
+
+
+def hlo_walk(hlo_text: str) -> Dict[str, object]:
+    """Walk the HLO call graph from ENTRY, weighting ops inside while-loop
+    bodies by the loop trip count (lax.scan over layer groups / micro-
+    batches / flash chunks executes its body N times but appears once in
+    the text). Accumulates, trip-weighted and per-device:
+
+      * collective bytes per kind (result shapes, `-done` skipped),
+      * dot FLOPs (2*M*N*K from inline operand types),
+      * result bytes of every real op (HBM write-traffic proxy).
+    """
+    comps = _split_computations(hlo_text)
+
+    import functools
+
+    @functools.lru_cache(maxsize=None)
+    def comp_cost(name: str):
+        acc: Dict[str, float] = {}
+        cnt = 0
+        flops = 0.0
+        byts = 0.0
+        defs = _comp_defs(comps.get(name, ()))
+        for line in comps.get(name, ()):  # type: ignore[arg-type]
+            lc = _line_collective(line)
+            if lc:
+                acc[lc[0]] = acc.get(lc[0], 0.0) + lc[1]
+                cnt += 1
+            flops += _line_dot_flops(line, defs)
+            byts += _line_result_bytes(line)
+            m = _CALLSITE_RE.search(line)
+            if not m:
+                continue
+            if " while(" in line:
+                mbody = re.search(r"body=%?([\w.\-]+)", line)
+                trip = _trip_count(line, comps.get(name, []), comps)
+                if mbody:
+                    sub, sc, sf, sb = comp_cost(mbody.group(1))
+                    for k, v in sub.items():
+                        acc[k] = acc.get(k, 0.0) + trip * v
+                    cnt += trip * sc
+                    flops += trip * sf
+                    byts += trip * sb
+                continue
+            for callee in [c.strip().lstrip("%") for c in m.group(1).split(",")]:
+                if callee in comps and callee != name:
+                    sub, sc, sf, sb = comp_cost(callee)
+                    for k, v in sub.items():
+                        acc[k] = acc.get(k, 0.0) + v
+                    cnt += sc
+                    flops += sf
+                    byts += sb
+        return acc, cnt, flops, byts
+
+    entry = None
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.search(r"ENTRY\s+%?([\w.\-]+)", line)
+            entry = m.group(1) if m else None
+            break
+    if entry is None or entry not in comps:
+        acc: Dict[str, float] = {}
+        cnt = 0
+        flops = 0.0
+        byts = 0.0
+        all_lines = hlo_text.splitlines()
+        defs = _comp_defs(all_lines)
+        for line in all_lines:
+            lc = _line_collective(line)
+            if lc:
+                acc[lc[0]] = acc.get(lc[0], 0.0) + lc[1]
+                cnt += 1
+            flops += _line_dot_flops(line, defs)
+            byts += _line_result_bytes(line)
+    else:
+        acc, cnt, flops, byts = comp_cost(entry)
+    return {"per_kind": acc, "count": cnt,
+            "total_bytes": float(sum(acc.values())),
+            "dot_flops": flops, "result_bytes": byts}
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    return hlo_walk(hlo_text)
+
+
+def model_flops(cfg, case) -> float:
+    """6*N*D (dense) or 6*N_active*D (MoE) global training FLOPs; forward
+    only (2*N*D) for serving kinds."""
+    n_params = cfg.param_count()
+    if cfg.n_experts:
+        dense_share = n_params - cfg.n_layers * cfg.n_experts * 3 * cfg.d_model * cfg.d_ff
+        active = dense_share + cfg.n_layers * cfg.experts_per_token * 3 * cfg.d_model * cfg.d_ff
+    else:
+        active = n_params
+    tokens = case.global_batch * (case.seq_len if case.kind != "decode" else 1)
+    mult = 6.0 if case.kind == "train" else 2.0
+    return mult * active * tokens
+
+
+def roofline_terms(cost: Dict, coll: Dict, *, n_chips: int, cfg=None,
+                   case=None) -> Dict[str, float]:
+    """Three-term roofline, all in seconds.
+
+    cost_analysis() undercounts ops inside lax.scan bodies (counted once,
+    executed trip times), so the compute/memory terms use the trip-
+    weighted HLO walk (dot_flops / result_bytes), with cost_analysis kept
+    as the reported lower bound. The collective term divides by chips
+    because per-device HLO collective bytes move over each chip's own
+    links in parallel (per-device text == per-chip traffic).
+    """
+    ca_flops = float(cost.get("flops") or 0.0)
+    ca_bytes = float(cost.get("bytes accessed") or 0.0)
+    flops = max(ca_flops, float(coll.get("dot_flops") or 0.0))
+    byts = max(ca_bytes, float(coll.get("result_bytes") or 0.0))
+    cb = float(coll.get("total_bytes") or 0.0)
+    terms = {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": byts / HBM_BW,
+        "collective_s": cb / ICI_BW,
+        "n_chips": n_chips,
+        "hlo_dot_flops": flops,
+        "hlo_result_bytes": byts,
+        "cost_analysis_flops": ca_flops,
+        "cost_analysis_bytes": ca_bytes,
+    }
+    dom = max(("compute_s", "memory_s", "collective_s"),
+              key=lambda k: terms[k])
+    terms["dominant"] = dom
+    if cfg is not None and case is not None:
+        mf = model_flops(cfg, case)
+        terms["model_flops_global"] = mf
+        # per-device useful fraction of compiled compute
+        terms["useful_flops_ratio"] = (
+            mf / n_chips / flops if flops else None)
+    return terms

@@ -1,0 +1,88 @@
+"""Assigned input-shape sets and ShapeDtypeStruct stand-ins (no allocation).
+
+LM transformer shapes are seq_len x global_batch. decode_* / long_* lower
+`serve` steps (one new token against a seq_len cache), NOT train_step.
+long_500k needs sub-quadratic attention: it runs for the SSM/hybrid/SWA
+archs and is skipped for pure full-attention archs (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+__all__ = ["SHAPES", "ShapeCase", "applicable", "input_specs", "cells_for"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCase:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeCase] = {
+    "train_4k": ShapeCase("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCase("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCase("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCase("long_500k", 524_288, 1, "decode"),
+}
+
+# archs with bounded attention state (SWA window / recurrent) run long_500k
+LONG_OK_FAMILIES = ("ssm", "hybrid")
+
+
+def applicable(cfg: ModelConfig, shape: str) -> Tuple[bool, str]:
+    case = SHAPES[shape]
+    if case.name == "long_500k":
+        if cfg.family in LONG_OK_FAMILIES or cfg.sliding_window is not None:
+            return True, ""
+        return False, "full quadratic attention: 500k decode infeasible (skip noted in DESIGN.md)"
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def input_specs(cfg: ModelConfig, shape: str) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    train:   {tokens (B,S)}                        -> train_step batch
+    prefill: {tokens (B,S)}                        -> prefill batch
+    decode:  {token (B,), pos (B,)}                -> decode_step inputs
+    plus frontend stubs for encdec (frames) / vlm (patches).
+    """
+    case = SHAPES[shape]
+    B, S = case.global_batch, case.seq_len
+    out: Dict[str, Any] = {"case": case}
+    if case.kind in ("train", "prefill"):
+        batch = {"tokens": _sds((B, S), jnp.int32)}
+        if cfg.family == "encdec":
+            batch["frames"] = _sds((B, cfg.n_frontend_tokens, cfg.d_model),
+                                   jnp.float32)
+        if cfg.family == "vlm":
+            batch["patches"] = _sds((B, cfg.n_frontend_tokens, cfg.d_model),
+                                    jnp.float32)
+        out["batch"] = batch
+    else:
+        out["token"] = _sds((B,), jnp.int32)
+        out["pos"] = _sds((B,), jnp.int32)
+        if cfg.family in ("encdec", "vlm"):
+            out["memory"] = _sds((B, cfg.n_frontend_tokens, cfg.d_model),
+                                 jnp.dtype(cfg.compute_dtype))
+    return out
+
+
+def cells_for(cfg: ModelConfig):
+    """All applicable (shape_name, reason-if-skipped) for one arch."""
+    cells = []
+    for name in SHAPES:
+        ok, why = applicable(cfg, name)
+        cells.append((name, ok, why))
+    return cells

@@ -1,0 +1,154 @@
+"""Model facade: init / forward / prefill / decode for every family.
+
+The facade hides family differences behind four entry points used by the
+training loop, the serving engine and the dry-run:
+
+  init(key)                                  -> params
+  forward(params, batch)                     -> logits (B, S, V), aux
+  init_cache(batch, max_len)                 -> cache pytree
+  prefill(params, batch, cache)              -> (last_logits, cache)
+  decode_step(params, token, pos, cache, mem)-> (logits, cache)
+
+`batch` is a dict: tokens (B, S) int32 and, per family, stub frontend
+embeddings: "frames" (encdec) or "patches" (vlm) — (B, M, d_model) float.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.numerics import DotEngine
+from .config import ModelConfig
+from .layers import embed, embedding_init, rmsnorm, rmsnorm_init, unembed
+from .transformer import (stack_apply, stack_cache_init, stack_init)
+
+Params = Dict[str, Any]
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig, eng: Optional[DotEngine] = None):
+        self.cfg = cfg
+        self.eng = eng or DotEngine(
+            mode="native" if cfg.dot_mode == "native" else cfg.dot_mode)
+
+    # ---------------- init ----------------
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        ks = jax.random.split(key, 4)
+        params: Params = {
+            "embed": embedding_init(ks[0], cfg),
+            "blocks": stack_init(ks[1], cfg, cfg.block_pattern,
+                                 cfg.pattern_groups, cfg.remainder_blocks),
+            "final_norm": rmsnorm_init(cfg.d_model, cfg.pdtype),
+        }
+        if not cfg.tie_embeddings:
+            params["unembed"] = {
+                "table": (jax.random.normal(
+                    ks[2], (cfg.vocab_padded, cfg.d_model), jnp.float32)
+                    * 0.02).astype(cfg.pdtype)}
+        if cfg.n_enc_layers:
+            enc_cfg = self._encoder_cfg()
+            params["encoder"] = {
+                "blocks": stack_init(ks[3], enc_cfg, ("attn",),
+                                     cfg.n_enc_layers, ()),
+                "final_norm": rmsnorm_init(cfg.d_model, cfg.pdtype),
+            }
+        return params
+
+    def _encoder_cfg(self) -> ModelConfig:
+        import dataclasses
+        return dataclasses.replace(
+            self.cfg, block_pattern=("attn",), n_layers=self.cfg.n_enc_layers,
+            n_experts=0, experts_per_token=0, sliding_window=None,
+            mlp_type="gelu")
+
+    # ---------------- memory (frontend) ----------------
+    def _memory(self, params: Params, batch: Dict[str, jax.Array]):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            frames = batch["frames"].astype(cfg.cdtype)  # (B, M, d)
+            pos = jnp.broadcast_to(
+                jnp.arange(frames.shape[1])[None], frames.shape[:2])
+            enc_cfg = self._encoder_cfg()
+            h, _, _ = stack_apply(params["encoder"]["blocks"], enc_cfg,
+                                  ("attn",), frames, pos, self.eng,
+                                  causal=False)
+            return rmsnorm(params["encoder"]["final_norm"], h, cfg.norm_eps)
+        if cfg.family == "vlm":
+            return batch["patches"].astype(cfg.cdtype)
+        return None
+
+    # ---------------- full-sequence forward (train / eval) ----------------
+    def forward(self, params: Params, batch: Dict[str, jax.Array]
+                ) -> Tuple[jax.Array, jax.Array]:
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        memory = self._memory(params, batch)
+        x = embed(params["embed"], tokens, cfg)
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        x, _, aux = stack_apply(params["blocks"], cfg, cfg.block_pattern,
+                                x, pos, self.eng, memory=memory)
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        emb = params["embed"] if cfg.tie_embeddings else params["unembed"]
+        logits = unembed(emb, x, cfg, self.eng)
+        return logits.astype(jnp.float32), aux
+
+    # ---------------- KV / recurrent caches ----------------
+    def init_cache(self, batch: int, max_len: int) -> Params:
+        cfg = self.cfg
+        return stack_cache_init(cfg, cfg.block_pattern, cfg.pattern_groups,
+                                cfg.remainder_blocks, batch, max_len)
+
+    def prefill(self, params: Params, batch: Dict[str, jax.Array],
+                cache: Params) -> Tuple[jax.Array, Params, Optional[jax.Array]]:
+        """Process the prompt; returns (last-position logits, cache, memory)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        memory = self._memory(params, batch)
+        x = embed(params["embed"], tokens, cfg)
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        x, cache, _ = stack_apply(params["blocks"], cfg, cfg.block_pattern,
+                                  x, pos, self.eng, caches=cache,
+                                  memory=memory)
+        x = rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+        emb = params["embed"] if cfg.tie_embeddings else params["unembed"]
+        logits = unembed(emb, x, cfg, self.eng)
+        return logits[:, 0].astype(jnp.float32), cache, memory
+
+    def decode_step(self, params: Params, token: jax.Array, pos: jax.Array,
+                    cache: Params, memory: Optional[jax.Array] = None
+                    ) -> Tuple[jax.Array, Params]:
+        """token (B,) int32, pos (B,) absolute position of `token`."""
+        cfg = self.cfg
+        x = embed(params["embed"], token[:, None], cfg)
+        x, cache, _ = stack_apply(params["blocks"], cfg, cfg.block_pattern,
+                                  x, pos[:, None], self.eng, caches=cache,
+                                  memory=memory)
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        emb = params["embed"] if cfg.tie_embeddings else params["unembed"]
+        logits = unembed(emb, x, cfg, self.eng)
+        return logits[:, 0].astype(jnp.float32), cache
+
+
+def lm_loss(model: Model, params: Params, batch: Dict[str, jax.Array],
+            *, aux_weight: float = 0.01) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Causal LM loss: predict tokens[t+1] from tokens[<=t]."""
+    logits, aux = model.forward(params, batch)
+    targets = batch["tokens"][:, 1:]
+    logits = logits[:, :-1]
+    mask = batch.get("mask")
+    mask = mask[:, 1:].astype(jnp.float32) if mask is not None else \
+        jnp.ones_like(targets, jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = nll.sum() / denom
+    total = loss + aux_weight * aux
+    return total, {"loss": loss, "aux": aux,
+                   "ppl_proxy": jnp.exp(jnp.minimum(loss, 20.0))}

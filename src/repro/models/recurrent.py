@@ -1,0 +1,251 @@
+"""Recurrent blocks: RG-LRU (RecurrentGemma/Griffin) and Mamba2 SSD.
+
+Both are attention-free sequence mixers with O(1) decode state, which is
+what makes the long_500k decode shape feasible for these families.
+
+RG-LRU (arXiv:2402.19427):
+    r_t = sigmoid(W_a x_t + b_a)            recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)            input gate
+    a_t = a^(c * r_t)      (a = sigmoid(Lambda), c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+computed with an associative scan over (a, b) pairs in train/prefill and a
+single fused step in decode.
+
+Mamba2 SSD (arXiv:2405.21060) chunked algorithm: intra-chunk quadratic
+term + inter-chunk recurrent state passing (matmul-dominated, which is why
+the paper's truncated-precision inner products still apply here).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.numerics import DotEngine
+from .config import ModelConfig
+from .layers import dense_init
+
+Params = Dict[str, Any]
+
+RGLRU_C = 8.0
+
+
+# --------------------------------------------------------------------------
+# RG-LRU block (Griffin recurrent block: conv1d + gated linear recurrence)
+# --------------------------------------------------------------------------
+
+def rglru_init(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    w = cfg.rnn_width or d
+    ks = jax.random.split(key, 7)
+    # Lambda init so a = sigmoid(L)^c is in ~(0.9, 0.999)
+    lam = jax.random.uniform(ks[0], (w,), jnp.float32, 2.0, 6.0)
+    return {
+        "wx": dense_init(ks[1], d, w, cfg.pdtype),     # recurrence branch
+        "wy": dense_init(ks[2], d, w, cfg.pdtype),     # gate branch
+        "conv": (jax.random.normal(ks[3], (cfg.conv_width, w), jnp.float32)
+                 * 0.1).astype(cfg.pdtype),
+        "wa": dense_init(ks[4], w, w, cfg.pdtype),
+        "ba": jnp.zeros((w,), cfg.pdtype),
+        "wi": dense_init(ks[5], w, w, cfg.pdtype),
+        "bi": jnp.zeros((w,), cfg.pdtype),
+        "lam": lam,
+        "wo": dense_init(ks[6], w, d, cfg.pdtype),
+    }
+
+
+def _causal_conv(x: jax.Array, kernel: jax.Array,
+                 state: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv. x (B,S,w), kernel (K,w). Returns (y, new state
+    (B,K-1,w)) so decode carries the last K-1 inputs."""
+    K = kernel.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * kernel[i].astype(x.dtype)[None, None]
+            for i in range(K))
+    return y, xp[:, -(K - 1):, :]
+
+
+def _rglru_coeffs(p, u, x_dtype):
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", u, p["wa"].astype(u.dtype))
+                       .astype(jnp.float32) + p["ba"].astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", u, p["wi"].astype(u.dtype))
+                       .astype(jnp.float32) + p["bi"].astype(jnp.float32))
+    log_a = RGLRU_C * r * jax.nn.log_sigmoid(p["lam"])[None, None]
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * u.astype(jnp.float32))
+    return a, b
+
+
+def rglru_apply(p: Params, cfg: ModelConfig, x: jax.Array, eng: DotEngine,
+                state: Optional[Dict[str, jax.Array]] = None
+                ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """x (B,S,d). state = {"h": (B,w), "conv": (B,K-1,w)} for decode."""
+    B, S, _ = x.shape
+    u = eng.dot(x, p["wx"])                           # (B,S,w)
+    gate = jax.nn.gelu(eng.dot(x, p["wy"]).astype(jnp.float32))
+    conv_state = state["conv"] if state is not None else None
+    u, new_conv = _causal_conv(u, p["conv"], conv_state)
+    a, b = _rglru_coeffs(p, u, x.dtype)
+
+    if state is not None and S == 1:
+        h = a[:, 0] * state["h"] + b[:, 0]            # single decode step
+        new_state = {"h": h, "conv": new_conv}
+        h = h[:, None]
+    else:
+        # parallel associative scan: h_t = a_t h_{t-1} + b_t, from h0
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, a2 * b1 + b2
+        a_run, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+        if state is not None:                          # prefill from state
+            h = h + a_run * state["h"][:, None]
+        new_state = None if state is None else \
+            {"h": h[:, -1], "conv": new_conv}
+    y = (h.astype(x.dtype) * gate.astype(x.dtype))
+    return eng.dot(y, p["wo"]), new_state
+
+
+def rglru_state_init(cfg: ModelConfig, batch: int) -> Dict[str, jax.Array]:
+    w = cfg.rnn_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), jnp.float32),
+    }
+
+
+# --------------------------------------------------------------------------
+# Mamba2 / SSD block
+# --------------------------------------------------------------------------
+
+def ssd_init(key, cfg: ModelConfig) -> Params:
+    d, din, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads
+    ks = jax.random.split(key, 5)
+    return {
+        "win": dense_init(ks[0], d, 2 * din + 2 * N + H, cfg.pdtype),
+        "conv": (jax.random.normal(ks[1], (cfg.conv_width, din + 2 * N), jnp.float32)
+                 * 0.1).astype(cfg.pdtype),
+        "a_log": jnp.log(jax.random.uniform(ks[2], (H,), jnp.float32, 1.0, 16.0)),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "norm": jnp.ones((din,), cfg.pdtype),
+        "wout": dense_init(ks[3], din, d, cfg.pdtype),
+    }
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x (..., L) -> (..., L, L) lower-triangular segment sums."""
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), 0)
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, chunk: int, h0=None):
+    """SSD forward: xh (B,S,H,P), dt (B,S,H) >=0, A (H,) <0 decay rates,
+    Bm/Cm (B,S,N), optional initial state h0 (B,H,P,N).
+    Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    Bsz, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    nc = S // chunk
+    xc = xh.reshape(Bsz, nc, chunk, H, P)
+    dtc = dt.reshape(Bsz, nc, chunk, H)
+    Bc = Bm.reshape(Bsz, nc, chunk, N)
+    Cc = Cm.reshape(Bsz, nc, chunk, N)
+    dA = dtc * A[None, None, None]                    # (B,nc,L,H) (negative)
+    dA = jnp.moveaxis(dA, -1, 2)                      # (B,nc,H,L)
+
+    # intra-chunk (diagonal blocks)
+    Lmat = jnp.exp(_segsum(dA))                       # (B,nc,H,L,L)
+    scores = jnp.einsum("bcln,bcsn->bcls", Cc, Bc)    # (B,nc,L,S=L)
+    y_diag = jnp.einsum("bchls,bcls,bcsh,bcshp->bclhp",
+                        Lmat, scores, dtc, xc)
+
+    # chunk-final states
+    decay_to_end = jnp.exp(jnp.cumsum(dA[..., ::-1], axis=-1)[..., ::-1]
+                           - dA)                      # (B,nc,H,L): prod_{>l}
+    states = jnp.einsum("bchl,bclh,bcln,bclhp->bchpn",
+                        decay_to_end, dtc, Bc, xc)    # (B,nc,H,P,N)
+
+    # inter-chunk recurrence over chunk index
+    chunk_decay = jnp.exp(jnp.sum(dA, axis=-1))       # (B,nc,H)
+
+    def scan_fn(h, inp):
+        st, dec = inp
+        h_new = h * dec[..., None, None] + st
+        return h_new, h
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    hT, h_prev = jax.lax.scan(
+        scan_fn, h0,
+        (jnp.moveaxis(states, 1, 0).astype(jnp.float32),
+         jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)               # state entering chunk
+
+    # contribution of previous state to each position
+    decay_in = jnp.exp(jnp.cumsum(dA, axis=-1))       # (B,nc,H,L)
+    y_off = jnp.einsum("bcln,bchl,bchpn->bclhp",
+                       Cc, decay_in, h_prev.astype(Cc.dtype))
+    y = (y_diag + y_off).reshape(Bsz, S, H, P)
+    return y, hT
+
+
+def ssd_apply(p: Params, cfg: ModelConfig, x: jax.Array, eng: DotEngine,
+              state: Optional[Dict[str, jax.Array]] = None
+              ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """x (B,S,d). state = {"h": (B,H,P,N), "conv": (B,K-1,din+2N)}."""
+    B, S, d = x.shape
+    din, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+    zxbcdt = eng.dot(x, p["win"])
+    z, xin, Bm, Cm, dt = jnp.split(
+        zxbcdt, [din, 2 * din, 2 * din + N, 2 * din + 2 * N], axis=-1)
+    conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    conv_out, new_conv = _causal_conv(conv_in, p["conv"], conv_state)
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+    xin, Bm, Cm = jnp.split(conv_out, [din, din + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None])
+    A = -jnp.exp(p["a_log"])                          # (H,) negative rates
+    xh = xin.reshape(B, S, H, P)
+
+    if state is not None and S == 1:
+        # single-token recurrent update
+        dA = jnp.exp(dt[:, 0] * A[None])              # (B,H)
+        h = state["h"] * dA[..., None, None] + jnp.einsum(
+            "bh,bn,bhp->bhpn", dt[:, 0], Bm[:, 0].astype(jnp.float32),
+            xh[:, 0].astype(jnp.float32))
+        y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(jnp.float32), h)[:, None]
+        new_state = {"h": h, "conv": new_conv}
+    else:
+        # pad to a chunk multiple; padded steps get dt = 0 (identity decay,
+        # zero input) so the carried-out state is exact
+        pad = (-S) % cfg.ssm_chunk
+        xh_p = jnp.pad(xh.astype(jnp.float32), ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bp = jnp.pad(Bm.astype(jnp.float32), ((0, 0), (0, pad), (0, 0)))
+        Cp = jnp.pad(Cm.astype(jnp.float32), ((0, 0), (0, pad), (0, 0)))
+        h0 = state["h"] if state is not None else None
+        y, hT = ssd_chunked(xh_p, dt_p, A, Bp, Cp, cfg.ssm_chunk, h0=h0)
+        y = y[:, :S]
+        new_state = None if state is None else {"h": hT, "conv": new_conv}
+    y = y + xh.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(B, S, din)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    # grouped RMS norm
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = (y * jax.lax.rsqrt(var + cfg.norm_eps) * p["norm"].astype(jnp.float32))
+    out = eng.dot(y.astype(x.dtype), p["wout"])
+    return out, new_state
+
+
+def ssd_state_init(cfg: ModelConfig, batch: int) -> Dict[str, jax.Array]:
+    return {
+        "h": jnp.zeros((batch, cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state),
+                       jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1,
+                           cfg.d_inner + 2 * cfg.ssm_state), jnp.float32),
+    }

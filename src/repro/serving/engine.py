@@ -1,0 +1,146 @@
+"""Continuous-batching serving engine.
+
+A fixed pool of `slots` decode lanes shares one jitted decode step; a
+request queue feeds empty lanes. Prefill runs per-request (padded to the
+pool's prompt bucket) and writes that lane's slice of the batched KV
+cache; decode steps advance every active lane together. Finished lanes
+(EOS or max_tokens) are recycled immediately — the decode batch never
+drains waiting for stragglers, which is the serving-side analogue of the
+paper's pipeline never idling between vector elements (Table III).
+
+This is deliberately the simple slot-based continuous batching (vLLM-style
+paged KV is out of scope); the KV cache is a contiguous (B, T, H, D) ring
+per layer managed by the model's cache pytree.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+__all__ = ["Request", "ServeEngine"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # (P,) int32
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+    # filled by the engine:
+    output: List[int] = dataclasses.field(default_factory=list)
+    t_submit: float = 0.0
+    t_first: Optional[float] = None
+    t_done: Optional[float] = None
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, *, slots: int = 4,
+                 max_len: int = 512, greedy: bool = True):
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.greedy = greedy
+        self.cache = model.init_cache(slots, max_len)
+        self.active: Dict[int, Request] = {}       # slot -> request
+        self.pos = np.zeros((slots,), np.int32)
+        self.last_tok = np.zeros((slots,), np.int32)
+        self.queue: Deque[Request] = deque()
+        self.memory = None                          # encdec/vlm stub memory
+
+        self._decode = jax.jit(
+            lambda p, t, ps, c, m: model.decode_step(p, t, ps, c, m))
+
+    # ------------- client API -------------
+    def submit(self, req: Request):
+        req.t_submit = time.monotonic()
+        self.queue.append(req)
+
+    def run(self, *, max_steps: int = 10_000) -> List[Request]:
+        done: List[Request] = []
+        steps = 0
+        while (self.queue or self.active) and steps < max_steps:
+            self._fill_slots()
+            if not self.active:
+                break
+            self._decode_step(done)
+            steps += 1
+        return done
+
+    # ------------- internals -------------
+    def _fill_slots(self):
+        for slot in range(self.slots):
+            if slot in self.active or not self.queue:
+                continue
+            req = self.queue.popleft()
+            self._prefill_into(slot, req)
+            self.active[slot] = req
+
+    def _prefill_into(self, slot: int, req: Request):
+        """Single-request prefill into one lane: run the prompt through a
+        fresh single-row cache, then scatter it into the pool."""
+        P = len(req.prompt)
+        row_cache = self.model.init_cache(1, self.max_len)
+        batch = {"tokens": jnp.asarray(req.prompt[None, :], jnp.int32)}
+        logits, row_cache, _mem = self.model.prefill(
+            self.params, batch, row_cache)
+        tok = int(jnp.argmax(logits[0]))
+        req.output.append(tok)
+        req.t_first = time.monotonic()
+        self.last_tok[slot] = tok
+        self.pos[slot] = P
+
+        def put_row(pool, row):
+            # "len" scalars: decode masks by per-lane pos, keep the max
+            if pool.ndim == 0:
+                return jnp.maximum(pool, row)
+            # the batch axis is the unique axis where shapes differ
+            # (slots vs 1); scatter the row into that lane
+            diff = [i for i in range(pool.ndim)
+                    if pool.shape[i] != row.shape[i]]
+            ax = diff[0] if diff else (1 if pool.ndim > 1 else 0)
+            idx = [0] * pool.ndim
+            idx[ax] = slot
+            return jax.lax.dynamic_update_slice(
+                pool, row.astype(pool.dtype), tuple(idx))
+        self.cache = jax.tree.map(put_row, self.cache, row_cache)
+
+    def _decode_step(self, done: List[Request]):
+        toks = jnp.asarray(self.last_tok)
+        pos = jnp.asarray(self.pos)
+        logits, self.cache = self._decode(
+            self.params, toks, pos, self.cache, self.memory)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        for slot, req in list(self.active.items()):
+            t = int(nxt[slot])
+            req.output.append(t)
+            self.pos[slot] += 1
+            self.last_tok[slot] = t
+            finished = (len(req.output) >= req.max_new_tokens or
+                        (req.eos_id is not None and t == req.eos_id) or
+                        int(self.pos[slot]) >= self.max_len - 1)
+            if finished:
+                req.t_done = time.monotonic()
+                done.append(req)
+                del self.active[slot]
+
+    # ------------- metrics -------------
+    @staticmethod
+    def latency_report(done: List[Request]) -> Dict[str, float]:
+        if not done:
+            return {}
+        ttft = [r.t_first - r.t_submit for r in done if r.t_first]
+        e2e = [r.t_done - r.t_submit for r in done if r.t_done]
+        return {
+            "n": len(done),
+            "ttft_mean_s": float(np.mean(ttft)) if ttft else float("nan"),
+            "e2e_mean_s": float(np.mean(e2e)) if e2e else float("nan"),
+        }

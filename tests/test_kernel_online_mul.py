@@ -1,0 +1,96 @@
+"""Pallas online_mul kernel vs jnp ref vs gold, shape/dtype sweeps."""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.online_mul import online_multiply
+from repro.core.precision import OnlinePrecision
+from repro.kernels.online_mul.ops import online_mul
+from repro.kernels.online_mul.ref import online_mul_batch_ref, schedule_arrays
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:  # pragma: no cover
+    HAVE_HYP = False
+
+
+def _digits(rng, B, n):
+    return (rng.integers(-1, 2, size=(B, n)).astype(np.int32),
+            rng.integers(-1, 2, size=(B, n)).astype(np.int32))
+
+
+@pytest.mark.parametrize("n", [8, 16, 24, 32])
+@pytest.mark.parametrize("B", [64, 257])
+def test_pallas_equals_ref(rng, n, B):
+    xd, yd = _digits(rng, B, n)
+    cfg = OnlinePrecision(n=n)
+    zp, Zp = online_mul(xd, yd, cfg, use_pallas=True, block_b=64)
+    with jax.enable_x64(True):
+        zr, Zr = online_mul_batch_ref(xd, yd, n=n)
+        np.testing.assert_array_equal(np.asarray(zp), np.asarray(zr))
+        np.testing.assert_array_equal(np.asarray(Zp), np.asarray(Zr))
+
+
+@pytest.mark.parametrize("n", [8, 16, 24])
+def test_pallas_full_mode(rng, n):
+    xd, yd = _digits(rng, 128, n)
+    cfg = OnlinePrecision(n=n, truncated=False, tail_gating=False)
+    zp, Zp = online_mul(xd, yd, cfg, use_pallas=True, block_b=128)
+    with jax.enable_x64(True):
+        zr, Zr = online_mul_batch_ref(
+            xd, yd, n=n, truncated=False, tail_gating=False)
+        np.testing.assert_array_equal(np.asarray(zp), np.asarray(zr))
+        np.testing.assert_array_equal(np.asarray(Zp), np.asarray(Zr))
+
+
+@pytest.mark.parametrize("n", [8, 16, 32])
+def test_pallas_equals_gold(rng, n):
+    xd, yd = _digits(rng, 32, n)
+    cfg = OnlinePrecision(n=n)
+    zp, Zp = online_mul(xd, yd, cfg, use_pallas=True, block_b=32)
+    zp, Zp = np.asarray(zp), np.asarray(Zp)
+    for i in range(32):
+        tr = online_multiply([int(v) for v in xd[i]], [int(v) for v in yd[i]], cfg)
+        assert tr.z_digits == [int(v) for v in zp[i]]
+        assert tr.z_int == int(Zp[i])
+
+
+def test_int32_guard():
+    # full-design n=32 exceeds the int32 datapath; kernel must refuse
+    cfg = OnlinePrecision(n=32, truncated=False, tail_gating=False)
+    assert int(schedule_arrays(cfg).max()) + 3 > 31
+    xd = np.zeros((64, 32), np.int32)
+    with pytest.raises(ValueError):
+        from repro.kernels.online_mul.kernel import online_mul_pallas
+        online_mul_pallas(xd, xd, n=32, truncated=False,
+                          tail_gating=False, block_b=64)
+
+
+def test_accuracy_vs_exact_product(rng):
+    n, B = 16, 4096
+    xd, yd = _digits(rng, B, n)
+    cfg = OnlinePrecision(n=n)
+    _, Z = online_mul(xd, yd, cfg, use_pallas=True)
+    w = 0.5 ** np.arange(1, n + 1)
+    exact = (xd @ w) * (yd @ w)
+    got = np.asarray(Z).astype(np.float64) / (1 << n)
+    assert np.max(np.abs(got - exact)) * (1 << n) <= 1.1  # <= 1.1 ulp
+
+
+if HAVE_HYP:
+
+    @given(n=st.sampled_from([8, 16, 24, 32]),
+           seed=st.integers(0, 2**31 - 1),
+           B=st.sampled_from([16, 48]))
+    @settings(max_examples=25, deadline=None)
+    def test_property_pallas_gold_bitexact(n, seed, B):
+        r = np.random.default_rng(seed)
+        xd = r.integers(-1, 2, size=(B, n)).astype(np.int32)
+        yd = r.integers(-1, 2, size=(B, n)).astype(np.int32)
+        cfg = OnlinePrecision(n=n)
+        zp, Zp = online_mul(xd, yd, cfg, use_pallas=True, block_b=16)
+        i = int(r.integers(0, B))
+        tr = online_multiply([int(v) for v in xd[i]], [int(v) for v in yd[i]], cfg)
+        assert tr.z_digits == [int(v) for v in np.asarray(zp)[i]]

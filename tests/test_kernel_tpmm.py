@@ -1,0 +1,125 @@
+"""tpmm Pallas kernel vs jnp oracle vs exact matmul, shape/dtype sweeps."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.kernels.tpmm.ops import tpmm, tpmm_cost_model
+from repro.kernels.tpmm.quantize import plane_decompose, plane_reconstruct
+from repro.kernels.tpmm.ref import kept_levels, num_planes_for
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:  # pragma: no cover
+    HAVE_HYP = False
+
+
+class TestQuantize:
+    @pytest.mark.parametrize("plane_bits", [2, 4, 6])
+    @pytest.mark.parametrize("dtype", [np.float32, np.float16])
+    def test_roundtrip(self, rng, plane_bits, dtype):
+        a = rng.standard_normal((32, 48)).astype(dtype)
+        D = num_planes_for(16, plane_bits)
+        p, s = plane_decompose(jnp.asarray(a), num_planes=D, plane_bits=plane_bits)
+        rec = np.asarray(plane_reconstruct(p, s, plane_bits=plane_bits))
+        ulp = np.asarray(s).max() * 2.0 ** -(plane_bits * D)
+        assert np.max(np.abs(rec - a.astype(np.float32))) <= 0.51 * ulp + 1e-7
+
+    def test_planes_in_balanced_range(self, rng):
+        a = rng.standard_normal((16, 16)).astype(np.float32) * 100
+        p, _ = plane_decompose(jnp.asarray(a), num_planes=4, plane_bits=4)
+        assert np.asarray(p).min() >= -8 and np.asarray(p).max() <= 8
+
+    def test_digit_extraction_exhaustive(self):
+        B, D = 16, 2
+        for v in range(-(B**D) // 2, B**D // 2 + 1):
+            vv, digs = v, []
+            for _ in range(D):
+                q = int(np.sign(vv)) * ((abs(vv) + B // 2 - 1) // B)
+                digs.append(vv - B * q)
+                vv = q
+            assert vv == 0 and all(abs(d) <= B // 2 for d in digs)
+            assert sum(d * B**i for i, d in enumerate(digs)) == v
+
+
+class TestKernelVsRef:
+    @pytest.mark.parametrize("shape", [(128, 128, 128), (64, 256, 64),
+                                       (100, 130, 60), (8, 8, 8)])
+    @pytest.mark.parametrize("n_bits", [8, 16])
+    def test_bitwise_match(self, rng, shape, n_bits):
+        M, K, N = shape
+        a = rng.standard_normal((M, K)).astype(np.float32)
+        b = rng.standard_normal((K, N)).astype(np.float32)
+        gk = np.asarray(tpmm(jnp.asarray(a), jnp.asarray(b), n_bits=n_bits,
+                             block_m=32, block_n=32, block_k=32))
+        gr = np.asarray(tpmm(jnp.asarray(a), jnp.asarray(b), n_bits=n_bits,
+                             use_pallas=False))
+        np.testing.assert_allclose(gk, gr, atol=1e-5, rtol=1e-5)
+
+    @pytest.mark.parametrize("dtype", [np.float32, np.float16])
+    def test_dtype_sweep(self, rng, dtype):
+        a = rng.standard_normal((64, 64)).astype(dtype)
+        b = rng.standard_normal((64, 64)).astype(dtype)
+        gk = np.asarray(tpmm(jnp.asarray(a), jnp.asarray(b), n_bits=16,
+                             block_m=32, block_n=32, block_k=32))
+        gr = np.asarray(tpmm(jnp.asarray(a), jnp.asarray(b), n_bits=16,
+                             use_pallas=False))
+        np.testing.assert_allclose(gk, gr, atol=1e-5, rtol=1e-5)
+
+
+class TestAccuracy:
+    @pytest.mark.parametrize("n_bits,rel_tol", [(8, 0.08), (16, 6e-4), (24, 6e-6)])
+    def test_truncated_error_bound(self, rng, n_bits, rel_tol):
+        M = K = N = 128
+        a = rng.standard_normal((M, K)).astype(np.float32)
+        b = rng.standard_normal((K, N)).astype(np.float32)
+        exact = a @ b
+        got = np.asarray(tpmm(jnp.asarray(a), jnp.asarray(b), n_bits=n_bits,
+                              use_pallas=False))
+        rel = np.max(np.abs(got - exact)) / np.abs(exact).max()
+        assert rel < rel_tol
+
+    def test_modes_ordering(self, rng):
+        a = rng.standard_normal((64, 64)).astype(np.float32)
+        b = rng.standard_normal((64, 64)).astype(np.float32)
+        exact = a @ b
+        errs = {}
+        for mode in ("full", "nbit", "eq8"):
+            got = np.asarray(tpmm(jnp.asarray(a), jnp.asarray(b), n_bits=16,
+                                  use_pallas=False, mode=mode))
+            errs[mode] = np.max(np.abs(got - exact))
+        assert errs["full"] <= errs["nbit"] <= errs["eq8"]
+
+
+class TestCostModel:
+    def test_savings_trend(self):
+        # MXU-op savings grow with precision like the paper's area savings
+        s = [tpmm_cost_model(n)["mxu_savings_pct"] for n in (8, 16, 24, 32)]
+        assert s == sorted(s)
+        assert 20 < s[0] < 30 and 40 < s[-1] < 50
+
+    def test_levels(self):
+        assert kept_levels(16, 4, mode="full") == 7
+        assert kept_levels(16, 4, mode="nbit") == 4
+        assert kept_levels(16, 4, mode="eq8") == 3
+
+
+if HAVE_HYP:
+
+    @given(
+        m=st.integers(1, 5), k=st.integers(1, 6), n=st.integers(1, 5),
+        n_bits=st.sampled_from([8, 16]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=20, deadline=None)
+    def test_property_kernel_matches_ref(m, k, n, n_bits, seed):
+        r = np.random.default_rng(seed)
+        M, K, N = 8 * m, 8 * k, 8 * n
+        a = r.standard_normal((M, K)).astype(np.float32)
+        b = r.standard_normal((K, N)).astype(np.float32)
+        gk = np.asarray(tpmm(jnp.asarray(a), jnp.asarray(b), n_bits=n_bits,
+                             block_m=8, block_n=8, block_k=8))
+        gr = np.asarray(tpmm(jnp.asarray(a), jnp.asarray(b), n_bits=n_bits,
+                             use_pallas=False))
+        np.testing.assert_allclose(gk, gr, atol=1e-5, rtol=1e-5)

@@ -1,0 +1,143 @@
+"""Pipelined multiplier array, online adder, inner products, hw model."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.hwmodel import (
+    PAPER_TABLE1,
+    array_multiplier_cost,
+    nonpipelined_online_cost,
+    online_multiplier_cost,
+    serial_parallel_cost,
+)
+from repro.core.inner_product import online_dot, online_dot_pipelined
+from repro.core.online_add import online_add
+from repro.core.online_mul import online_multiply
+from repro.core.pipeline import run_pipeline
+from repro.core.precision import OnlinePrecision
+from repro.core.sd import digits_to_frac
+
+
+def _rand_pairs(rng, k, n):
+    return [
+        ([int(d) for d in rng.integers(-1, 2, size=n)],
+         [int(d) for d in rng.integers(-1, 2, size=n)])
+        for _ in range(k)
+    ]
+
+
+class TestOnlineAdder:
+    def test_exact_randomized(self, rng):
+        for _ in range(500):
+            n = int(rng.integers(2, 24))
+            a = [int(d) for d in rng.integers(-1, 2, size=n)]
+            b = [int(d) for d in rng.integers(-1, 2, size=n)]
+            out = online_add(a, b)
+            assert abs(digits_to_frac(out) - (digits_to_frac(a) + digits_to_frac(b)) / 2) < 1e-12
+            assert all(d in (-1, 0, 1) for d in out)
+
+
+class TestPipeline:
+    @pytest.mark.parametrize("n,k", [(8, 8), (8, 1), (16, 5), (24, 3)])
+    def test_cycle_count_table3(self, rng, n, k):
+        # paper Table III: (n + delta + 1) + (k - 1)
+        cfg = OnlinePrecision(n=n)
+        run = run_pipeline(_rand_pairs(rng, k, n), cfg)
+        assert run.cycles == (n + 3 + 1) + (k - 1)
+
+    def test_pipeline_matches_reference(self, rng):
+        cfg = OnlinePrecision(n=12)
+        pairs = _rand_pairs(rng, 6, 12)
+        run = run_pipeline(pairs, cfg)
+        for (x, y), tr in zip(pairs, run.traces):
+            ref = online_multiply(x, y, cfg)
+            assert tr.z_digits == ref.z_digits
+            assert tr.z_int == ref.z_int
+
+    def test_activity_reduced_vs_full(self, rng):
+        pairs = _rand_pairs(rng, 16, 16)
+        full = run_pipeline(pairs, OnlinePrecision(n=16, truncated=False, tail_gating=False))
+        red = run_pipeline(pairs, OnlinePrecision(n=16))
+        assert sum(red.active_slices_per_cycle) < 0.75 * sum(full.active_slices_per_cycle)
+        assert red.flips_total < full.flips_total
+
+
+class TestInnerProduct:
+    @pytest.mark.parametrize("k", [2, 3, 8])
+    def test_dot_value(self, rng, k):
+        n = 10
+        pairs = _rand_pairs(rng, k, n)
+        xs = [p[0] for p in pairs]
+        ys = [p[1] for p in pairs]
+        r = online_dot_pipelined(xs, ys)
+        want = sum(digits_to_frac(x) * digits_to_frac(y) for x, y in zip(xs, ys))
+        # each product is <= 1.1 ulp @ 2^-n; adder tree is exact
+        assert abs(r.dot_value - want) <= 1.2 * k * 2.0 ** -n
+        assert r.online_delay == 3 + 2 * math.ceil(math.log2(max(k, 2)))
+
+    def test_pipelined_equals_functional(self, rng):
+        n, k = 8, 4
+        pairs = _rand_pairs(rng, k, n)
+        xs, ys = [p[0] for p in pairs], [p[1] for p in pairs]
+        assert online_dot(xs, ys).digits == online_dot_pipelined(xs, ys).digits
+
+
+class TestHwModel:
+    def test_savings_trend_increases_with_n(self):
+        # paper: savings grow with precision (Table I)
+        saves = []
+        for n in (8, 16, 24, 32):
+            full = online_multiplier_cost(OnlinePrecision(n=n, truncated=False, tail_gating=False))
+            red = online_multiplier_cost(OnlinePrecision(n=n))
+            saves.append(1 - red.area / full.area)
+        assert all(saves[i] < saves[i + 1] for i in range(len(saves) - 1))
+        assert 0.15 < saves[0] < 0.35 and 0.30 < saves[-1] < 0.50
+
+    def test_savings_within_paper_band(self):
+        # Model savings land within +-15pp of the paper's synthesis.
+        # The model is conservative: its "full" baseline uses the natural
+        # register-fill ramp, whereas the paper's conventional design keeps
+        # all n slices live in every stage (Fig. 5), and the paper's own
+        # n=16 row is internally inconsistent (1734->976 latches = 43.7%
+        # raw vs 31.93% quoted) -- see EXPERIMENTS.md.
+        for n in (8, 16, 24, 32):
+            full = online_multiplier_cost(OnlinePrecision(n=n, truncated=False, tail_gating=False))
+            red = online_multiplier_cost(OnlinePrecision(n=n))
+            got = 100 * (1 - red.area / full.area)
+            paper = 100 * (1 - PAPER_TABLE1["area"]["reduced"][n] / PAPER_TABLE1["area"]["full"][n])
+            assert abs(got - paper) < 15.0, (n, got, paper)
+
+    def test_table2_orderings(self):
+        # pipelined designs cost more area than iterative ones, truncated
+        # less than full; non-pipelined online ~ serial-parallel class
+        n = 8
+        sp = serial_parallel_cost(n)
+        ar = array_multiplier_cost(n)
+        ol = nonpipelined_online_cost(n)
+        fu = online_multiplier_cost(OnlinePrecision(n=n, truncated=False, tail_gating=False))
+        re_ = online_multiplier_cost(OnlinePrecision(n=n))
+        assert re_.area < fu.area
+        assert max(sp.area, ar.area, ol.area) < re_.area
+        assert sp.latches < re_.latches < fu.latches
+
+
+class TestCycleFormulas:
+    def test_table3(self):
+        # all five rows of paper Table III for k=8
+        k = 8
+        rows = {
+            "serial-parallel": lambda n: (n + 1) * k,
+            "array": lambda n: n * k,
+            "online": lambda n: (n + 3 + 1) * k,
+            "pipelined": lambda n: (n + 3 + 1) + (k - 1),
+        }
+        paper = {
+            "serial-parallel": {8: 72, 16: 136, 24: 200, 32: 264},
+            "array": {8: 64, 16: 128, 24: 192, 32: 256},
+            "online": {8: 96, 16: 160, 24: 224, 32: 288},
+            "pipelined": {8: 19, 16: 27, 24: 35, 32: 43},
+        }
+        for name, f in rows.items():
+            for n in (8, 16, 24, 32):
+                assert f(n) == paper[name][n], (name, n)
