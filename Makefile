@@ -1,0 +1,15 @@
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: verify bench test
+
+# Tier-1 verification (same command as ROADMAP.md / CI)
+verify:
+	$(PYTHON) -m pytest -x -q
+
+# Full suite without fail-fast (CI uses this for complete reports)
+test:
+	$(PYTHON) -m pytest -q
+
+bench:
+	$(PYTHON) -m benchmarks.run

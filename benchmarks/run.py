@@ -160,6 +160,33 @@ def tpmm_bench():
         print(f"tpmm/n{nb},{us:.1f},{cm['mxu_savings_pct']:.2f}")
 
 
+def online_dot_bench():
+    """Fused inner-product array kernel: K multiplier lanes + online adder
+    tree in one Pallas call, swept over (k, n). Reports kernel time and
+    worst-case value error vs the exact dot (bound: 1.1 ulp per lane)."""
+    from repro.core.precision import OnlinePrecision
+    from repro.kernels.online_dot.ops import dot_stream_length, online_dot
+    rng = np.random.default_rng(3)
+    B = 8
+    print("\n== online_dot: fused array kernel (B=8 rows) ==")
+    print(f"{'k':>4} {'n':>3} {'stream':>7} {'us':>10} {'max_ulp':>9} "
+          f"{'ulp_bound':>10}")
+    for k in (8, 64, 256):
+        for n in (8, 16, 32):
+            xd = rng.integers(-1, 2, size=(B, k, n)).astype(np.int32)
+            yd = rng.integers(-1, 2, size=(B, k, n)).astype(np.int32)
+            cfg = OnlinePrecision(n=n)
+            fn = lambda: online_dot(xd, yd, cfg, use_pallas=True, block_b=B)
+            fn()  # compile
+            us, (z, val) = _timeit(fn, repeat=2)
+            w = 0.5 ** np.arange(1, n + 1)
+            exact = ((xd @ w) * (yd @ w)).sum(axis=1)
+            ulp = float(np.max(np.abs(val - exact)) * (1 << n))
+            print(f"{k:>4} {n:>3} {dot_stream_length(n, k):>7} {us:>10.1f} "
+                  f"{ulp:>9.3f} {1.1 * k:>10.1f}")
+            print(f"online_dot/k{k}_n{n},{us:.1f},{ulp:.4f}")
+
+
 def pipeline_activity():
     """Fig. 7 reproduction: per-cycle live slices + measured switching."""
     from repro.core.pipeline import run_pipeline
@@ -212,6 +239,7 @@ BENCHES = {
     "table3": table3_cycles,
     "error_profile": error_profile,
     "tpmm": tpmm_bench,
+    "online_dot": online_dot_bench,
     "fig7": pipeline_activity,
     "roofline": roofline_report,
 }

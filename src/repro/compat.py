@@ -1,0 +1,103 @@
+"""JAX version-compatibility shims.
+
+The repo pins no single JAX version; the public API it needs moved between
+releases. Every call site goes through this module instead of feature-
+detecting inline. Supported matrix (unit-tested on the installed version by
+tests/test_kernel_online_dot.py::TestCompat):
+
+===================  =====================  ==============================
+capability           jax >= 0.6             jax 0.4.x / 0.5.x fallback
+===================  =====================  ==============================
+mesh context         ``jax.set_mesh``       ``jax.sharding.use_mesh`` if
+                                            present, else the ``Mesh``
+                                            object's own context manager
+x64 scope            ``jax.enable_x64``     ``jax.experimental.enable_x64``
+AbstractMesh ctor    ``AbstractMesh(sizes,  ``AbstractMesh(((name, size),
+                     names)``               ...))`` (0.4.x shape_tuple
+                                            positional signature)
+===================  =====================  ==============================
+
+Nothing here touches device state at import time.
+"""
+from __future__ import annotations
+
+import re
+from typing import ContextManager, Sequence, Tuple
+
+import jax
+
+__all__ = ["jax_version", "use_mesh", "enable_x64", "make_abstract_mesh",
+           "shardings_for"]
+
+
+def jax_version() -> Tuple[int, ...]:
+    """Installed JAX version as a comparable int tuple, e.g. (0, 4, 37)."""
+    return tuple(int(p) for p in re.findall(r"\d+", jax.__version__)[:3])
+
+
+def use_mesh(mesh) -> ContextManager:
+    """Context manager making `mesh` the ambient mesh for jit/pjit.
+
+    Maps to ``jax.set_mesh`` (>= 0.6), ``jax.sharding.use_mesh`` (late
+    0.4.x / 0.5.x), or the ``Mesh`` context-manager protocol (0.4.x).
+    `mesh` must be a concrete ``jax.sharding.Mesh`` on the 0.4.x path.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    return mesh  # jax.sharding.Mesh is itself a context manager on 0.4.x
+
+
+def enable_x64(enable: bool = True) -> ContextManager:
+    """Context manager enabling 64-bit types inside its scope.
+
+    Maps to ``jax.enable_x64`` (>= 0.6) or
+    ``jax.experimental.enable_x64`` (0.4.x / 0.5.x).
+    """
+    if hasattr(jax, "enable_x64"):
+        return jax.enable_x64(enable)
+    from jax.experimental import enable_x64 as _enable_x64
+    return _enable_x64(enable)
+
+
+def shardings_for(mesh, spec_tree):
+    """Resolve a PartitionSpec pytree into jit-acceptable shardings.
+
+    jax >= 0.6 lets bare ``PartitionSpec``s flow into ``jax.jit``'s
+    in/out_shardings (resolved against the ambient mesh); 0.4.x requires
+    concrete ``Sharding`` objects. Binding each spec to ``mesh`` via
+    ``NamedSharding`` is valid on every release, so this shim is
+    unconditional. ``None`` leaves (unconstrained/inferred) pass through.
+
+    ``PartitionSpec`` is a tuple subclass on 0.4.x, so the tree map must
+    treat it as a leaf explicitly or it would be flattened.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    def resolve(s):
+        return NamedSharding(mesh, s) if isinstance(s, PartitionSpec) else s
+
+    return jax.tree_util.tree_map(
+        resolve, spec_tree, is_leaf=lambda x: isinstance(x, PartitionSpec))
+
+
+def make_abstract_mesh(axis_sizes: Sequence[int], axis_names: Sequence[str]):
+    """Construct ``jax.sharding.AbstractMesh`` across the positional-
+    signature change: new releases take ``(axis_sizes, axis_names)``;
+    0.4.x takes a single ``((name, size), ...)`` shape tuple.
+    """
+    AbstractMesh = jax.sharding.AbstractMesh
+    sizes = tuple(int(s) for s in axis_sizes)
+    names = tuple(axis_names)
+    if len(sizes) != len(names):
+        raise ValueError(f"got {len(sizes)} sizes for {len(names)} names")
+    try:
+        mesh = AbstractMesh(sizes, names)
+        # 0.4.x would silently accept `names` as its axis_types kwarg;
+        # reading axis_names back distinguishes the two signatures.
+        if tuple(mesh.axis_names) == names:
+            return mesh
+    except (TypeError, ValueError, AttributeError):
+        pass
+    return AbstractMesh(tuple(zip(names, sizes)))

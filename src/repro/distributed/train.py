@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import shardings_for
 from repro.models.config import ModelConfig
 from repro.models.model import Model, lm_loss
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
@@ -156,8 +157,8 @@ def jit_train_step(model, sharder, state, batch_keys, **kw):
     mspecs = None  # metrics replicated
     return jax.jit(
         step,
-        in_shardings=(sspecs, bspecs),
-        out_shardings=(sspecs, mspecs),
+        in_shardings=shardings_for(sharder.mesh, (sspecs, bspecs)),
+        out_shardings=shardings_for(sharder.mesh, (sspecs, mspecs)),
         donate_argnums=(0,),
     )
 
@@ -177,8 +178,8 @@ def jit_prefill_step(model, sharder, params, batch_keys, cache):
     mem_spec = P(sharder.batch_spec()[0], None, None) if has_mem else None
     return jax.jit(
         build_prefill_step(model, sharder),
-        in_shardings=(pspecs, bspecs, cspecs),
-        out_shardings=(lspec, cspecs, mem_spec),
+        in_shardings=shardings_for(sharder.mesh, (pspecs, bspecs, cspecs)),
+        out_shardings=shardings_for(sharder.mesh, (lspec, cspecs, mem_spec)),
         donate_argnums=(2,),
     )
 
@@ -203,7 +204,7 @@ def jit_decode_step(model, sharder, params, cache, *, has_memory: bool):
         fn = lambda p, t, ps, c: build_decode_step(model, sharder)(p, t, ps, c, None)
     return jax.jit(
         fn,
-        in_shardings=in_sh,
-        out_shardings=(lspec, cspecs),
+        in_shardings=shardings_for(sharder.mesh, in_sh),
+        out_shardings=shardings_for(sharder.mesh, (lspec, cspecs)),
         donate_argnums=(3,),
     )

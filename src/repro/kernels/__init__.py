@@ -1,3 +1,12 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Custom compute kernels for the paper's hot spots.
+
+Three families, each `kernel.py` (Pallas) + `ref.py` (jnp oracle) +
+`ops.py` (dispatch), sharing the int32-fit / padding / digit-decoding
+helpers in `common.py`:
+
+  online_mul — batched radix-2 online-multiplier digit recurrence
+  online_dot — fused inner-product array: K multiplier lanes feeding a
+               digit-serial online adder tree (the paper's target workload)
+  tpmm       — truncated digit-plane matmul (the Eq. 8 truncation law
+               transposed to MXU plane products)
+"""

@@ -1,0 +1,57 @@
+"""Shared dispatch and decoding helpers for the digit-serial kernel families.
+
+`online_mul`, `online_dot`, and `tpmm` all make the same three decisions:
+does the configuration fit the Pallas int32 datapath, how to pad operands
+to the kernel's block tiling, and how to decode digit matrices back to
+host integers/floats. This module is the single home for that logic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.precision import OnlinePrecision
+
+__all__ = [
+    "fits_int32",
+    "pad_to_multiple",
+    "decode_digits",
+    "decode_stream",
+]
+
+
+def fits_int32(cfg: OnlinePrecision) -> bool:
+    """True when the Fig. 7 truncation schedule keeps every architectural
+    quantity within the Pallas int32 datapath (max T(j) + 3 <= 31 bits:
+    the deepest live slice plus the +-2 residual/selection headroom)."""
+    from repro.kernels.online_mul.ref import schedule_arrays
+    return int(schedule_arrays(cfg).max()) + 3 <= 31
+
+
+def pad_to_multiple(x: jax.Array, mult: int, axis: int) -> jax.Array:
+    """Zero-pad `x` along `axis` up to the next multiple of `mult`."""
+    pad = (-x.shape[axis]) % mult
+    if not pad:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def decode_digits(z, n: int) -> np.ndarray:
+    """SD digit matrix (..., n) -> integer scaled 2^n (host int64, exact
+    for n <= 62). The software form of the hardware's OTFC converter."""
+    w = np.int64(1) << np.arange(n - 1, -1, -1, dtype=np.int64)
+    return np.asarray(z).astype(np.int64) @ w
+
+
+def decode_stream(digits) -> np.ndarray:
+    """SD digit stream (..., m) -> float64 value sum_i d_i 2^-(i+1).
+
+    Exact for m <= 51 (every partial sum is a dyadic rational whose
+    numerator fits the float64 significand).
+    """
+    d = np.asarray(digits).astype(np.float64)
+    w = 0.5 ** np.arange(1, d.shape[-1] + 1)
+    return d @ w

@@ -1,0 +1,15 @@
+"""Fused online inner-product array (multiplier lanes + online adder tree).
+
+The batched, digit-serial form of the paper's target workload: K radix-2
+online multipliers stream product digits into a balanced tree of online
+adders (delta_add = 2 per level), emitting the dot-product digit stream
+without ever materializing a full-precision product. Bit-exact against the
+core/inner_product.py oracle.
+
+  kernel.py — fused Pallas kernel (int32 datapath, Fig. 7 schedule)
+  ref.py    — int64 jnp reference + the vectorized adder-tree recurrence
+  ops.py    — dispatch (int32-fit check, block_b tiling, jnp fallback)
+"""
+from .ops import online_dot, dot_scale_log2, dot_stream_length
+
+__all__ = ["online_dot", "dot_scale_log2", "dot_stream_length"]

@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: fused online inner-product array.
+
+One kernel runs the paper's whole array-level datapath (the inner-product
+target workload of §IV and of the follow-up array paper): for each batch
+row, K vector lanes execute the radix-2 online-multiplier digit recurrence
+(the Fig. 7 truncation schedule from kernels/online_mul, int32 datapath),
+and their MSDF product digit streams are reduced by a balanced online-adder
+tree (delta_add = 2 per level, the core/online_add.py recurrence vectorized
+position-parallel over lanes). The kernel emits the dot-product digit
+stream sum_i x_i y_i / 2^L directly — no full-precision product integer is
+ever materialized, exactly like the hardware array.
+
+Layout: operands are (block_b, K, n) int32 digit blocks in VMEM; the
+multiplier stage flattens the (block_b * K) lanes onto the vector axis and
+runs the n + delta digit steps sequentially (VPU integer ops); the tree
+stage is ceil(log2 K) statically-unrolled vectorized levels. Datapath
+bounds are the multiplier's (max T(j) + 3 <= 31); tree digits stay in
+{-2..2} and never stress int32.
+
+interpret=True on the CPU container; flip to False on a real TPU (ROADMAP
+open item: validate the Mosaic lowering of the 3-D block reshape there).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.precision import OnlinePrecision
+from repro.kernels.online_mul.kernel import mul_digit_loop
+from repro.kernels.online_mul.ref import schedule_arrays
+from .ref import adder_tree, tree_levels
+
+__all__ = ["online_dot_pallas"]
+
+
+def _kernel(sched_ref, x_ref, y_ref, z_ref, *, n, delta, t, S):
+    """One batch block: K-lane multiplier recurrence + online adder tree."""
+    xd = x_ref[...]            # (B, K, n) int32 digits in {-1,0,1}
+    yd = y_ref[...]
+    B, K, _ = xd.shape
+    prod = mul_digit_loop(xd.reshape(B * K, n), yd.reshape(B * K, n),
+                          sched_ref[...], n=n, delta=delta, t=t, S=S)
+    out, _ = adder_tree(prod.reshape(B, K, n))
+    z_ref[...] = out
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n", "delta", "t", "truncated", "tail_gating",
+                     "tail_guard", "block_b", "interpret"),
+)
+def online_dot_pallas(
+    x_digits: jax.Array,   # (B, K, n) int32 digits in {-1,0,1}
+    y_digits: jax.Array,
+    *,
+    n: int,
+    delta: int = 3,
+    t: int = 2,
+    truncated: bool = True,
+    tail_gating: bool = True,
+    tail_guard: int = 2,
+    block_b: int = 8,
+    interpret: bool = True,  # CPU container: interpret; False on real TPU
+) -> jax.Array:
+    """Fused batched online inner product.
+
+    Returns (B, n + 2*ceil(log2 K)) int32 — the MSDF digit stream of
+    sum_i x_i y_i / 2^L, bit-exact vs core/inner_product.online_dot.
+    Decoding is done by the ops.py wrapper.
+    """
+    cfg = OnlinePrecision(n=n, delta=delta, t=t, truncated=truncated,
+                          tail_gating=tail_gating, tail_guard=tail_guard)
+    sched_np = schedule_arrays(cfg)
+    S = int(sched_np.max())
+    if S + 3 > 31:
+        raise ValueError(
+            f"int32 datapath needs max T(j)+3 <= 31, got {S + 3}; "
+            "use the int64 jnp reference for this configuration")
+    B, K, n_ = x_digits.shape
+    if n_ != n:
+        raise ValueError(f"operand digit count {n_} != cfg n {n}")
+    if B % block_b:
+        raise ValueError(f"batch {B} must be divisible by block_b {block_b}")
+    m_out = n + 2 * tree_levels(K)
+    sched = jnp.asarray(sched_np)
+    grid = (B // block_b,)
+    kern = functools.partial(_kernel, n=n, delta=delta, t=t, S=S)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n + delta,), lambda i: (0,)),          # schedule
+            pl.BlockSpec((block_b, K, n), lambda i: (i, 0, 0)),  # x digits
+            pl.BlockSpec((block_b, K, n), lambda i: (i, 0, 0)),  # y digits
+        ],
+        out_specs=pl.BlockSpec((block_b, m_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, m_out), jnp.int32),
+        interpret=interpret,
+    )(sched, x_digits.astype(jnp.int32), y_digits.astype(jnp.int32))

@@ -1,0 +1,62 @@
+"""Public jit'd wrapper for the fused online inner-product array.
+
+`online_dot` mirrors the online_mul dispatch: the fused Pallas kernel when
+the configuration fits the int32 datapath (every Eq. 8-truncated config up
+to n = 32), else the int64 jnp reference. Dispatch/decoding plumbing is
+shared with the other kernel families via kernels/common.py.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core.precision import OnlinePrecision
+from repro.kernels.common import decode_stream, fits_int32, pad_to_multiple
+from .kernel import online_dot_pallas
+from .ref import online_dot_batch_ref, tree_levels
+
+__all__ = ["online_dot", "dot_scale_log2", "dot_stream_length"]
+
+
+def dot_scale_log2(k: int) -> int:
+    """L: the emitted stream encodes sum x_i y_i / 2^L."""
+    return tree_levels(k)
+
+
+def dot_stream_length(n: int, k: int) -> int:
+    """Digits in the emitted stream: n + 2 per adder-tree level."""
+    return n + 2 * tree_levels(k)
+
+
+def online_dot(
+    x_digits: jax.Array,  # (B, K, n) operand digit grids in {-1,0,1}
+    y_digits: jax.Array,
+    cfg: OnlinePrecision,
+    *,
+    use_pallas: bool | None = None,
+    block_b: int = 8,
+    interpret: bool = True,
+) -> tuple[jax.Array, np.ndarray]:
+    """Batched fused online inner product over K pairs per batch row.
+
+    Returns (z_digits (B, n + 2L) int32 jax array, dot (B,) host float64
+    inner-product values with the 2^-L tree scale already removed). The
+    digit stream is bit-exact vs the core/inner_product.online_dot oracle;
+    the value inherits the multiplier's <= 1.1 ulp/product truncation.
+    """
+    B, K, n = x_digits.shape
+    assert cfg.n == n
+    fits = fits_int32(cfg)
+    if use_pallas is None:
+        use_pallas = fits
+    kw = dict(n=cfg.n, delta=cfg.delta, t=cfg.t, truncated=cfg.truncated,
+              tail_gating=cfg.tail_gating, tail_guard=cfg.tail_guard)
+    if use_pallas and fits:
+        xp = pad_to_multiple(x_digits, block_b, 0)
+        yp = pad_to_multiple(y_digits, block_b, 0)
+        z = online_dot_pallas(xp, yp, block_b=block_b,
+                              interpret=interpret, **kw)[:B]
+    else:
+        z = online_dot_batch_ref(x_digits, y_digits, **kw)
+    L = tree_levels(K)
+    return z, decode_stream(z) * float(1 << L)

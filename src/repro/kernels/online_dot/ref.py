@@ -1,0 +1,110 @@
+"""jnp reference for the fused online inner-product array.
+
+Two pieces:
+
+* ``adder_tree`` — the balanced online-adder tree of core/online_add.py
+  vectorized over (batch, node, digit) axes. The streaming OnlineAdder
+  recurrence closes over a 2-digit window, so the whole stream can be
+  computed position-parallel: with e_k the padded digit sums and the flush
+  zeros appended,
+
+      t_k = +1 if e_k >= 2 or (e_k == +1 and e_{k+1} >= 0)
+      t_k = -1 if e_k <= -2 or (e_k == -1 and e_{k+1} <  0)
+      w_k = e_k - 2 t_k,     out_k = w_k + t_{k+1}
+
+  which is a pure elementwise map over shifted views — no serial loop.
+  Each level halves the node count (odd levels zero-padded, exactly like
+  core/inner_product._tree_reduce) and grows the stream by 2 digits (the
+  /2 pre-scale plus the adder delay drain).
+
+* ``online_dot_batch_ref`` — K-lane multiplier (the int64 jnp reference
+  recurrence from kernels/online_mul/ref.py) feeding ``adder_tree``.
+  Property-tested bit-identical to the core/inner_product.online_dot
+  oracle; this is what the Pallas kernel is asserted against.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.online_mul.ref import online_mul_batch_ref
+
+__all__ = ["adder_tree", "tree_levels", "online_dot_batch_ref"]
+
+
+def tree_levels(k: int) -> int:
+    """Number of reduction levels L for k lanes (== ceil(log2 k), 0 for 1)."""
+    if k < 1:
+        raise ValueError(f"need k >= 1 lanes, got {k}")
+    levels, width = 0, k
+    while width > 1:
+        width = (width + 1) // 2
+        levels += 1
+    return levels
+
+
+def adder_tree(streams: jax.Array) -> tuple[jax.Array, int]:
+    """Reduce (B, K, m) SD digit streams through the online adder tree.
+
+    Returns ((B, m + 2L) digit stream of sum/2^L, L). Digit arithmetic
+    stays in the input integer dtype (values never leave {-2..2} before
+    the final {-1,0,1} output), so int32 suffices on any datapath.
+    """
+    B = streams.shape[0]
+    dt = streams.dtype
+    levels = 0
+    while streams.shape[1] > 1:
+        K, m = streams.shape[1], streams.shape[2]
+        if K % 2:
+            streams = jnp.concatenate(
+                [streams, jnp.zeros((B, 1, m), dt)], axis=1)
+            K += 1
+        pairs = streams.reshape(B, K // 2, 2, m)
+        # e_0 = 0 (the /2 pre-scale shift), e_1..e_m the digit sums, then
+        # two flush zeros draining the delay line.
+        e = jnp.concatenate(
+            [jnp.zeros((B, K // 2, 1), dt),
+             pairs[:, :, 0, :] + pairs[:, :, 1, :],
+             jnp.zeros((B, K // 2, 2), dt)], axis=-1)
+        ek, en = e[..., :-1], e[..., 1:]
+        t = jnp.where(
+            (ek >= 2) | ((ek == 1) & (en >= 0)), 1,
+            jnp.where((ek <= -2) | ((ek == -1) & (en < 0)), -1, 0),
+        ).astype(dt)
+        w = ek - 2 * t
+        out = w[..., :-1] + t[..., 1:]
+        streams = jnp.concatenate(
+            [out, jnp.zeros((B, K // 2, 1), dt)], axis=-1)
+        levels += 1
+    return streams[:, 0, :], levels
+
+
+@functools.partial(jax.jit, static_argnames=("n", "delta", "t", "truncated",
+                                             "tail_gating", "tail_guard"))
+def online_dot_batch_ref(
+    x_digits: jax.Array,  # (B, K, n) int32 digits in {-1,0,1}
+    y_digits: jax.Array,  # (B, K, n)
+    *,
+    n: int,
+    delta: int = 3,
+    t: int = 2,
+    truncated: bool = True,
+    tail_gating: bool = True,
+    tail_guard: int = 2,
+) -> jax.Array:
+    """Batched online inner product, reference path.
+
+    Returns (B, n + 2*ceil(log2 K)) int32 SD digits of
+    sum_i x_i y_i / 2^L. Needs x64 enabled (repro.compat.enable_x64) when
+    the multiplier's full-width recurrence exceeds int32, same as
+    online_mul_batch_ref.
+    """
+    B, K, n_ = x_digits.shape
+    z, _ = online_mul_batch_ref(
+        x_digits.reshape(B * K, n), y_digits.reshape(B * K, n),
+        n=n, delta=delta, t=t, truncated=truncated,
+        tail_gating=tail_gating, tail_guard=tail_guard)
+    out, _ = adder_tree(z.reshape(B, K, n))
+    return out

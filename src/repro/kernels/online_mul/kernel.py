@@ -25,21 +25,28 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.core.precision import OnlinePrecision
 from .ref import schedule_arrays
 
-__all__ = ["online_mul_pallas"]
+__all__ = ["online_mul_pallas", "mul_digit_loop"]
 
 
-def _kernel(sched_ref, x_ref, y_ref, z_ref, *, n, delta, t, S):
-    """One batch block: run the n+delta digit steps for block_b lanes."""
-    xd = x_ref[...]            # (B, n) int32 digits in {-1,0,1}
-    yd = y_ref[...]
+def mul_digit_loop(xd, yd, sched, *, n, delta, t, S):
+    """Run the n+delta digit steps of the recurrence for a block of lanes.
+
+    Pure jnp int32 function usable inside any Pallas kernel body: the
+    online_mul kernel below calls it directly, and the fused inner-product
+    kernel (kernels/online_dot/kernel.py) calls it as the K-lane multiplier
+    stage feeding its online adder tree.
+
+    Args:
+      xd, yd: (L, n) int32 digits in {-1,0,1}, one multiplication per lane.
+      sched:  (n+delta,) int32 T(j) truncation schedule (Fig. 7).
+    Returns (L, n) int32 MSDF product digits.
+    """
     B = xd.shape[0]
-    sched = sched_ref[...]     # (n+delta,) int32 T(j) schedule
 
     def floor_at(v, T):
         # two's-complement truncation below 2^-T at scale 2^S
@@ -85,7 +92,13 @@ def _kernel(sched_ref, x_ref, y_ref, z_ref, *, n, delta, t, S):
     # The multiplier's architectural output IS the MSDF digit stream; the
     # integer decode (OTFC in hardware) happens outside the kernel.
     _, _, _, zout = jax.lax.fori_loop(0, n + delta, body, init)
-    z_ref[...] = zout
+    return zout
+
+
+def _kernel(sched_ref, x_ref, y_ref, z_ref, *, n, delta, t, S):
+    """One batch block: run the n+delta digit steps for block_b lanes."""
+    z_ref[...] = mul_digit_loop(x_ref[...], y_ref[...], sched_ref[...],
+                                n=n, delta=delta, t=t, S=S)
 
 
 @functools.partial(

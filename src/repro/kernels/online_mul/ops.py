@@ -2,31 +2,20 @@
 
 `online_mul` picks the Pallas kernel when the configuration fits the int32
 datapath (see kernel.py) and falls back to the int64 jnp reference
-otherwise. `online_dot_planes` runs the multiplier across a (B, K) operand
-grid and accumulates the exact product integers — the PE-array inner
-product in one call.
+otherwise. `online_dot` forwards to the fused inner-product array kernel
+(kernels/online_dot), which runs the K multiplier lanes AND the online
+adder tree inside one Pallas call — kept here for source compatibility.
 """
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.precision import OnlinePrecision
+from repro.kernels.common import decode_digits, fits_int32, pad_to_multiple
 from .kernel import online_mul_pallas
-from .ref import online_mul_batch_ref, schedule_arrays
+from .ref import online_mul_batch_ref
 
 __all__ = ["online_mul", "online_dot"]
-
-
-def _fits_int32(cfg: OnlinePrecision) -> bool:
-    return int(schedule_arrays(cfg).max()) + 3 <= 31
-
-
-def _decode_digits(z: jax.Array, n: int):
-    """Digits -> integer scaled 2^n (host-side int64, exact for n <= 62)."""
-    import numpy as np
-    w = (np.int64(1) << np.arange(n - 1, -1, -1, dtype=np.int64))
-    return np.asarray(z).astype(np.int64) @ w
 
 
 def online_mul(
@@ -46,14 +35,12 @@ def online_mul(
     """
     B, n = x_digits.shape
     assert cfg.n == n
+    fits = fits_int32(cfg)
     if use_pallas is None:
-        use_pallas = _fits_int32(cfg)
-    if use_pallas and _fits_int32(cfg):
-        pad = (-B) % block_b
-        xp, yp = x_digits, y_digits
-        if pad:
-            xp = jnp.pad(xp, ((0, pad), (0, 0)))
-            yp = jnp.pad(yp, ((0, pad), (0, 0)))
+        use_pallas = fits
+    if use_pallas and fits:
+        xp = pad_to_multiple(x_digits, block_b, 0)
+        yp = pad_to_multiple(y_digits, block_b, 0)
         z = online_mul_pallas(
             xp, yp, n=cfg.n, delta=cfg.delta, t=cfg.t,
             truncated=cfg.truncated, tail_gating=cfg.tail_gating,
@@ -64,7 +51,7 @@ def online_mul(
             x_digits, y_digits, n=cfg.n, delta=cfg.delta, t=cfg.t,
             truncated=cfg.truncated, tail_gating=cfg.tail_gating,
             tail_guard=cfg.tail_guard)
-    return z, _decode_digits(z, n)
+    return z, decode_digits(z, n)
 
 
 def online_dot(
@@ -73,12 +60,10 @@ def online_dot(
     cfg: OnlinePrecision,
     **kw,
 ) -> jax.Array:
-    """Inner products over K pairs per batch row via the online multiplier;
-    returns (B,) host float64 dot values (products decoded at 2^-n output
-    granularity, matching the PE-array + adder-tree semantics up to the
-    documented 1-ulp product truncation)."""
-    import numpy as np
-    B, K, n = x_digits.shape
-    _, zint = online_mul(x_digits.reshape(B * K, n),
-                         y_digits.reshape(B * K, n), cfg, **kw)
-    return (zint.reshape(B, K).astype(np.float64) / (2.0 ** n)).sum(axis=1)
+    """Inner products over K pairs per batch row; returns (B,) host float64
+    dot values. Forwards to the fused array kernel (kernels/online_dot):
+    multiplier lanes + digit-serial online adder tree in one Pallas call,
+    digit-exact vs the core/inner_product.py oracle."""
+    from repro.kernels.online_dot.ops import online_dot as fused_dot
+    _, dot = fused_dot(x_digits, y_digits, cfg, **kw)
+    return dot

@@ -52,7 +52,7 @@ def online_mul_batch_ref(
     if F + 3 > 31 and jax.dtypes.canonicalize_dtype(jnp.int64) != jnp.int64:
         raise ValueError(
             f"online_mul_batch_ref with n={n} needs int64 (F+3={F+3} bits); "
-            "enable x64 (jax.experimental.enable_x64) or use the Pallas "
+            "enable x64 (repro.compat.enable_x64) or use the Pallas "
             "kernel, whose Eq.8-truncated datapath fits int32")
     sched = jnp.asarray(schedule_arrays(cfg))  # (n+delta,)
     B = x_digits.shape[0]

@@ -9,22 +9,13 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
+from repro.kernels.common import pad_to_multiple
 from .kernel import tpmm_pallas
 from .quantize import plane_decompose
 from .ref import kept_levels, num_planes_for, tpmm_ref
 
 __all__ = ["tpmm", "tpmm_cost_model"]
-
-
-def _pad_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
-    pad = (-x.shape[axis]) % mult
-    if not pad:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths)
 
 
 @functools.partial(
@@ -59,10 +50,10 @@ def tpmm(
     if not use_pallas:
         return tpmm_ref(ap, bp, sa, sb, n_bits=n_bits,
                         plane_bits=plane_bits, mode=mode)
-    ap = _pad_to(_pad_to(ap, block_m, 1), block_k, 2)
-    bp = _pad_to(_pad_to(bp, block_k, 1), block_n, 2)
-    sa_p = _pad_to(sa.reshape(M, 1), block_m, 0)
-    sb_p = _pad_to(sb.reshape(1, N), block_n, 1)
+    ap = pad_to_multiple(pad_to_multiple(ap, block_m, 1), block_k, 2)
+    bp = pad_to_multiple(pad_to_multiple(bp, block_k, 1), block_n, 2)
+    sa_p = pad_to_multiple(sa.reshape(M, 1), block_m, 0)
+    sb_p = pad_to_multiple(sb.reshape(1, N), block_n, 1)
     out = tpmm_pallas(
         ap, bp, sa_p, sb_p, n_bits=n_bits, plane_bits=plane_bits,
         mode=mode, block_m=block_m, block_n=block_n,

@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import use_mesh
 from repro.configs import get_config, list_archs
 from repro.distributed.sharding import Sharder
 from repro.distributed.train import (init_train_state, jit_decode_step,
@@ -85,7 +86,7 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool, out_dir: Path,
     specs = input_specs(cfg, shape)
     key = jax.ShapeDtypeStruct((2,), jnp.uint32)
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         if case.kind == "train":
             state_sh = eval_shape_tree(
                 lambda k: init_train_state(model, k), key)

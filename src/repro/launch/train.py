@@ -20,6 +20,7 @@ import jax
 import numpy as np
 
 from repro.checkpoint import CheckpointManager
+from repro.compat import use_mesh
 from repro.configs import get_config, smoke_config
 from repro.data.synthetic import SyntheticLMDataset
 from repro.distributed.fault import PreemptionGuard, StragglerWatchdog
@@ -59,7 +60,7 @@ def main(argv=None):
     data = SyntheticLMDataset(cfg, args.batch, args.seq, seed=args.seed)
     ckpt = CheckpointManager(Path(args.ckpt_dir) / cfg.name, keep=3)
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         key = jax.random.PRNGKey(args.seed)
         state = init_train_state(model, key)
         start_step = 0

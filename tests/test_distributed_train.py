@@ -9,6 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.compat import use_mesh
 from repro.configs import smoke_config
 from repro.data.synthetic import SyntheticLMDataset
 from repro.distributed.sharding import Sharder
@@ -27,13 +28,13 @@ def setup():
     sharder = Sharder(mesh, cfg)
     sharder.set_batch(8)
     data = SyntheticLMDataset(cfg, 8, 32, seed=5)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         state = init_train_state(model, jax.random.PRNGKey(0))
     return cfg, model, mesh, sharder, state, data
 
 
 def _run(model, sharder, mesh, state, batch, **kw):
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         step = build_train_step(model, sharder,
                                 opt_cfg=AdamWConfig(lr=1e-3), **kw)
         return step(state, batch)
@@ -42,7 +43,7 @@ def _run(model, sharder, mesh, state, batch, **kw):
 class TestTrainStep:
     def test_loss_decreases(self, setup):
         cfg, model, mesh, sharder, state, data = setup
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             step = jit_train_step(model, sharder, state, ("tokens",),
                                   opt_cfg=AdamWConfig(lr=3e-3),
                                   schedule_total=30)

@@ -1,0 +1,135 @@
+"""Fused Pallas inner-product array vs the core oracle, plus compat shims.
+
+The fused kernel must be bit-exact against core/inner_product.online_dot
+(exact Python multiplier + streaming OnlineAdder tree) for every tested
+(k, n, truncated) configuration — digits, not just values.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import compat
+from repro.core.inner_product import online_dot as oracle_dot
+from repro.core.precision import OnlinePrecision
+from repro.kernels.common import decode_stream
+from repro.kernels.online_dot.ops import (dot_scale_log2, dot_stream_length,
+                                          online_dot)
+from repro.kernels.online_dot.ref import online_dot_batch_ref, tree_levels
+
+
+def _digits(rng, B, K, n):
+    return (rng.integers(-1, 2, size=(B, K, n)).astype(np.int32),
+            rng.integers(-1, 2, size=(B, K, n)).astype(np.int32))
+
+
+def _oracle_rows(xd, yd, cfg):
+    B, K, _ = xd.shape
+    return [oracle_dot([[int(v) for v in xd[b, i]] for i in range(K)],
+                       [[int(v) for v in yd[b, i]] for i in range(K)], cfg)
+            for b in range(B)]
+
+
+class TestFusedKernel:
+    @pytest.mark.parametrize("k", [1, 2, 3, 4, 5, 8])
+    def test_small_k_vs_oracle_bitexact(self, rng, k):
+        n, B = 8, 6
+        xd, yd = _digits(rng, B, k, n)
+        cfg = OnlinePrecision(n=n)
+        z, val = online_dot(xd, yd, cfg, use_pallas=True, block_b=2)
+        assert z.shape == (B, dot_stream_length(n, k))
+        for b, r in enumerate(_oracle_rows(xd, yd, cfg)):
+            assert r.digits == [int(v) for v in np.asarray(z)[b]]
+            assert r.scale_log2 == dot_scale_log2(k)
+            np.testing.assert_allclose(val[b], r.dot_value, atol=1e-12)
+
+    @pytest.mark.parametrize("n", [16, 32])
+    @pytest.mark.parametrize("k", [16, 64])
+    def test_large_k_pallas_vs_ref(self, rng, n, k):
+        B = 4
+        xd, yd = _digits(rng, B, k, n)
+        cfg = OnlinePrecision(n=n)
+        zp, _ = online_dot(xd, yd, cfg, use_pallas=True, block_b=2)
+        with compat.enable_x64(True):
+            zr = online_dot_batch_ref(xd, yd, n=n)
+            np.testing.assert_array_equal(np.asarray(zp), np.asarray(zr))
+
+    @pytest.mark.parametrize("k", [2, 4, 7])
+    def test_full_mode_vs_oracle(self, rng, k):
+        n, B = 10, 4
+        xd, yd = _digits(rng, B, k, n)
+        cfg = OnlinePrecision(n=n, truncated=False, tail_gating=False)
+        z, _ = online_dot(xd, yd, cfg, use_pallas=True, block_b=4)
+        for b, r in enumerate(_oracle_rows(xd, yd, cfg)):
+            assert r.digits == [int(v) for v in np.asarray(z)[b]]
+
+    def test_value_accuracy_vs_exact_dot(self, rng):
+        n, k, B = 16, 8, 32
+        xd, yd = _digits(rng, B, k, n)
+        cfg = OnlinePrecision(n=n)
+        _, val = online_dot(xd, yd, cfg, use_pallas=True)
+        w = 0.5 ** np.arange(1, n + 1)
+        exact = ((xd @ w) * (yd @ w)).sum(axis=1)
+        # each lane's product carries <= 1.1 ulp truncation; tree is exact
+        assert np.max(np.abs(val - exact)) <= 1.1 * k * 2.0 ** -n
+
+    def test_ref_fallback_matches_pallas(self, rng):
+        n, k, B = 12, 4, 5
+        xd, yd = _digits(rng, B, k, n)
+        cfg = OnlinePrecision(n=n)
+        zp, vp = online_dot(xd, yd, cfg, use_pallas=True, block_b=1)
+        zr, vr = online_dot(xd, yd, cfg, use_pallas=False)
+        np.testing.assert_array_equal(np.asarray(zp), np.asarray(zr))
+        np.testing.assert_array_equal(vp, vr)
+
+    def test_int32_guard(self):
+        cfg = OnlinePrecision(n=32, truncated=False, tail_gating=False)
+        xd = np.zeros((4, 2, 32), np.int32)
+        from repro.kernels.online_dot.kernel import online_dot_pallas
+        with pytest.raises(ValueError):
+            online_dot_pallas(xd, xd, n=32, truncated=False,
+                              tail_gating=False, block_b=4)
+
+    def test_stream_geometry(self):
+        assert tree_levels(1) == 0
+        assert tree_levels(2) == 1
+        assert tree_levels(3) == 2
+        assert tree_levels(256) == 8
+        assert dot_stream_length(8, 1) == 8
+        assert dot_stream_length(16, 8) == 22
+        assert decode_stream(np.array([[1, 0, -1]]))[0] == 0.5 - 0.125
+
+
+class TestCompat:
+    """compat.py on the installed JAX version (whatever it is)."""
+
+    def test_version_tuple(self):
+        v = compat.jax_version()
+        assert len(v) == 3 and all(isinstance(p, int) for p in v)
+
+    def test_make_abstract_mesh(self):
+        m = compat.make_abstract_mesh((16, 16), ("data", "model"))
+        assert tuple(m.axis_names) == ("data", "model")
+        assert tuple(m.axis_sizes) == (16, 16)
+        with pytest.raises(ValueError):
+            compat.make_abstract_mesh((16,), ("data", "model"))
+
+    def test_enable_x64_scope(self):
+        with compat.enable_x64(True):
+            assert jnp.arange(2, dtype=jnp.int64).dtype == jnp.int64
+
+    def test_use_mesh_context(self):
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        with compat.use_mesh(mesh):
+            assert float(jnp.ones((2, 2)).sum()) == 4.0
+
+    def test_shardings_for_resolves_specs(self):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        tree = {"a": P("data"), "b": None, "c": [P(), P(None, "model")]}
+        out = compat.shardings_for(mesh, tree)
+        assert isinstance(out["a"], NamedSharding)
+        assert out["a"].spec == P("data")
+        assert out["b"] is None
+        assert all(isinstance(s, NamedSharding) for s in out["c"])

@@ -2,8 +2,7 @@
 import numpy as np
 import pytest
 
-import jax
-
+from repro.compat import enable_x64
 from repro.core.online_mul import online_multiply
 from repro.core.precision import OnlinePrecision
 from repro.kernels.online_mul.ops import online_mul
@@ -27,7 +26,7 @@ def test_pallas_equals_ref(rng, n, B):
     xd, yd = _digits(rng, B, n)
     cfg = OnlinePrecision(n=n)
     zp, Zp = online_mul(xd, yd, cfg, use_pallas=True, block_b=64)
-    with jax.enable_x64(True):
+    with enable_x64(True):
         zr, Zr = online_mul_batch_ref(xd, yd, n=n)
         np.testing.assert_array_equal(np.asarray(zp), np.asarray(zr))
         np.testing.assert_array_equal(np.asarray(Zp), np.asarray(Zr))
@@ -38,7 +37,7 @@ def test_pallas_full_mode(rng, n):
     xd, yd = _digits(rng, 128, n)
     cfg = OnlinePrecision(n=n, truncated=False, tail_gating=False)
     zp, Zp = online_mul(xd, yd, cfg, use_pallas=True, block_b=128)
-    with jax.enable_x64(True):
+    with enable_x64(True):
         zr, Zr = online_mul_batch_ref(
             xd, yd, n=n, truncated=False, tail_gating=False)
         np.testing.assert_array_equal(np.asarray(zp), np.asarray(zr))

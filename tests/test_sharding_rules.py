@@ -10,20 +10,18 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.compat import make_abstract_mesh
 from repro.configs import get_config, list_archs
 from repro.distributed.sharding import Sharder, _path_str
 from repro.models.model import Model
 
-try:
-    AbstractMesh = jax.sharding.AbstractMesh
-except AttributeError:  # pragma: no cover
-    AbstractMesh = None
+AbstractMesh = getattr(jax.sharding, "AbstractMesh", None)
 
 
 def _mesh(multi_pod=False):
     if multi_pod:
-        return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
-    return AbstractMesh((16, 16), ("data", "model"))
+        return make_abstract_mesh((2, 16, 16), ("pod", "data", "model"))
+    return make_abstract_mesh((16, 16), ("data", "model"))
 
 
 def _axis_size(mesh, name):
