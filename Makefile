@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify bench test
+.PHONY: verify bench bench-json test
 
 # Tier-1 verification (same command as ROADMAP.md / CI)
 verify:
@@ -13,3 +13,7 @@ test:
 
 bench:
 	$(PYTHON) -m benchmarks.run
+
+# Machine-readable perf trajectory: BENCH_<name>.json per bench
+bench-json:
+	$(PYTHON) -m benchmarks.run --json-dir results/bench

@@ -1,15 +1,21 @@
 """Benchmark harness — one function per paper table + framework benches.
 
 Prints ``name,us_per_call,derived`` CSV rows and a human-readable summary
-per table. Heavy benches keep sizes CPU-friendly; the dry-run/roofline
-artifacts cover the production scale.
+per table. Every bench also returns machine-readable rows
+``{op, n, k, us, ulp, derived}`` (``ulp``/``k`` null where not
+applicable); with ``--json-dir DIR`` the harness writes one
+``BENCH_<name>.json`` per bench there, so the perf/accuracy trajectory is
+tracked across PRs (``make bench-json``). Heavy benches keep sizes
+CPU-friendly; the dry-run/roofline artifacts cover the production scale.
 
-  PYTHONPATH=src python -m benchmarks.run [--only table1,table3]
+  PYTHONPATH=src python -m benchmarks.run [--only table1,table3] \
+      [--json-dir results/bench]
 """
 from __future__ import annotations
 
 import argparse
-import sys
+import json
+import os
 import time
 
 import numpy as np
@@ -24,6 +30,11 @@ def _timeit(fn, *args, repeat=3, number=1):
             out = fn(*args)
         best = min(best, (time.perf_counter() - t0) / number)
     return best * 1e6, out
+
+
+def _row(op, *, n=None, k=None, us=0.0, ulp=None, derived=None):
+    return {"op": op, "n": n, "k": k, "us": round(us, 2), "ulp": ulp,
+            "derived": derived}
 
 
 def table1_area_power():
@@ -49,9 +60,11 @@ def table1_area_power():
             psave = 100 * (1 - p["reduced"][n] / p["full"][n])
             print(f"{n:>3} {metric:>8} {fu:>10.0f} {re_:>10.0f} "
                   f"{save:>7.1f} {psave:>11.1f}")
-            rows.append((f"table1/{metric}/n{n}", us, save))
-    for name, us, save in rows:
-        print(f"{name},{us:.1f},{save:.2f}")
+            rows.append(_row(f"table1/{metric}", n=n, us=us,
+                             derived=round(save, 2)))
+    for r in rows:
+        print(f"{r['op']}/n{r['n']},{r['us']:.1f},{r['derived']:.2f}")
+    return rows
 
 
 def table2_multiplier_comparison():
@@ -72,11 +85,14 @@ def table2_multiplier_comparison():
     }
     print(f"{'design':>22} {'latches':>8} {'area':>9} {'power':>10} "
           f"{'paper(latch/area/power)':>26}")
+    rows = []
     for name, c in designs.items():
         p = PAPER_TABLE2[name]
         print(f"{name:>22} {c.latches:>8} {c.area:>9.0f} {c.power:>10.0f} "
               f"{p['latches']:>8}/{p['area']:>8.1f}/{p['power']:>8.1f}")
         print(f"table2/{name},0.0,{c.area:.2f}")
+        rows.append(_row(f"table2/{name}", n=8, derived=round(c.area, 2)))
+    return rows
 
 
 def table3_cycles():
@@ -89,6 +105,7 @@ def table3_cycles():
     print("\n== Table III: clock cycles for k=8 vector stream ==")
     print(f"{'n':>3} {'SP(n+1)k':>9} {'array nk':>9} {'online':>7} "
           f"{'pipelined':>10} {'simulated':>10}")
+    rows = []
     for n in (8, 16, 24, 32):
         pairs = [([int(d) for d in rng.integers(-1, 2, n)],
                   [int(d) for d in rng.integers(-1, 2, n)]) for _ in range(k)]
@@ -98,6 +115,8 @@ def table3_cycles():
         assert run.cycles == pl
         print(f"{n:>3} {sp:>9} {ar:>9} {ol:>7} {pl:>10} {run.cycles:>10}")
         print(f"table3/n{n},{us:.1f},{run.cycles}")
+        rows.append(_row("table3", n=n, k=k, us=us, derived=run.cycles))
+    return rows
 
 
 def error_profile():
@@ -109,6 +128,7 @@ def error_profile():
     print("\n== Error profile: |z - x*y| in output ulp (randomized) ==")
     print(f"{'n':>3} {'p(Eq.8)':>8} {'full':>7} {'truncated':>10} "
           f"{'trunc+tail(G=2)':>16}")
+    rows = []
     for n in (8, 16, 24, 32):
         errs = {}
         for label, cfg in (
@@ -127,6 +147,8 @@ def error_profile():
         print(f"{n:>3} {reduced_precision(n):>8} {errs['full']:>7.3f} "
               f"{errs['trunc']:>10.3f} {errs['tail']:>16.3f}")
         print(f"error_profile/n{n},0.0,{errs['tail']:.4f}")
+        rows.append(_row("error_profile", n=n, ulp=round(errs["tail"], 4)))
+    return rows
 
 
 def tpmm_bench():
@@ -138,6 +160,7 @@ def tpmm_bench():
     print("\n== tpmm: plane-matmul savings vs delivered precision ==")
     print(f"{'n_bits':>6} {'planes':>7} {'pairs':>11} {'save%':>7} "
           f"{'rel_err':>9} {'us':>9}")
+    rows = []
     for nb in (8, 16, 24, 32):
         dim = 256 if nb <= 16 else 128  # n=24/32 run many plane pairs
         a = rng.standard_normal((dim, dim)).astype(np.float32)
@@ -145,10 +168,12 @@ def tpmm_bench():
         exact = a @ b
         cm = tpmm_cost_model(nb)
         pairs = f"{cm['pair_matmuls_truncated']}/{cm['pair_matmuls_full']}"
-        if nb * 1 > 28:  # int32 quantizer limit; f32 inputs cap at 24 bits
+        if nb > 28:  # int32 quantizer limit; f32 inputs cap at 24 bits
             print(f"{nb:>6} {cm['planes']:>7} {pairs:>11} "
                   f"{cm['mxu_savings_pct']:>7.1f} {'(cost model)':>9} {'-':>9}")
             print(f"tpmm/n{nb},0.0,{cm['mxu_savings_pct']:.2f}")
+            rows.append(_row("tpmm", n=nb, k=dim,
+                             derived=round(cm["mxu_savings_pct"], 2)))
             continue
         fn = lambda: tpmm(jnp.asarray(a), jnp.asarray(b), n_bits=nb,
                           use_pallas=False)
@@ -158,6 +183,9 @@ def tpmm_bench():
         print(f"{nb:>6} {cm['planes']:>7} {pairs:>11} "
               f"{cm['mxu_savings_pct']:>7.1f} {rel:>9.2e} {us:>9.1f}")
         print(f"tpmm/n{nb},{us:.1f},{cm['mxu_savings_pct']:.2f}")
+        rows.append(_row("tpmm", n=nb, k=dim, us=us, ulp=rel,
+                         derived=round(cm["mxu_savings_pct"], 2)))
+    return rows
 
 
 def online_dot_bench():
@@ -171,6 +199,7 @@ def online_dot_bench():
     print("\n== online_dot: fused array kernel (B=8 rows) ==")
     print(f"{'k':>4} {'n':>3} {'stream':>7} {'us':>10} {'max_ulp':>9} "
           f"{'ulp_bound':>10}")
+    rows = []
     for k in (8, 64, 256):
         for n in (8, 16, 32):
             xd = rng.integers(-1, 2, size=(B, k, n)).astype(np.int32)
@@ -185,6 +214,46 @@ def online_dot_bench():
             print(f"{k:>4} {n:>3} {dot_stream_length(n, k):>7} {us:>10.1f} "
                   f"{ulp:>9.3f} {1.1 * k:>10.1f}")
             print(f"online_dot/k{k}_n{n},{us:.1f},{ulp:.4f}")
+            rows.append(_row("online_dot", n=n, k=k, us=us,
+                             ulp=round(ulp, 4)))
+    return rows
+
+
+def olm_matmul_bench():
+    """DotEngine's olm lowering (quantize -> K-lane dot -> stream decode)
+    on the pure-jnp reference path — the engine's in-model default
+    (use_pallas=False), bit-identical to the fused kernel; see
+    online_dot_bench for fused Pallas kernel timings. Reports wall time,
+    worst-case |error| vs the exact f32 matmul, and how much of the
+    documented olm_error_bound budget that error uses (of_bound <= 1.0
+    is the tested guarantee)."""
+    import jax.numpy as jnp
+    from repro.kernels.online_dot.matmul import olm_matmul, olm_error_bound
+    rng = np.random.default_rng(5)
+    print("\n== olm_matmul: model GEMMs through the array lowering "
+          "(jnp reference path) ==")
+    print(f"{'MxKxN':>12} {'n':>3} {'us':>10} {'max_err':>10} "
+          f"{'of_bound':>9}")
+    rows = []
+    for (M, K, N) in ((8, 16, 8), (8, 64, 8)):
+        a = rng.standard_normal((M, K)).astype(np.float32)
+        b = rng.standard_normal((K, N)).astype(np.float32)
+        exact = a @ b
+        for nb in (8, 16):
+            fn = lambda: olm_matmul(jnp.asarray(a), jnp.asarray(b),
+                                    n_bits=nb, use_pallas=False)
+            fn()  # compile
+            us, got = _timeit(fn, repeat=2)
+            err = np.abs(np.asarray(got) - exact)
+            bound = np.asarray(olm_error_bound(jnp.asarray(a),
+                                               jnp.asarray(b), n_bits=nb))
+            used = float((err / bound).max())
+            print(f"{M:>4}x{K:>3}x{N:>3} {nb:>3} {us:>10.1f} "
+                  f"{err.max():>10.2e} {used:>9.3f}")
+            print(f"olm_matmul/{M}x{K}x{N}_n{nb},{us:.1f},{used:.4f}")
+            rows.append(_row("olm_matmul", n=nb, k=K, us=us,
+                             ulp=round(used, 4)))
+    return rows
 
 
 def pipeline_activity():
@@ -208,21 +277,23 @@ def pipeline_activity():
           f"({flip_save:.1f}% saved)")
     print(f"fig7/activity,0.0,{act_save:.2f}")
     print(f"fig7/flips,0.0,{flip_save:.2f}")
+    return [_row("fig7/activity", n=n, k=k, derived=round(act_save, 2)),
+            _row("fig7/flips", n=n, k=k, derived=round(flip_save, 2))]
 
 
 def roofline_report():
     """Aggregate dry-run JSONs into the §Roofline table (if present)."""
-    import json
     from pathlib import Path
     d = Path("results/dryrun")
     files = sorted(d.glob("*.json")) if d.exists() else []
     if not files:
         print("\n== Roofline: no dry-run artifacts found (run "
               "repro.launch.dryrun) ==")
-        return
+        return []
     print("\n== Roofline terms from dry-run (seconds; dominant term) ==")
     print(f"{'cell':>52} {'compute':>9} {'memory':>9} {'collective':>11} "
           f"{'dominant':>12}")
+    rows = []
     for f in files:
         r = json.loads(f.read_text())
         if r.get("skipped"):
@@ -231,6 +302,8 @@ def roofline_report():
         name = f"{r['arch']}|{r['shape']}|{r['mesh']}"
         print(f"{name:>52} {t['compute_s']:>9.4f} {t['memory_s']:>9.4f} "
               f"{t['collective_s']:>11.4f} {t['dominant']:>12}")
+        rows.append(_row(f"roofline/{name}", derived=t["dominant"]))
+    return rows
 
 
 BENCHES = {
@@ -240,6 +313,7 @@ BENCHES = {
     "error_profile": error_profile,
     "tpmm": tpmm_bench,
     "online_dot": online_dot_bench,
+    "olm_matmul": olm_matmul_bench,
     "fig7": pipeline_activity,
     "roofline": roofline_report,
 }
@@ -249,10 +323,19 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated bench names")
+    ap.add_argument("--json-dir", default=None,
+                    help="write BENCH_<name>.json per bench into this dir")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(BENCHES)
+    if args.json_dir:
+        os.makedirs(args.json_dir, exist_ok=True)
     for name in names:
-        BENCHES[name]()
+        rows = BENCHES[name]() or []
+        if args.json_dir:
+            path = os.path.join(args.json_dir, f"BENCH_{name}.json")
+            with open(path, "w") as f:
+                json.dump({"bench": name, "rows": rows}, f, indent=1)
+            print(f"wrote {path} ({len(rows)} rows)")
 
 
 if __name__ == "__main__":

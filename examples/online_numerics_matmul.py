@@ -1,8 +1,9 @@
-"""The paper's technique as model numerics: truncated-precision matmul
-(tpmm) vs exact on a real transformer layer forward pass, and the fused
-digit-serial inner-product array (online_dot) computing a matmul tile the
-way the paper's PE array would — product digits streaming into an online
-adder tree, never a full-precision intermediate.
+"""The paper's technique as model numerics, selected through one DotEngine
+dispatch surface: truncated-precision digit-plane matmul (tpmm) vs exact
+on a real transformer layer forward pass, and the fused digit-serial
+inner-product array (olm) computing float matmul tiles the way the
+paper's PE array would — product digits streaming into an online adder
+tree, never a full-precision intermediate.
 
   PYTHONPATH=src python examples/online_numerics_matmul.py
 """
@@ -12,20 +13,26 @@ import numpy as np
 
 from repro.configs import smoke_config
 from repro.core.numerics import DotEngine
-from repro.core.precision import OnlinePrecision
-from repro.core.sd import frac_to_digits
-from repro.kernels.online_dot.ops import dot_scale_log2, online_dot
+from repro.kernels.online_dot.matmul import (olm_error_bound, olm_matmul,
+                                             olm_matmul_ref)
 from repro.kernels.tpmm.ops import tpmm, tpmm_cost_model
+from repro.models import layers
 from repro.models.model import Model
 
 
 def main():
-    # 1) raw op: error/cost tradeoff
+    # 0) the dispatch surface: every mode is a registered DotMode
+    print("DotEngine mode registry (error / cost trade-offs):")
+    for m in DotEngine.mode_table():
+        print(f"  {m.name:>7}: {m.summary}")
+        print(f"  {'':>7}  error: {m.error}; cost: {m.cost}")
+
+    # 1) raw tpmm op: error/cost tradeoff
     rng = np.random.default_rng(0)
     a = rng.standard_normal((256, 512)).astype(np.float32)
     b = rng.standard_normal((512, 256)).astype(np.float32)
     exact = a @ b
-    print("tpmm error / MXU-op savings (paper Eq. 8 transposed to planes):")
+    print("\ntpmm error / MXU-op savings (paper Eq. 8 transposed to planes):")
     for nb in (8, 16, 24):
         got = np.asarray(tpmm(jnp.asarray(a), jnp.asarray(b), n_bits=nb,
                               use_pallas=False))
@@ -35,27 +42,40 @@ def main():
               f"{cm['pair_matmuls_truncated']}/{cm['pair_matmuls_full']} "
               f"plane-matmuls ({cm['mxu_savings_pct']:.1f}% saved)")
 
-    # 2) fused inner-product array: an (M, N) matmul tile as B = M*N
-    #    digit-serial dot products of length K, one kernel call
-    n, K, M, N = 16, 16, 4, 4
-    at = rng.uniform(-0.9, 0.9, (M, K)).astype(np.float64)
-    bt = rng.uniform(-0.9, 0.9, (K, N)).astype(np.float64)
-    enc = lambda t: np.array([frac_to_digits(float(v), n) for v in t.ravel()],
-                             np.int32).reshape(*t.shape, n)
-    ad, bd = enc(at), enc(bt.T)
-    xg = np.broadcast_to(ad[:, None], (M, N, K, n)).reshape(M * N, K, n)
-    yg = np.broadcast_to(bd[None, :], (M, N, K, n)).reshape(M * N, K, n)
-    _, dots = online_dot(np.ascontiguousarray(xg), np.ascontiguousarray(yg),
-                         OnlinePrecision(n=n), use_pallas=True, block_b=8)
-    got = dots.reshape(M, N)
-    err = np.abs(got - at @ bt).max()
-    print(f"\nonline_dot array: {M}x{N} tile, K={K}, n={n} digits "
-          f"(tree scale 2^-{dot_scale_log2(K)} folded out): "
-          f"max |err| = {err:.2e} "
-          f"(quantize+truncation bound ~{(K * (2 + 1.1)) * 2.0 ** -n:.2e})")
+    # 2) fused inner-product array as a float matmul: the olm front-end
+    #    K-tiles, quantizes to signed-digit grids, runs the fused kernel
+    #    (K multiplier lanes + online adder tree, one Pallas call) and
+    #    decodes the digit streams — bit-identical to the pure-jnp oracle
+    n, M, K, N = 16, 4, 24, 4
+    at = rng.standard_normal((M, K)).astype(np.float32)
+    bt = rng.standard_normal((K, N)).astype(np.float32)
+    got_p = np.asarray(olm_matmul(jnp.asarray(at), jnp.asarray(bt), n_bits=n,
+                                  use_pallas=True, block_b=8))
+    got_r = np.asarray(olm_matmul_ref(jnp.asarray(at), jnp.asarray(bt),
+                                      n_bits=n))
+    bound = np.asarray(olm_error_bound(jnp.asarray(at), jnp.asarray(bt),
+                                       n_bits=n))
+    err = np.abs(got_p - at @ bt)
+    print(f"\nolm_matmul: {M}x{K}x{N} tile, n={n} digits: "
+          f"pallas == oracle bitwise: {np.array_equal(got_p, got_r)}, "
+          f"max |err| = {err.max():.2e} "
+          f"(documented bound {bound.max():.2e}, "
+          f"{(err / bound).max() * 100:.0f}% used)")
 
-    # 3) whole-model forward under tpmm numerics
+    # 3) end-to-end MLP forward through the array numerics
     cfg = smoke_config("internlm2_1_8b")
+    key = jax.random.PRNGKey(0)
+    p = layers.mlp_init(key, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 4, cfg.d_model),
+                          jnp.float32)
+    y_native = np.asarray(layers.mlp_apply(p, cfg, x,
+                                           DotEngine(mode="native")))
+    y_olm = np.asarray(layers.mlp_apply(p, cfg, x, DotEngine(mode="olm16")))
+    print(f"\nMLP forward (d={cfg.d_model}, ff={cfg.d_ff}), native vs olm16: "
+          f"max |dy| = {np.abs(y_olm - y_native).max():.2e} "
+          f"(rel {np.abs(y_olm - y_native).max() / np.abs(y_native).max():.2e})")
+
+    # 4) whole-model forward under tpmm numerics
     m_exact = Model(cfg, DotEngine(mode="native"))
     m_tp = Model(cfg, DotEngine(mode="tpmm16", use_pallas=False))
     params = m_exact.init(jax.random.PRNGKey(0))

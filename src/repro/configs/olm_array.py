@@ -1,5 +1,8 @@
 """The paper's own configuration: pipelined online-multiplier inner-product
-arrays at n = 8/16/24/32 bits (delta=3, t=2, Eq.8 truncation, G=2 tail)."""
+arrays at n = 8/16/24/32 bits (delta=3, t=2, Eq.8 truncation, G=2 tail),
+plus the DotEngine wiring that lets a model select those arrays as its
+matmul numerics (mode "olm8" / "olm16")."""
+from repro.core.numerics import DotEngine
 from repro.core.precision import OnlinePrecision
 
 ARRAY_PRECISIONS = {n: OnlinePrecision(n=n) for n in (8, 16, 24, 32)}
@@ -7,3 +10,18 @@ FULL_PRECISIONS = {
     n: OnlinePrecision(n=n, truncated=False, tail_gating=False)
     for n in (8, 16, 24, 32)
 }
+
+# Precisions whose matmul lowering is registered as a DotEngine mode
+# (n > 16 streams exceed the float32-exact decode window and the int32
+# reference path; they stay digit-grid-API only for now).
+MATMUL_MODES = {8: "olm8", 16: "olm16"}
+
+
+def engine_for(n_bits: int, **overrides) -> DotEngine:
+    """DotEngine running every model GEMM through the n_bits-digit fused
+    inner-product array (kernels/online_dot/matmul)."""
+    if n_bits not in MATMUL_MODES:
+        raise ValueError(
+            f"no olm matmul mode at n_bits={n_bits}; "
+            f"available: {sorted(MATMUL_MODES)}")
+    return DotEngine(mode=MATMUL_MODES[n_bits], **overrides)

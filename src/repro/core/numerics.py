@@ -1,48 +1,171 @@
 """DotEngine: pluggable matmul numerics for the whole model stack.
 
-Modes:
-  native  — dot in the model's compute dtype (bf16 on TPU); baseline.
+A mode registry replaces the old string-if chain: every numerics choice
+is a registered `DotMode` carrying its implementation plus the
+error/cost documentation the README mode table and benchmarks surface.
+
+Registered modes:
+
+  native   — dot in the model's compute dtype (bf16 on TPU); baseline.
   tpmm16 / tpmm8 — the paper's truncated-precision inner products
     (kernels/tpmm): operands decomposed into digit planes, plane pairs
     beyond the significance cutoff never computed. n_bits = 16 / 8.
+  olm16 / olm8 — the paper's own inner-product array (kernels/online_dot
+    via its matmul front-end): K-lane online multipliers feeding a
+    digit-serial online adder tree, matmul tiles quantized to signed-
+    digit grids, digit streams decoded and accumulated in f32. The
+    fused kernel path is bit-identical to the pure-jnp oracle and
+    bounded by kernels/online_dot/matmul.olm_error_bound.
 
 The engine is threaded through every dense, attention and MoE matmul, so
 the paper's technique is a first-class numerics choice per model config,
 not a bolted-on demo. einsum falls back to native numerics for the
 attention contractions (their operands are activations on both sides;
-tpmm targets the weight-bearing GEMMs, which dominate FLOPs).
+the digit modes target the weight-bearing GEMMs, which dominate FLOPs).
+
+Weight dtype: only the `native` mode casts weights to the activation
+compute dtype. The digit modes quantize straight from the stored dtype —
+fp32 master weights under training keep their full mantissa into the
+digit/plane decomposition instead of being rounded through bf16 first.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["DotEngine"]
+__all__ = ["DotEngine", "DotMode", "register_mode"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DotMode:
+    """One registered numerics mode: implementation + trade-off docs."""
+    name: str
+    summary: str
+    error: str     # documented accuracy vs the exact f32 matmul
+    cost: str      # documented compute/area trade-off
+    fn: Callable[["DotEngine", jax.Array, jax.Array], jax.Array]
+
+
+_MODES: Dict[str, DotMode] = {}
+
+
+def register_mode(name: str, *, summary: str, error: str, cost: str):
+    """Register a DotEngine mode. The decorated function receives
+    (engine, x (..., K), w (K, N)) and returns (..., N). Names are
+    single-assignment: silently swapping the implementation under an
+    existing mode would change every model built with it."""
+    def deco(fn):
+        if name in _MODES:
+            raise ValueError(f"DotEngine mode {name!r} already registered")
+        _MODES[name] = DotMode(name, summary, error, cost, fn)
+        return fn
+    return deco
+
+
+@register_mode(
+    "native",
+    summary="einsum in the model compute dtype (bf16 on TPU)",
+    error="exact at compute dtype (bf16 rounding only)",
+    cost="full-precision MXU matmul; baseline")
+def _native_dot(eng: "DotEngine", x: jax.Array, w: jax.Array) -> jax.Array:
+    return jnp.einsum("...k,kn->...n", x, w.astype(x.dtype))
+
+
+def _lowered_dot(eng: "DotEngine", x: jax.Array, w: jax.Array,
+                 matmul_fn, n_bits: int) -> jax.Array:
+    """Shared digit-mode lowering: flatten the lead axes onto a 2-D tile,
+    hand the weights to the kernel front-end in their stored precision
+    (f32 — never pre-rounded through the activation dtype), and restore
+    the activation shape/dtype on the way out."""
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    out = matmul_fn(x.reshape(-1, K), w.astype(jnp.float32), n_bits=n_bits,
+                    use_pallas=eng.use_pallas, interpret=eng.interpret)
+    return out.reshape(*lead, w.shape[-1]).astype(x.dtype)
+
+
+def _tpmm_dot(eng: "DotEngine", x: jax.Array, w: jax.Array,
+              n_bits: int) -> jax.Array:
+    from repro.kernels.tpmm.ops import tpmm
+    return _lowered_dot(eng, x, w, tpmm, n_bits)
+
+
+@register_mode(
+    "tpmm16",
+    summary="truncated digit-plane matmul, 16-bit significance",
+    error="~6e-4 relative (n-bit plane truncation, tested)",
+    cost="10/16 plane-pair MXU matmuls (37.5% MXU ops saved)")
+def _tpmm16(eng, x, w):
+    return _tpmm_dot(eng, x, w, 16)
+
+
+@register_mode(
+    "tpmm8",
+    summary="truncated digit-plane matmul, 8-bit significance",
+    error="~8e-2 relative (n-bit plane truncation, tested)",
+    cost="3/4 plane-pair MXU matmuls (25% MXU ops saved)")
+def _tpmm8(eng, x, w):
+    return _tpmm_dot(eng, x, w, 8)
+
+
+def _olm_dot(eng: "DotEngine", x: jax.Array, w: jax.Array,
+             n_bits: int) -> jax.Array:
+    from repro.kernels.online_dot.matmul import olm_matmul
+    return _lowered_dot(eng, x, w, olm_matmul, n_bits)
+
+
+@register_mode(
+    "olm16",
+    summary="fused online inner-product array, 16-digit operands",
+    error="<= k_tile * 3.1 ulp @ 2^-16 per K-tile (olm_error_bound)",
+    cost="Eq.8-truncated digit-serial array; 35-41% slice-activity saved")
+def _olm16(eng, x, w):
+    return _olm_dot(eng, x, w, 16)
+
+
+@register_mode(
+    "olm8",
+    summary="fused online inner-product array, 8-digit operands",
+    error="<= k_tile * 3.1 ulp @ 2^-8 per K-tile (olm_error_bound)",
+    cost="Eq.8-truncated digit-serial array; 35-41% slice-activity saved")
+def _olm8(eng, x, w):
+    return _olm_dot(eng, x, w, 8)
 
 
 @dataclasses.dataclass(frozen=True)
 class DotEngine:
-    mode: str = "native"          # native | tpmm16 | tpmm8
+    mode: str = "native"          # any registered mode, see DotEngine.modes()
     interpret: bool = True        # Pallas interpret mode (CPU container)
     use_pallas: bool = False      # jnp oracle by default inside big models
 
+    def __post_init__(self):
+        if self.mode not in _MODES:
+            raise ValueError(
+                f"unknown DotEngine mode {self.mode!r}; registered: "
+                f"{', '.join(sorted(_MODES))}")
+
+    @staticmethod
+    def modes() -> Tuple[str, ...]:
+        """Names of all registered modes."""
+        return tuple(sorted(_MODES))
+
+    @staticmethod
+    def mode_table() -> Tuple[DotMode, ...]:
+        """Registered modes with their error/cost documentation (the
+        source of the README mode table)."""
+        return tuple(_MODES[m] for m in sorted(_MODES))
+
     def dot(self, x: jax.Array, w: jax.Array) -> jax.Array:
-        """x (..., K) @ w (K, N) -> (..., N). Weights (stored in the param
-        dtype, fp32 master copies under training) are cast to the
-        activation compute dtype at use."""
-        w = w.astype(x.dtype)
-        if self.mode == "native":
-            return jnp.einsum("...k,kn->...n", x, w)
-        n_bits = 16 if self.mode == "tpmm16" else 8
-        from repro.kernels.tpmm.ops import tpmm
-        lead = x.shape[:-1]
-        K = x.shape[-1]
-        x2 = x.reshape(-1, K)
-        out = tpmm(x2, w.astype(jnp.float32), n_bits=n_bits,
-                   use_pallas=self.use_pallas, interpret=self.interpret)
-        return out.reshape(*lead, w.shape[-1]).astype(x.dtype)
+        """x (..., K) @ w (K, N) -> (..., N), in this engine's numerics.
+
+        Weights stay in their stored dtype until the mode decides: native
+        casts to the activation compute dtype; the digit modes quantize
+        from the stored precision directly (fp32 master copies are never
+        pre-rounded through bf16)."""
+        return _MODES[self.mode].fn(self, x, w)
 
     def einsum(self, spec: str, a: jax.Array, b: jax.Array) -> jax.Array:
         return jnp.einsum(spec, a, b)

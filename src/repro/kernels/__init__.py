@@ -1,12 +1,20 @@
 """Custom compute kernels for the paper's hot spots.
 
 Three families, each `kernel.py` (Pallas) + `ref.py` (jnp oracle) +
-`ops.py` (dispatch), sharing the int32-fit / padding / digit-decoding
-helpers in `common.py`:
+`ops.py` (dispatch), sharing the int32-fit / padding / quantize / decode
+plumbing in `common.py`:
 
   online_mul — batched radix-2 online-multiplier digit recurrence
   online_dot — fused inner-product array: K multiplier lanes feeding a
-               digit-serial online adder tree (the paper's target workload)
+               digit-serial online adder tree (the paper's target
+               workload), plus `matmul.py`, the float-matmul front-end
+               that K-tiles, signed-digit-quantizes and stream-decodes
+               model GEMM tiles through the fused kernel
   tpmm       — truncated digit-plane matmul (the Eq. 8 truncation law
                transposed to MXU plane products)
+
+All of them are reachable as model numerics through one dispatch
+surface: `core.numerics.DotEngine` registers `tpmm{8,16}` (plane-pair
+path) and `olm{8,16}` (fused-array path) alongside `native`, so every
+transformer / MoE / recurrent matmul can select any family per layer.
 """

@@ -1,9 +1,13 @@
-"""Shared dispatch and decoding helpers for the digit-serial kernel families.
+"""Shared dispatch, quantization and decoding plumbing for the digit-serial
+kernel families.
 
-`online_mul`, `online_dot`, and `tpmm` all make the same three decisions:
-does the configuration fit the Pallas int32 datapath, how to pad operands
-to the kernel's block tiling, and how to decode digit matrices back to
-host integers/floats. This module is the single home for that logic.
+`online_mul`, `online_dot`, and `tpmm` all make the same decisions: does
+the configuration fit the Pallas int32 datapath, how to pad operands to
+the kernel's block tiling, how to map floats onto signed-digit / digit-
+plane grids (power-of-two row scales keep every decomposition bit-exact),
+and how to decode digit matrices back to host integers/floats. This
+module is the single home for that logic; the per-family `ops.py` files
+only choose block shapes.
 """
 from __future__ import annotations
 
@@ -15,9 +19,13 @@ from repro.core.precision import OnlinePrecision
 
 __all__ = [
     "fits_int32",
+    "resolve_use_pallas",
     "pad_to_multiple",
+    "pow2_scale",
+    "sd_quantize",
     "decode_digits",
     "decode_stream",
+    "decode_stream_jnp",
 ]
 
 
@@ -29,6 +37,17 @@ def fits_int32(cfg: OnlinePrecision) -> bool:
     return int(schedule_arrays(cfg).max()) + 3 <= 31
 
 
+def resolve_use_pallas(cfg: OnlinePrecision, use_pallas: bool | None) -> bool:
+    """The dispatch predicate shared by every digit-serial kernel family:
+    run the Pallas kernel iff the caller allows it (None = auto) AND the
+    configuration fits the int32 datapath; otherwise the int64 jnp
+    reference."""
+    fits = fits_int32(cfg)
+    if use_pallas is None:
+        return fits
+    return use_pallas and fits
+
+
 def pad_to_multiple(x: jax.Array, mult: int, axis: int) -> jax.Array:
     """Zero-pad `x` along `axis` up to the next multiple of `mult`."""
     pad = (-x.shape[axis]) % mult
@@ -37,6 +56,40 @@ def pad_to_multiple(x: jax.Array, mult: int, axis: int) -> jax.Array:
     widths = [(0, 0)] * x.ndim
     widths[axis] = (0, pad)
     return jnp.pad(x, widths)
+
+
+def pow2_scale(a: jax.Array, axis: int) -> jax.Array:
+    """Power-of-two scale per slice along `axis` (kept as size 1), at
+    least 2 * max|a| (exactly 2 * max|a| when the max is itself a power
+    of two, and marginally below under f32 log2 rounding), so u = a /
+    scale lies in [-1/2, 1/2] up to that rounding — consumers must
+    tolerate the closed endpoints. The power-of-two constraint makes
+    every downstream digit decomposition bit-exact, mirroring the SD
+    representation in the hardware design."""
+    amax = jnp.max(jnp.abs(a), axis=axis, keepdims=True)
+    scale = jnp.exp2(jnp.ceil(jnp.log2(jnp.maximum(amax, 1e-30))) + 1.0)
+    return scale.astype(jnp.float32)
+
+
+def sd_quantize(a: jax.Array, *, n: int, axis: int = -1
+                ) -> tuple[jax.Array, jax.Array]:
+    """Quantize float slices to MSDF signed-digit grids (vectorized
+    core/sd.frac_to_digits: sign-magnitude binary digits with the sign
+    applied to every digit — always a valid SD representation).
+
+    Returns:
+      digits: (*a.shape, n) int32 in {-1, 0, 1}, appended digit axis,
+        encoding  a ~= scale * sum_i digits_i 2^-i  elementwise with
+        |error| <= scale * 2^-(n+1) (round-to-nearest at 2^-n).
+      scale: a.shape with `axis` reduced to 1; power-of-two float32.
+    """
+    a = a.astype(jnp.float32)
+    scale = pow2_scale(a, axis)
+    v = jnp.round((a / scale) * (1 << n)).astype(jnp.int32)  # |v| <= 2^(n-1)
+    sign = jnp.sign(v).astype(jnp.int32)
+    shifts = jnp.arange(n - 1, -1, -1, dtype=jnp.int32)      # digit 1..n
+    bits = (jnp.abs(v)[..., None] >> shifts) & 1
+    return sign[..., None] * bits, scale
 
 
 def decode_digits(z, n: int) -> np.ndarray:
@@ -55,3 +108,14 @@ def decode_stream(digits) -> np.ndarray:
     d = np.asarray(digits).astype(np.float64)
     w = 0.5 ** np.arange(1, d.shape[-1] + 1)
     return d @ w
+
+
+def decode_stream_jnp(digits: jax.Array) -> jax.Array:
+    """Traceable float32 form of `decode_stream`, for decode stages that
+    must stay inside jit (the matmul front-end). Exact for stream lengths
+    m <= 24 (float32 significand); both the Pallas and the reference
+    matmul paths share this function, so bit-identity between them holds
+    for any m."""
+    m = digits.shape[-1]
+    w = jnp.exp2(-jnp.arange(1, m + 1, dtype=jnp.float32))
+    return digits.astype(jnp.float32) @ w

@@ -8,8 +8,13 @@ core/inner_product.py oracle.
 
   kernel.py — fused Pallas kernel (int32 datapath, Fig. 7 schedule)
   ref.py    — int64 jnp reference + the vectorized adder-tree recurrence
-  ops.py    — dispatch (int32-fit check, block_b tiling, jnp fallback)
+  ops.py    — digit-grid dispatch (int32-fit check, block_b tiling)
+  matmul.py — float matmul front-end (K-tiling, signed-digit quantize,
+              stream decode + f32 accumulation) behind DotEngine's
+              olm8/olm16 modes
 """
+from .matmul import olm_error_bound, olm_matmul, olm_matmul_ref
 from .ops import online_dot, dot_scale_log2, dot_stream_length
 
-__all__ = ["online_dot", "dot_scale_log2", "dot_stream_length"]
+__all__ = ["online_dot", "dot_scale_log2", "dot_stream_length",
+           "olm_matmul", "olm_matmul_ref", "olm_error_bound"]

@@ -1,0 +1,165 @@
+"""Float matmul lowered through the fused online inner-product array.
+
+This is the front-end that turns the paper's centerpiece kernel into a
+model numerics engine: a float tile ``x (M, K) @ w (K, N)`` is computed
+the way the hardware array would —
+
+  1. K is tiled into chunks of ``k_tile`` lanes (the array width; the
+     adder tree reduces one chunk per kernel call).
+  2. Each chunk's rows of x and columns of w are quantized to n-digit
+     MSDF signed-digit grids with power-of-two per-row scales
+     (kernels/common.sd_quantize — shared with the tpmm plane quantizer).
+  3. The fused kernel (K multiplier lanes + online adder tree, one Pallas
+     call) emits the dot-product digit stream sum_i x_i y_i / 2^L per
+     (m, n) output element; no full-precision product intermediate exists.
+  4. Streams are decoded (kernels/common.decode_stream_jnp), the 2^L tree
+     scale and the quantization scales are folded out, and chunk partial
+     products accumulate in float32.
+
+``olm_matmul_ref`` is the pure-jnp oracle: identical tiling / quantize /
+decode plumbing around the int64 reference recurrence instead of the
+Pallas kernel. Because the kernel is bit-exact against that recurrence
+(tests/test_kernel_online_dot.py) and every other stage is shared, the
+two paths produce bit-identical float32 outputs — the property
+DotEngine's olm modes are tested against.
+
+Error vs the exact float matmul is bounded by ``olm_error_bound``: per
+lane, quantization contributes <= 1 ulp at 2^-n (two round-to-nearest
+operands) and the truncated multiplier <= 1.1 ulp (G=2 tail, measured
+<= 0.93); the adder tree is exact. The documented per-lane ledger is
+ULP_PER_LANE = 3.1 output ulp at the tile's power-of-two scale product,
+matching the k * (2 + 1.1) * 2^-n bound the array example quotes.
+
+Known cost: operand digit grids are broadcast to (M*N, k_tile, n), i.e.
+x digits are replicated N times and w digits M times. That is exactly
+the hardware's operand fan-out to the PE array; doing the reuse inside
+the kernel (one x-grid load per output row) is a ROADMAP item.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import OnlinePrecision
+from repro.kernels.common import (decode_stream_jnp, pad_to_multiple,
+                                  pow2_scale, resolve_use_pallas, sd_quantize)
+from .kernel import online_dot_pallas
+from .ref import online_dot_batch_ref, tree_levels
+
+__all__ = ["olm_matmul", "olm_matmul_ref", "olm_error_bound",
+           "DEFAULT_K_TILE", "ULP_PER_LANE"]
+
+# Array width: lanes reduced by one adder tree. 16 keeps the digit grids
+# VMEM-friendly and the stream length n + 2*ceil(log2 16) = n + 8 within
+# float32-exact decode range for n <= 16.
+DEFAULT_K_TILE = 16
+
+# Documented per-lane error ledger in output ulp at 2^-n (see module
+# docstring): 2 quantized operands + 1.1 multiplier truncation, rounded
+# up. Tests hold olm_matmul to k * ULP_PER_LANE * 2^-n per tile.
+ULP_PER_LANE = 3.1
+
+
+def _olm_cfg(n_bits: int) -> OnlinePrecision:
+    """The paper's array configuration at this output precision (delta=3,
+    t=2, Eq. 8 truncation, G=2 tail — configs/olm_array.ARRAY_PRECISIONS)."""
+    return OnlinePrecision(n=n_bits)
+
+
+def _tiles(K: int, k_tile: int) -> tuple[int, int]:
+    """(lanes per tile, tile count) for a K-deep contraction."""
+    kt = min(k_tile, K)
+    return kt, -(-K // kt)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_bits", "k_tile", "use_pallas", "block_b",
+                     "interpret"),
+)
+def olm_matmul(
+    x: jax.Array,  # (M, K) float
+    w: jax.Array,  # (K, N) float
+    *,
+    n_bits: int = 16,
+    k_tile: int = DEFAULT_K_TILE,
+    use_pallas: bool | None = None,
+    block_b: int = 8,
+    interpret: bool = True,
+) -> jax.Array:
+    """Matmul through the fused online inner-product array; (M, N) float32.
+
+    use_pallas: True = fused Pallas kernel, False = int64 jnp reference,
+    None = Pallas iff the config fits the int32 datapath. Both paths are
+    bit-identical (shared quantize/decode, bit-exact kernel).
+
+    Raises ValueError when n_bits + 2*ceil(log2 k_tile) exceeds the
+    24-digit float32-exact decode window (see decode_stream_jnp).
+    """
+    M, K = x.shape
+    K2, N = w.shape
+    if K != K2:
+        raise ValueError(f"contraction mismatch: x (M,{K}) @ w ({K2},N)")
+    cfg = _olm_cfg(n_bits)
+    use = resolve_use_pallas(cfg, use_pallas)
+    kw = dict(n=cfg.n, delta=cfg.delta, t=cfg.t, truncated=cfg.truncated,
+              tail_gating=cfg.tail_gating, tail_guard=cfg.tail_guard)
+    kt, n_tiles = _tiles(K, k_tile)
+    L = tree_levels(kt)
+    if n_bits + 2 * L > 24:
+        raise ValueError(
+            f"stream length {n_bits + 2 * L} (n_bits={n_bits}, "
+            f"k_tile={kt}) exceeds the float32-exact decode window of "
+            "24 digits; lower k_tile or n_bits (n=24/32 lowering is a "
+            "ROADMAP item)")
+    xp = pad_to_multiple(x.astype(jnp.float32), kt, 1)
+    wp = pad_to_multiple(w.astype(jnp.float32), kt, 0)
+    acc = jnp.zeros((M, N), jnp.float32)
+    for ti in range(n_tiles):
+        xt = xp[:, ti * kt:(ti + 1) * kt]              # (M, kt)
+        wt = wp[ti * kt:(ti + 1) * kt, :]              # (kt, N)
+        xd, sx = sd_quantize(xt, n=n_bits, axis=1)     # (M, kt, n), (M, 1)
+        wd, sw = sd_quantize(wt.T, n=n_bits, axis=1)   # (N, kt, n), (N, 1)
+        xg = jnp.broadcast_to(xd[:, None], (M, N, kt, n_bits))
+        yg = jnp.broadcast_to(wd[None, :], (M, N, kt, n_bits))
+        xg = xg.reshape(M * N, kt, n_bits)
+        yg = yg.reshape(M * N, kt, n_bits)
+        if use:
+            xg = pad_to_multiple(xg, block_b, 0)
+            yg = pad_to_multiple(yg, block_b, 0)
+            z = online_dot_pallas(xg, yg, block_b=block_b,
+                                  interpret=interpret, **kw)[:M * N]
+        else:
+            z = online_dot_batch_ref(xg, yg, **kw)
+        val = decode_stream_jnp(z) * jnp.float32(1 << L)   # (M*N,)
+        acc = acc + val.reshape(M, N) * (sx * sw.reshape(1, N))
+    return acc
+
+
+def olm_matmul_ref(x: jax.Array, w: jax.Array, *, n_bits: int = 16,
+                   k_tile: int = DEFAULT_K_TILE) -> jax.Array:
+    """Pure-jnp oracle for `olm_matmul`: the same tiling, quantization and
+    stream-decode plumbing around the int64 reference recurrence. The
+    Pallas path must match this bit-for-bit (tests/test_dot_engine.py)."""
+    return olm_matmul(x, w, n_bits=n_bits, k_tile=k_tile, use_pallas=False)
+
+
+def olm_error_bound(x: jax.Array, w: jax.Array, *, n_bits: int = 16,
+                    k_tile: int = DEFAULT_K_TILE) -> jax.Array:
+    """Documented per-element bound on |olm_matmul(x, w) - x @ w|, (M, N)
+    float32: per K-tile, k lanes each contribute <= ULP_PER_LANE output
+    ulp at 2^-n times the tile's power-of-two scale product."""
+    M, K = x.shape
+    _, N = w.shape
+    kt, n_tiles = _tiles(K, k_tile)
+    xp = pad_to_multiple(x.astype(jnp.float32), kt, 1)
+    wp = pad_to_multiple(w.astype(jnp.float32), kt, 0)
+    bound = jnp.zeros((M, N), jnp.float32)
+    per_lane = jnp.float32(ULP_PER_LANE * 2.0 ** -n_bits)
+    for ti in range(n_tiles):
+        sx = pow2_scale(xp[:, ti * kt:(ti + 1) * kt], 1)        # (M, 1)
+        sw = pow2_scale(wp[ti * kt:(ti + 1) * kt, :].T, 1)      # (N, 1)
+        bound = bound + kt * per_lane * (sx * sw.reshape(1, N))
+    return bound

@@ -11,7 +11,8 @@ import jax
 import numpy as np
 
 from repro.core.precision import OnlinePrecision
-from repro.kernels.common import decode_stream, fits_int32, pad_to_multiple
+from repro.kernels.common import (decode_stream, pad_to_multiple,
+                                  resolve_use_pallas)
 from .kernel import online_dot_pallas
 from .ref import online_dot_batch_ref, tree_levels
 
@@ -46,12 +47,9 @@ def online_dot(
     """
     B, K, n = x_digits.shape
     assert cfg.n == n
-    fits = fits_int32(cfg)
-    if use_pallas is None:
-        use_pallas = fits
     kw = dict(n=cfg.n, delta=cfg.delta, t=cfg.t, truncated=cfg.truncated,
               tail_gating=cfg.tail_gating, tail_guard=cfg.tail_guard)
-    if use_pallas and fits:
+    if resolve_use_pallas(cfg, use_pallas):
         xp = pad_to_multiple(x_digits, block_b, 0)
         yp = pad_to_multiple(y_digits, block_b, 0)
         z = online_dot_pallas(xp, yp, block_b=block_b,

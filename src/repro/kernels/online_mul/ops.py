@@ -11,7 +11,8 @@ from __future__ import annotations
 import jax
 
 from repro.core.precision import OnlinePrecision
-from repro.kernels.common import decode_digits, fits_int32, pad_to_multiple
+from repro.kernels.common import (decode_digits, pad_to_multiple,
+                                  resolve_use_pallas)
 from .kernel import online_mul_pallas
 from .ref import online_mul_batch_ref
 
@@ -35,10 +36,7 @@ def online_mul(
     """
     B, n = x_digits.shape
     assert cfg.n == n
-    fits = fits_int32(cfg)
-    if use_pallas is None:
-        use_pallas = fits
-    if use_pallas and fits:
+    if resolve_use_pallas(cfg, use_pallas):
         xp = pad_to_multiple(x_digits, block_b, 0)
         yp = pad_to_multiple(y_digits, block_b, 0)
         z = online_mul_pallas(

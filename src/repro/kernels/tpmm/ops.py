@@ -1,8 +1,10 @@
 """Public jit'd wrapper for the truncated-precision matmul.
 
 `tpmm(a, b, n_bits)` quantizes float operands into digit planes and runs
-the truncated plane-pair matmul (Pallas kernel or jnp oracle). This is the
-op the framework's DotEngine exposes as the paper-technique numerics mode.
+the truncated plane-pair matmul (Pallas kernel or jnp oracle). DotEngine
+exposes it as the `tpmm8` / `tpmm16` numerics modes. Quantizer range and
+block-divisibility guards live in quantize.py / kernel.py (single home
+each); this wrapper only pads and dispatches.
 """
 from __future__ import annotations
 
@@ -43,7 +45,8 @@ def tpmm(
     """
     M, K = a.shape
     K2, N = b.shape
-    assert K == K2
+    if K != K2:
+        raise ValueError(f"contraction mismatch: a (M,{K}) @ b ({K2},N)")
     D = num_planes_for(n_bits, plane_bits)
     ap, sa = plane_decompose(a, num_planes=D, plane_bits=plane_bits, axis=1)
     bp, sb = plane_decompose(b, num_planes=D, plane_bits=plane_bits, axis=0)

@@ -17,6 +17,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import pow2_scale
+
 __all__ = ["plane_decompose", "plane_reconstruct"]
 
 
@@ -39,10 +41,7 @@ def plane_decompose(
             "significance exceeds float32 inputs' 24-bit mantissa anyway")
     B = 1 << plane_bits
     D = num_planes
-    amax = jnp.max(jnp.abs(a), axis=axis, keepdims=True)
-    # power-of-two scale; strictly > max so u in (-1, 1)
-    scale = jnp.exp2(jnp.ceil(jnp.log2(jnp.maximum(amax, 1e-30))) + 1.0)
-    scale = scale.astype(jnp.float32)
+    scale = pow2_scale(a, axis)
     u = (a / scale).astype(jnp.float32)
     v = jnp.round(u * (B ** D)).astype(jnp.int32)  # |v| <= B^D / 2
     planes = []

@@ -55,7 +55,8 @@ class ModelConfig:
     norm_eps: float = 1e-5
     param_dtype: str = "float32"
     compute_dtype: str = "bfloat16"
-    dot_mode: str = "native"              # native | tpmm16 | tpmm8 (DotEngine)
+    dot_mode: str = "native"              # any registered DotEngine mode:
+                                          # native | tpmm{8,16} | olm{8,16}
     tie_embeddings: bool = False
     # --- distribution hints (see distributed/sharding.py) ---
     sharding_profile: str = "tp"          # tp | fsdp_tp
@@ -69,6 +70,11 @@ class ModelConfig:
             raise ValueError("moe family needs n_experts")
         if len(self.block_pattern) == 0:
             raise ValueError("block_pattern must be nonempty")
+        from repro.core.numerics import DotEngine
+        if self.dot_mode not in DotEngine.modes():
+            raise ValueError(
+                f"dot_mode {self.dot_mode!r} is not a registered DotEngine "
+                f"mode; choose from {DotEngine.modes()}")
 
     @property
     def vocab_padded(self) -> int:

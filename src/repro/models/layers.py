@@ -1,8 +1,10 @@
 """Transformer building blocks: norms, RoPE, GQA/SWA/cross attention, MLP.
 
 Pure functions over explicit param pytrees (nested dicts of jax.Array).
-Every matmul goes through core.numerics.DotEngine so the paper's truncated
-precision numerics can be enabled per-layer. Shapes use the convention
+Every matmul goes through core.numerics.DotEngine, so any registered
+numerics mode — native, the truncated digit-plane matmul (tpmm), or the
+fused online inner-product array (olm) — can be enabled per layer by
+constructing the engine with that mode. Shapes use the convention
   x: (B, S, d_model)   q: (B, S, Hq, Dh)   kv: (B, S, Hkv, Dh)
 """
 from __future__ import annotations

@@ -31,8 +31,7 @@ Params = Dict[str, Any]
 class Model:
     def __init__(self, cfg: ModelConfig, eng: Optional[DotEngine] = None):
         self.cfg = cfg
-        self.eng = eng or DotEngine(
-            mode="native" if cfg.dot_mode == "native" else cfg.dot_mode)
+        self.eng = eng or DotEngine(mode=cfg.dot_mode)
 
     # ---------------- init ----------------
     def init(self, key) -> Params:

@@ -43,7 +43,17 @@ class Request:
 
 class ServeEngine:
     def __init__(self, model: Model, params, *, slots: int = 4,
-                 max_len: int = 512, greedy: bool = True):
+                 max_len: int = 512, greedy: bool = True,
+                 dot_mode: Optional[str] = None):
+        # Per-deployment numerics override: serve the same checkpoint under
+        # any registered DotEngine mode (e.g. "olm16" routes every decode
+        # GEMM through the fused inner-product array) without touching the
+        # model config or the engine's interpret/use_pallas deployment
+        # knobs. Params are unchanged — the digit modes quantize at use
+        # from the stored dtype.
+        if dot_mode is not None and dot_mode != model.eng.mode:
+            model = Model(model.cfg,
+                          dataclasses.replace(model.eng, mode=dot_mode))
         self.model = model
         self.params = params
         self.slots = slots

@@ -1,0 +1,207 @@
+"""DotEngine mode registry + the olm matmul front-end.
+
+The dispatch-layer contract: every registered mode is a drop-in matmul
+numerics for the model stack; the olm modes lower float GEMM tiles
+through the fused online inner-product array and must be (a) bit-identical
+between the Pallas kernel path and the pure-jnp oracle and (b) inside the
+documented ulp bound of the exact f32 matmul.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.numerics import DotEngine
+from repro.kernels.common import sd_quantize
+from repro.kernels.online_dot.matmul import (ULP_PER_LANE, olm_error_bound,
+                                             olm_matmul, olm_matmul_ref)
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+
+def _mlp_cfg(**kw):
+    base = dict(name="t", family="dense", n_layers=2, d_model=16, n_heads=2,
+                n_kv_heads=2, d_ff=32, vocab_size=512,
+                param_dtype="float32", compute_dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+class TestRegistry:
+    def test_all_modes_registered(self):
+        assert {"native", "tpmm8", "tpmm16", "olm8", "olm16"} <= set(
+            DotEngine.modes())
+
+    def test_unknown_mode_rejected_at_construction(self):
+        with pytest.raises(ValueError, match="unknown DotEngine mode"):
+            DotEngine(mode="tpmm12")
+
+    def test_model_config_validates_dot_mode(self):
+        with pytest.raises(ValueError, match="not a registered"):
+            _mlp_cfg(dot_mode="bogus")
+        assert _mlp_cfg(dot_mode="olm16").dot_mode == "olm16"
+
+    def test_mode_table_documents_tradeoffs(self):
+        for m in DotEngine.mode_table():
+            assert m.summary and m.error and m.cost
+
+    def test_duplicate_registration_rejected(self):
+        from repro.core.numerics import register_mode
+        with pytest.raises(ValueError, match="already registered"):
+            register_mode("native", summary="x", error="x", cost="x")(
+                lambda eng, x, w: x)
+
+    def test_engine_for_helper(self):
+        from repro.configs.olm_array import engine_for
+        assert engine_for(16).mode == "olm16"
+        assert engine_for(8).mode == "olm8"
+        with pytest.raises(ValueError):
+            engine_for(24)
+
+
+class TestSdQuantize:
+    def test_roundtrip_within_half_ulp(self, rng):
+        a = jnp.asarray(rng.standard_normal((8, 12)).astype(np.float32))
+        d, s = sd_quantize(a, n=16, axis=1)
+        assert set(np.unique(np.asarray(d))) <= {-1, 0, 1}
+        w = 0.5 ** np.arange(1, 17)
+        rec = (np.asarray(d) @ w) * np.asarray(s)
+        assert np.max(np.abs(rec - np.asarray(a))) <= \
+            np.asarray(s).max() * 2.0 ** -17 + 1e-9
+
+    def test_matches_scalar_codec(self, rng):
+        from repro.core.sd import frac_to_digits
+        a = rng.uniform(-0.9, 0.9, (5,)).astype(np.float32)
+        d, s = sd_quantize(jnp.asarray(a)[None, :], n=12, axis=1)
+        d, s = np.asarray(d)[0], float(np.asarray(s)[0, 0])
+        for i, v in enumerate(a):
+            assert list(d[i]) == frac_to_digits(float(v) / s, 12)
+
+
+class TestOlmMatmul:
+    @pytest.mark.parametrize("n_bits", [8, 16])
+    def test_pallas_bitwise_matches_oracle(self, rng, n_bits):
+        # K=20 exercises the K-tile zero-padding path (k_tile=16)
+        M, K, N = 4, 20, 3
+        x = jnp.asarray(rng.standard_normal((M, K)).astype(np.float32))
+        w = jnp.asarray(rng.standard_normal((K, N)).astype(np.float32))
+        gp = np.asarray(olm_matmul(x, w, n_bits=n_bits, use_pallas=True,
+                                   block_b=4))
+        gr = np.asarray(olm_matmul_ref(x, w, n_bits=n_bits))
+        np.testing.assert_array_equal(gp, gr)
+
+    @pytest.mark.parametrize("n_bits", [8, 16])
+    @pytest.mark.parametrize("shape", [(8, 32, 8), (3, 5, 2), (1, 16, 1)])
+    def test_within_documented_ulp_bound(self, rng, n_bits, shape):
+        M, K, N = shape
+        x = jnp.asarray(rng.standard_normal((M, K)).astype(np.float32))
+        w = jnp.asarray(rng.standard_normal((K, N)).astype(np.float32))
+        got = np.asarray(olm_matmul_ref(x, w, n_bits=n_bits))
+        exact = np.asarray(x) @ np.asarray(w)
+        bound = np.asarray(olm_error_bound(x, w, n_bits=n_bits))
+        assert np.all(np.abs(got - exact) <= bound)
+        assert ULP_PER_LANE >= 3.0  # the ledger the bound documents
+
+    def test_engine_dot_is_the_matmul_oracle(self, rng):
+        x = jnp.asarray(rng.standard_normal((2, 3, 24)).astype(np.float32))
+        w = jnp.asarray(rng.standard_normal((24, 5)).astype(np.float32))
+        got = np.asarray(DotEngine(mode="olm16").dot(x, w))
+        want = np.asarray(olm_matmul_ref(x.reshape(-1, 24), w))
+        np.testing.assert_array_equal(got, want.reshape(2, 3, 5))
+
+    def test_contraction_mismatch_raises(self, rng):
+        x = jnp.zeros((2, 4), jnp.float32)
+        w = jnp.zeros((5, 3), jnp.float32)
+        with pytest.raises(ValueError, match="contraction mismatch"):
+            olm_matmul(x, w)
+
+    def test_decode_window_guard(self):
+        x = jnp.zeros((2, 64), jnp.float32)
+        w = jnp.zeros((64, 2), jnp.float32)
+        # n_bits=16, k_tile=64 -> stream 16 + 2*6 = 28 > 24: f32 decode
+        # would silently round; must refuse instead
+        with pytest.raises(ValueError, match="decode window"):
+            olm_matmul(x, w, n_bits=16, k_tile=64)
+        with pytest.raises(ValueError, match="decode window"):
+            olm_matmul(x, w, n_bits=24)
+
+
+class TestMlpRoundTrip:
+    @pytest.mark.parametrize("mode", sorted(DotEngine.modes()))
+    def test_every_mode_runs_mlp(self, rng, mode):
+        cfg = _mlp_cfg()
+        p = layers.mlp_init(jax.random.PRNGKey(0), cfg)
+        x = jnp.asarray(rng.standard_normal((2, 3, 16)).astype(np.float32))
+        y = np.asarray(layers.mlp_apply(p, cfg, x, DotEngine(mode=mode)))
+        y0 = np.asarray(layers.mlp_apply(p, cfg, x, DotEngine(mode="native")))
+        assert y.shape == (2, 3, 16)
+        assert np.isfinite(y).all()
+        # 16-bit digit modes track the exact MLP closely; 8-bit coarsely
+        tol = 0.0 if mode == "native" else \
+            (0.02 if "16" in mode else 0.6)
+        assert np.abs(y - y0).max() <= tol * max(np.abs(y0).max(), 1.0) + 1e-12
+
+    def test_olm16_mlp_bit_identical_to_oracle(self, rng):
+        """Acceptance: an end-to-end MLP forward under mode="olm16" on the
+        fused kernel path is bit-identical to the same forward on the
+        pure-jnp online-dot matmul oracle."""
+        cfg = _mlp_cfg()
+        p = layers.mlp_init(jax.random.PRNGKey(1), cfg)
+        x = jnp.asarray(rng.standard_normal((2, 2, 16)).astype(np.float32))
+        y_kernel = layers.mlp_apply(
+            p, cfg, x, DotEngine(mode="olm16", use_pallas=True))
+        y_oracle = layers.mlp_apply(
+            p, cfg, x, DotEngine(mode="olm16", use_pallas=False))
+        np.testing.assert_array_equal(np.asarray(y_kernel),
+                                      np.asarray(y_oracle))
+
+
+class TestWeightDtypeHandling:
+    def test_digit_modes_keep_master_precision(self, rng):
+        """fp32 master weights must reach the digit decomposition at full
+        mantissa — not pre-rounded through the bf16 activation dtype."""
+        from repro.kernels.tpmm.ops import tpmm
+        x = jnp.asarray(rng.standard_normal((4, 32)), jnp.bfloat16)
+        w32 = jnp.asarray(rng.standard_normal((32, 8)).astype(np.float32))
+        w32 = w32 * (1 + 1e-3 * rng.standard_normal((32, 8)).astype(np.float32))
+        got = DotEngine(mode="tpmm16", use_pallas=False).dot(x, w32)
+        want = tpmm(x, w32, use_pallas=False).astype(jnp.bfloat16)
+        np.testing.assert_array_equal(
+            np.asarray(got, np.float32), np.asarray(want, np.float32))
+        degraded = tpmm(x, w32.astype(jnp.bfloat16).astype(jnp.float32),
+                        use_pallas=False).astype(jnp.bfloat16)
+        assert not np.array_equal(np.asarray(want, np.float32),
+                                  np.asarray(degraded, np.float32))
+
+    def test_native_mode_casts_to_compute_dtype(self, rng):
+        x = jnp.asarray(rng.standard_normal((4, 8)), jnp.bfloat16)
+        w = jnp.asarray(rng.standard_normal((8, 3)).astype(np.float32))
+        y = DotEngine(mode="native").dot(x, w)
+        assert y.dtype == jnp.bfloat16
+
+    def test_output_dtype_follows_activations(self, rng):
+        x = jnp.asarray(rng.standard_normal((2, 16)), jnp.bfloat16)
+        w = jnp.asarray(rng.standard_normal((16, 4)).astype(np.float32))
+        for mode in ("tpmm16", "olm16"):
+            assert DotEngine(mode=mode).dot(x, w).dtype == jnp.bfloat16
+
+
+class TestServingWiring:
+    def test_engine_mode_override(self):
+        from repro.models.model import Model
+        from repro.serving.engine import ServeEngine
+        cfg = _mlp_cfg(dot_mode="native")
+        model = Model(cfg, DotEngine(mode="native", interpret=False,
+                                     use_pallas=True))
+        eng = ServeEngine(model, params=None, slots=1, max_len=8,
+                          dot_mode="olm16")
+        assert eng.model.eng.mode == "olm16"
+        # deployment knobs survive the mode override
+        assert eng.model.eng.interpret is False
+        assert eng.model.eng.use_pallas is True
+        assert eng.model.cfg is cfg
+        same = ServeEngine(model, params=None, slots=1, max_len=8)
+        assert same.model is model
