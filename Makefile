@@ -14,6 +14,8 @@ test:
 bench:
 	$(PYTHON) -m benchmarks.run
 
-# Machine-readable perf trajectory: BENCH_<name>.json per bench
+# Machine-readable perf trajectory: BENCH_<name>.json per bench.
+# BENCH_ARGS narrows the set (CI smoke: BENCH_ARGS="--only ...").
+BENCH_ARGS ?=
 bench-json:
-	$(PYTHON) -m benchmarks.run --json-dir results/bench
+	$(PYTHON) -m benchmarks.run --json-dir results/bench $(BENCH_ARGS)

@@ -43,14 +43,15 @@ def main():
               f"plane-matmuls ({cm['mxu_savings_pct']:.1f}% saved)")
 
     # 2) fused inner-product array as a float matmul: the olm front-end
-    #    K-tiles, quantizes to signed-digit grids, runs the fused kernel
-    #    (K multiplier lanes + online adder tree, one Pallas call) and
-    #    decodes the digit streams — bit-identical to the pure-jnp oracle
+    #    K-tiles and quantizes to signed-digit grids; the grid-tiled
+    #    Pallas kernel loads each operand grid once per output tile,
+    #    runs the K multiplier lanes + online adder tree per element and
+    #    decodes in-kernel — bit-identical to the pure-jnp oracle
     n, M, K, N = 16, 4, 24, 4
     at = rng.standard_normal((M, K)).astype(np.float32)
     bt = rng.standard_normal((K, N)).astype(np.float32)
     got_p = np.asarray(olm_matmul(jnp.asarray(at), jnp.asarray(bt), n_bits=n,
-                                  use_pallas=True, block_b=8))
+                                  use_pallas=True, block_m=4, block_n=4))
     got_r = np.asarray(olm_matmul_ref(jnp.asarray(at), jnp.asarray(bt),
                                       n_bits=n))
     bound = np.asarray(olm_error_bound(jnp.asarray(at), jnp.asarray(bt),

@@ -16,12 +16,22 @@ FULL_PRECISIONS = {
 # reference path; they stay digit-grid-API only for now).
 MATMUL_MODES = {8: "olm8", 16: "olm16"}
 
+# Grid-kernel tiling for the matmul lowering: k_tile lanes per adder
+# tree (the array width; n + 2*ceil(log2 k_tile) must stay inside the
+# 24-digit f32-exact decode window), and the (block_m, block_n) output
+# tile whose BlockSpecs load each operand digit grid once per tile —
+# the reuse factor is ~2/(1/block_m + 1/block_n).
+MATMUL_TILING = {"k_tile": 16, "block_m": 8, "block_n": 8}
+
 
 def engine_for(n_bits: int, **overrides) -> DotEngine:
     """DotEngine running every model GEMM through the n_bits-digit fused
-    inner-product array (kernels/online_dot/matmul)."""
+    inner-product array (kernels/online_dot/matmul). The paper-array
+    MATMUL_TILING is applied unless overridden (any DotEngine field —
+    k_tile, block_m, block_n, use_pallas, interpret — may be)."""
     if n_bits not in MATMUL_MODES:
         raise ValueError(
             f"no olm matmul mode at n_bits={n_bits}; "
             f"available: {sorted(MATMUL_MODES)}")
-    return DotEngine(mode=MATMUL_MODES[n_bits], **overrides)
+    return DotEngine(mode=MATMUL_MODES[n_bits],
+                     **{**MATMUL_TILING, **overrides})

@@ -31,7 +31,7 @@ digit/plane decomposition instead of being rounded through bf16 first.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -113,15 +113,25 @@ def _tpmm8(eng, x, w):
 
 def _olm_dot(eng: "DotEngine", x: jax.Array, w: jax.Array,
              n_bits: int) -> jax.Array:
+    import functools
+
     from repro.kernels.online_dot.matmul import olm_matmul
-    return _lowered_dot(eng, x, w, olm_matmul, n_bits)
+    # Grid-kernel tuning knobs ride on the engine (None = the kernel
+    # defaults): k_tile is the array width per K chunk, block_m/block_n
+    # the output tile the Pallas grid reuses operand digit grids across.
+    tiling = {k: v for k, v in (("k_tile", eng.k_tile),
+                                ("block_m", eng.block_m),
+                                ("block_n", eng.block_n)) if v is not None}
+    fn = functools.partial(olm_matmul, **tiling) if tiling else olm_matmul
+    return _lowered_dot(eng, x, w, fn, n_bits)
 
 
 @register_mode(
     "olm16",
     summary="fused online inner-product array, 16-digit operands",
     error="<= k_tile * 3.1 ulp @ 2^-16 per K-tile (olm_error_bound)",
-    cost="Eq.8-truncated digit-serial array; 35-41% slice-activity saved")
+    cost="Eq.8-truncated digit-serial array; grid-tiled operand reuse "
+         "(digit-grid traffic / min(block_m, block_n))")
 def _olm16(eng, x, w):
     return _olm_dot(eng, x, w, 16)
 
@@ -130,7 +140,8 @@ def _olm16(eng, x, w):
     "olm8",
     summary="fused online inner-product array, 8-digit operands",
     error="<= k_tile * 3.1 ulp @ 2^-8 per K-tile (olm_error_bound)",
-    cost="Eq.8-truncated digit-serial array; 35-41% slice-activity saved")
+    cost="Eq.8-truncated digit-serial array; grid-tiled operand reuse "
+         "(digit-grid traffic / min(block_m, block_n))")
 def _olm8(eng, x, w):
     return _olm_dot(eng, x, w, 8)
 
@@ -140,6 +151,12 @@ class DotEngine:
     mode: str = "native"          # any registered mode, see DotEngine.modes()
     interpret: bool = True        # Pallas interpret mode (CPU container)
     use_pallas: bool = False      # jnp oracle by default inside big models
+    # olm grid-kernel tuning (None = kernel defaults; ignored by other
+    # modes): K lanes per adder tree, and the (block_m, block_n) output
+    # tile whose BlockSpecs set the digit-grid reuse factor.
+    k_tile: Optional[int] = None
+    block_m: Optional[int] = None
+    block_n: Optional[int] = None
 
     def __post_init__(self):
         if self.mode not in _MODES:

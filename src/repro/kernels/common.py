@@ -19,6 +19,7 @@ from repro.core.precision import OnlinePrecision
 
 __all__ = [
     "fits_int32",
+    "checked_schedule",
     "resolve_use_pallas",
     "pad_to_multiple",
     "pow2_scale",
@@ -26,15 +27,35 @@ __all__ = [
     "decode_digits",
     "decode_stream",
     "decode_stream_jnp",
+    "decode_stream_inkernel",
 ]
 
 
 def fits_int32(cfg: OnlinePrecision) -> bool:
     """True when the Fig. 7 truncation schedule keeps every architectural
-    quantity within the Pallas int32 datapath (max T(j) + 3 <= 31 bits:
-    the deepest live slice plus the +-2 residual/selection headroom)."""
+    quantity within the Pallas int32 datapath — i.e. `checked_schedule`
+    (the one home of the threshold) accepts the configuration."""
+    try:
+        checked_schedule(cfg)
+    except ValueError:
+        return False
+    return True
+
+
+def checked_schedule(cfg: OnlinePrecision) -> tuple[np.ndarray, int]:
+    """(T(j) schedule, datapath scale exponent S) for a Pallas kernel, or
+    ValueError when the configuration overflows the int32 datapath
+    (max T(j) + 3 <= 31 bits: the deepest live slice plus the +-2
+    residual/selection headroom). Every Pallas kernel family guards its
+    entry point with this; `fits_int32` is the predicate form."""
     from repro.kernels.online_mul.ref import schedule_arrays
-    return int(schedule_arrays(cfg).max()) + 3 <= 31
+    sched = schedule_arrays(cfg)
+    S = int(sched.max())
+    if S + 3 > 31:
+        raise ValueError(
+            f"int32 datapath needs max T(j)+3 <= 31, got {S + 3}; "
+            "use the int64 jnp reference for this configuration")
+    return sched, S
 
 
 def resolve_use_pallas(cfg: OnlinePrecision, use_pallas: bool | None) -> bool:
@@ -65,9 +86,15 @@ def pow2_scale(a: jax.Array, axis: int) -> jax.Array:
     scale lies in [-1/2, 1/2] up to that rounding — consumers must
     tolerate the closed endpoints. The power-of-two constraint makes
     every downstream digit decomposition bit-exact, mirroring the SD
-    representation in the hardware design."""
+    representation in the hardware design.
+
+    All-zero slices get scale 1.0 (not the 2^-98 a naive log2 floor
+    would give): padding rows/tiles then quantize to all-zero digit
+    grids with a benign scale, so padded lanes provably contribute
+    exact zeros to any downstream product."""
     amax = jnp.max(jnp.abs(a), axis=axis, keepdims=True)
     scale = jnp.exp2(jnp.ceil(jnp.log2(jnp.maximum(amax, 1e-30))) + 1.0)
+    scale = jnp.where(amax > 0, scale, 1.0)
     return scale.astype(jnp.float32)
 
 
@@ -110,12 +137,41 @@ def decode_stream(digits) -> np.ndarray:
     return d @ w
 
 
+def _stream_weights(m: int) -> np.ndarray:
+    """(m,) float32 position weights 2^-(i+1), built on the host so every
+    entry is an *exact* power of two. (Device-side jnp.exp2 is a
+    transcendental and lands an ulp off exact powers on some backends —
+    enough to break the exact-decode window and with it the bit-identity
+    between the matmul kernel and its oracle.)"""
+    return np.exp2(-np.arange(1, m + 1, dtype=np.float64)).astype(np.float32)
+
+
 def decode_stream_jnp(digits: jax.Array) -> jax.Array:
     """Traceable float32 form of `decode_stream`, for decode stages that
     must stay inside jit (the matmul front-end). Exact for stream lengths
-    m <= 24 (float32 significand); both the Pallas and the reference
-    matmul paths share this function, so bit-identity between them holds
-    for any m."""
-    m = digits.shape[-1]
-    w = jnp.exp2(-jnp.arange(1, m + 1, dtype=jnp.float32))
+    m <= 24: every term d_i 2^-(i+1) and every partial subset sum fits
+    the float32 significand, so the result is independent of reduction
+    order — both the Pallas and the reference matmul paths decode to
+    bit-identical values."""
+    w = jnp.asarray(_stream_weights(digits.shape[-1]))
     return digits.astype(jnp.float32) @ w
+
+
+def decode_stream_inkernel(digits: jax.Array) -> jax.Array:
+    """`decode_stream_jnp` usable inside a Pallas TPU kernel body, where
+    captured array constants are not allowed and 1-D iota does not lower:
+    the exact pow2 weights 2^-(i+1) are built in-kernel by writing the
+    float32 exponent field directly (bitcast of (126 - i) << 23 — exact
+    by construction, unlike a device exp2), and the contraction is an
+    elementwise multiply + axis sum on the VPU rather than a 1-D matvec.
+
+    Bit-identical to `decode_stream_jnp` for any digit order the compiler
+    picks, because within the guarded stream window (m <= 24, digits in
+    {-1,0,1}) every term and every partial subset sum is exactly
+    representable in float32 — reduction order cannot change the result.
+    That exactness is what lets the grid matmul kernel decode in-kernel
+    and still match the host-side oracle bit for bit."""
+    m = digits.shape[-1]
+    pos = jax.lax.broadcasted_iota(jnp.int32, (1, m), 1)
+    w = jax.lax.bitcast_convert_type((126 - pos) << 23, jnp.float32)
+    return jnp.sum(digits.astype(jnp.float32) * w, axis=-1)

@@ -6,12 +6,21 @@ adders (delta_add = 2 per level), emitting the dot-product digit stream
 without ever materializing a full-precision product. Bit-exact against the
 core/inner_product.py oracle.
 
-  kernel.py — fused Pallas kernel (int32 datapath, Fig. 7 schedule)
-  ref.py    — int64 jnp reference + the vectorized adder-tree recurrence
-  ops.py    — digit-grid dispatch (int32-fit check, block_b tiling)
-  matmul.py — float matmul front-end (K-tiling, signed-digit quantize,
-              stream decode + f32 accumulation) behind DotEngine's
-              olm8/olm16 modes
+  kernel.py        — fused Pallas kernel (int32 datapath, Fig. 7
+                     schedule) + the shared lane_tree datapath body
+  matmul_kernel.py — grid-tiled Pallas matmul: (M_tiles, N_tiles,
+                     K_tiles) grid, operand digit grids loaded once per
+                     output tile (the paper's minimized-interconnect
+                     discipline), in-kernel stream decode and f32
+                     K-accumulation
+  ref.py           — int64 jnp reference + the vectorized adder-tree
+                     recurrence
+  ops.py           — digit-grid dispatch (int32-fit check, block_b
+                     tiling)
+  matmul.py        — quantize-and-dispatch float matmul front-end
+                     (shared K-tiling/quantize plumbing, grid kernel or
+                     broadcast oracle) behind DotEngine's olm8/olm16
+                     modes
 """
 from .matmul import olm_error_bound, olm_matmul, olm_matmul_ref
 from .ops import online_dot, dot_scale_log2, dot_stream_length

@@ -29,22 +29,38 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.precision import OnlinePrecision
+from repro.kernels.common import checked_schedule
 from repro.kernels.online_mul.kernel import mul_digit_loop
-from repro.kernels.online_mul.ref import schedule_arrays
 from .ref import adder_tree, tree_levels
 
-__all__ = ["online_dot_pallas"]
+__all__ = ["online_dot_pallas", "lane_tree"]
+
+
+def lane_tree(xd, yd, sched, *, n, delta, t, S):
+    """The fused array datapath for one digit block: K-lane multiplier
+    recurrence + position-parallel online adder tree.
+
+    Pure jnp int32 function usable inside any Pallas kernel body — the
+    batched dot kernel below and the grid-tiled matmul kernel
+    (matmul_kernel.py) both call it, so the two kernels share the exact
+    digit arithmetic by construction.
+
+    Args:
+      xd, yd: (B, K, n) int32 digits in {-1,0,1}.
+      sched:  (n+delta,) int32 T(j) truncation schedule (Fig. 7).
+    Returns (B, n + 2*ceil(log2 K)) int32 dot-stream digits.
+    """
+    B, K, _ = xd.shape
+    prod = mul_digit_loop(xd.reshape(B * K, n), yd.reshape(B * K, n),
+                          sched, n=n, delta=delta, t=t, S=S)
+    out, _ = adder_tree(prod.reshape(B, K, n))
+    return out
 
 
 def _kernel(sched_ref, x_ref, y_ref, z_ref, *, n, delta, t, S):
     """One batch block: K-lane multiplier recurrence + online adder tree."""
-    xd = x_ref[...]            # (B, K, n) int32 digits in {-1,0,1}
-    yd = y_ref[...]
-    B, K, _ = xd.shape
-    prod = mul_digit_loop(xd.reshape(B * K, n), yd.reshape(B * K, n),
-                          sched_ref[...], n=n, delta=delta, t=t, S=S)
-    out, _ = adder_tree(prod.reshape(B, K, n))
-    z_ref[...] = out
+    z_ref[...] = lane_tree(x_ref[...], y_ref[...], sched_ref[...],
+                           n=n, delta=delta, t=t, S=S)
 
 
 @functools.partial(
@@ -73,12 +89,7 @@ def online_dot_pallas(
     """
     cfg = OnlinePrecision(n=n, delta=delta, t=t, truncated=truncated,
                           tail_gating=tail_gating, tail_guard=tail_guard)
-    sched_np = schedule_arrays(cfg)
-    S = int(sched_np.max())
-    if S + 3 > 31:
-        raise ValueError(
-            f"int32 datapath needs max T(j)+3 <= 31, got {S + 3}; "
-            "use the int64 jnp reference for this configuration")
+    sched_np, S = checked_schedule(cfg)
     B, K, n_ = x_digits.shape
     if n_ != n:
         raise ValueError(f"operand digit count {n_} != cfg n {n}")

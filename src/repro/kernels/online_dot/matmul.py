@@ -5,23 +5,34 @@ model numerics engine: a float tile ``x (M, K) @ w (K, N)`` is computed
 the way the hardware array would —
 
   1. K is tiled into chunks of ``k_tile`` lanes (the array width; the
-     adder tree reduces one chunk per kernel call).
+     adder tree reduces one chunk per kernel step).
   2. Each chunk's rows of x and columns of w are quantized to n-digit
      MSDF signed-digit grids with power-of-two per-row scales
      (kernels/common.sd_quantize — shared with the tpmm plane quantizer).
-  3. The fused kernel (K multiplier lanes + online adder tree, one Pallas
-     call) emits the dot-product digit stream sum_i x_i y_i / 2^L per
-     (m, n) output element; no full-precision product intermediate exists.
-  4. Streams are decoded (kernels/common.decode_stream_jnp), the 2^L tree
-     scale and the quantization scales are folded out, and chunk partial
-     products accumulate in float32.
+  3. The grid-tiled Pallas kernel (matmul_kernel.olm_matmul_pallas) runs
+     the K multiplier lanes + online adder tree per (m, n) output
+     element on an (M_tiles, N_tiles, K_tiles) grid: each x-row digit
+     grid is loaded once per output-row tile and each w-column grid once
+     per output-column tile — the paper's minimized-interconnect operand
+     discipline — then stream-decodes, folds the 2^L tree scale and the
+     quantization scales, and carries the float32 accumulator across the
+     K grid dimension. No full-precision product intermediate exists.
 
-``olm_matmul_ref`` is the pure-jnp oracle: identical tiling / quantize /
-decode plumbing around the int64 reference recurrence instead of the
-Pallas kernel. Because the kernel is bit-exact against that recurrence
-(tests/test_kernel_online_dot.py) and every other stage is shared, the
-two paths produce bit-identical float32 outputs — the property
-DotEngine's olm modes are tested against.
+This module is deliberately just quantize-and-dispatch: shared tiling /
+padding / quantization (one `_tile_plan` + `_quantize_tiles` pair used
+by matmul, oracle and error bound alike), then either the grid kernel
+or the pure-jnp oracle.
+
+``olm_matmul_ref`` is that oracle: identical quantize plumbing around
+the int64 reference recurrence, with operand grids broadcast to
+(M*N, k_tile, n) — the hardware's full operand fan-out, kept as the
+operand-traffic baseline (`digit_traffic` quantifies the reuse factor
+the grid kernel wins back). Because the kernel's digit arithmetic is
+bit-exact against the recurrence, the stream decode is exact in float32
+for any reduction order inside the guarded n + 2L <= 24 window, every
+scale multiply is a power of two, and both paths accumulate K tiles in
+the same order, the two paths produce bit-identical float32 outputs —
+the property DotEngine's olm modes are tested against.
 
 Error vs the exact float matmul is bounded by ``olm_error_bound``: per
 lane, quantization contributes <= 1 ulp at 2^-n (two round-to-nearest
@@ -29,11 +40,6 @@ operands) and the truncated multiplier <= 1.1 ulp (G=2 tail, measured
 <= 0.93); the adder tree is exact. The documented per-lane ledger is
 ULP_PER_LANE = 3.1 output ulp at the tile's power-of-two scale product,
 matching the k * (2 + 1.1) * 2^-n bound the array example quotes.
-
-Known cost: operand digit grids are broadcast to (M*N, k_tile, n), i.e.
-x digits are replicated N times and w digits M times. That is exactly
-the hardware's operand fan-out to the PE array; doing the reuse inside
-the kernel (one x-grid load per output row) is a ROADMAP item.
 """
 from __future__ import annotations
 
@@ -45,16 +51,23 @@ import jax.numpy as jnp
 from repro.core.precision import OnlinePrecision
 from repro.kernels.common import (decode_stream_jnp, pad_to_multiple,
                                   pow2_scale, resolve_use_pallas, sd_quantize)
-from .kernel import online_dot_pallas
+from .matmul_kernel import olm_matmul_pallas
 from .ref import online_dot_batch_ref, tree_levels
 
 __all__ = ["olm_matmul", "olm_matmul_ref", "olm_error_bound",
-           "DEFAULT_K_TILE", "ULP_PER_LANE"]
+           "digit_traffic", "DEFAULT_K_TILE", "DEFAULT_BLOCK_M",
+           "DEFAULT_BLOCK_N", "ULP_PER_LANE"]
 
 # Array width: lanes reduced by one adder tree. 16 keeps the digit grids
 # VMEM-friendly and the stream length n + 2*ceil(log2 16) = n + 8 within
 # float32-exact decode range for n <= 16.
 DEFAULT_K_TILE = 16
+
+# Output-tile shape of the grid kernel. 8x8 keeps the in-kernel lane
+# batch (block_m * block_n * k_tile = 1024 lanes) VMEM-friendly while
+# already buying an 8x digit-grid reuse factor.
+DEFAULT_BLOCK_M = 8
+DEFAULT_BLOCK_N = 8
 
 # Documented per-lane error ledger in output ulp at 2^-n (see module
 # docstring): 2 quantized operands + 1.1 multiplier truncation, rounded
@@ -68,15 +81,64 @@ def _olm_cfg(n_bits: int) -> OnlinePrecision:
     return OnlinePrecision(n=n_bits)
 
 
-def _tiles(K: int, k_tile: int) -> tuple[int, int]:
-    """(lanes per tile, tile count) for a K-deep contraction."""
+def _tile_plan(x: jax.Array, w: jax.Array, k_tile: int
+               ) -> tuple[int, int, jax.Array, jax.Array]:
+    """The one K-tiling decision, shared by matmul, oracle and error
+    bound: (lanes per tile kt, tile count T, x zero-padded to (M, T*kt),
+    w.T zero-padded to (N, T*kt)). Zero padding is benign end to end —
+    padded lanes quantize to all-zero digit grids (pow2_scale guards
+    all-zero slices) and contribute exact zeros."""
+    K = x.shape[1]
     kt = min(k_tile, K)
-    return kt, -(-K // kt)
+    n_tiles = -(-K // kt)
+    xp = pad_to_multiple(x.astype(jnp.float32), kt, 1)
+    wp = pad_to_multiple(w.astype(jnp.float32), kt, 0)
+    return kt, n_tiles, xp, wp.T
+
+
+def _quantize_tiles(rows: jax.Array, kt: int, n_tiles: int, n_bits: int
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Quantize (R, T*kt) rows to per-K-tile signed-digit grids:
+    digits (R, T, kt, n_bits) int32, scales (R, T) float32 pow2."""
+    R = rows.shape[0]
+    d, s = sd_quantize(rows.reshape(R, n_tiles, kt), n=n_bits, axis=2)
+    return d, s[..., 0]
+
+
+def _check_decode_window(n_bits: int, kt: int) -> int:
+    L = tree_levels(kt)
+    if n_bits + 2 * L > 24:
+        raise ValueError(
+            f"stream length {n_bits + 2 * L} (n_bits={n_bits}, "
+            f"k_tile={kt}) exceeds the float32-exact decode window of "
+            "24 digits; lower k_tile or n_bits (n=24/32 lowering is a "
+            "ROADMAP item)")
+    return L
+
+
+def _broadcast_ref(xd, sx, wd, sw, L, **kw) -> jax.Array:
+    """Pure-jnp oracle body: per K tile, broadcast the digit grids to the
+    full (M*N, kt, n) operand fan-out — exactly what the hardware delivers
+    to the PE array, and the traffic baseline the grid kernel beats —
+    run the int64 reference recurrence, decode and accumulate in f32 in
+    the same K-tile order as the kernel's grid."""
+    M, T, kt, n = xd.shape
+    N = wd.shape[0]
+    acc = jnp.zeros((M, N), jnp.float32)
+    for ti in range(T):
+        xg = jnp.broadcast_to(xd[:, ti][:, None], (M, N, kt, n))
+        wg = jnp.broadcast_to(wd[:, ti][None, :], (M, N, kt, n))
+        z = online_dot_batch_ref(xg.reshape(M * N, kt, n),
+                                 wg.reshape(M * N, kt, n), **kw)
+        val = decode_stream_jnp(z) * jnp.float32(1 << L)    # (M*N,)
+        acc = acc + val.reshape(M, N) * (sx[:, ti:ti + 1] *
+                                         sw[:, ti].reshape(1, N))
+    return acc
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("n_bits", "k_tile", "use_pallas", "block_b",
+    static_argnames=("n_bits", "k_tile", "use_pallas", "block_m", "block_n",
                      "interpret"),
 )
 def olm_matmul(
@@ -86,14 +148,18 @@ def olm_matmul(
     n_bits: int = 16,
     k_tile: int = DEFAULT_K_TILE,
     use_pallas: bool | None = None,
-    block_b: int = 8,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
     interpret: bool = True,
 ) -> jax.Array:
     """Matmul through the fused online inner-product array; (M, N) float32.
 
-    use_pallas: True = fused Pallas kernel, False = int64 jnp reference,
-    None = Pallas iff the config fits the int32 datapath. Both paths are
-    bit-identical (shared quantize/decode, bit-exact kernel).
+    use_pallas: True = grid-tiled Pallas kernel, False = int64 jnp
+    broadcast oracle, None = Pallas iff the config fits the int32
+    datapath. Both paths are bit-identical (shared quantize plumbing,
+    bit-exact digit arithmetic, order-exact decode and accumulation).
+    block_m/block_n tile the output on the Pallas path (ignored by the
+    oracle, which models the full operand fan-out).
 
     Raises ValueError when n_bits + 2*ceil(log2 k_tile) exceeds the
     24-digit float32-exact decode window (see decode_stream_jnp).
@@ -106,43 +172,23 @@ def olm_matmul(
     use = resolve_use_pallas(cfg, use_pallas)
     kw = dict(n=cfg.n, delta=cfg.delta, t=cfg.t, truncated=cfg.truncated,
               tail_gating=cfg.tail_gating, tail_guard=cfg.tail_guard)
-    kt, n_tiles = _tiles(K, k_tile)
-    L = tree_levels(kt)
-    if n_bits + 2 * L > 24:
-        raise ValueError(
-            f"stream length {n_bits + 2 * L} (n_bits={n_bits}, "
-            f"k_tile={kt}) exceeds the float32-exact decode window of "
-            "24 digits; lower k_tile or n_bits (n=24/32 lowering is a "
-            "ROADMAP item)")
-    xp = pad_to_multiple(x.astype(jnp.float32), kt, 1)
-    wp = pad_to_multiple(w.astype(jnp.float32), kt, 0)
-    acc = jnp.zeros((M, N), jnp.float32)
-    for ti in range(n_tiles):
-        xt = xp[:, ti * kt:(ti + 1) * kt]              # (M, kt)
-        wt = wp[ti * kt:(ti + 1) * kt, :]              # (kt, N)
-        xd, sx = sd_quantize(xt, n=n_bits, axis=1)     # (M, kt, n), (M, 1)
-        wd, sw = sd_quantize(wt.T, n=n_bits, axis=1)   # (N, kt, n), (N, 1)
-        xg = jnp.broadcast_to(xd[:, None], (M, N, kt, n_bits))
-        yg = jnp.broadcast_to(wd[None, :], (M, N, kt, n_bits))
-        xg = xg.reshape(M * N, kt, n_bits)
-        yg = yg.reshape(M * N, kt, n_bits)
-        if use:
-            xg = pad_to_multiple(xg, block_b, 0)
-            yg = pad_to_multiple(yg, block_b, 0)
-            z = online_dot_pallas(xg, yg, block_b=block_b,
-                                  interpret=interpret, **kw)[:M * N]
-        else:
-            z = online_dot_batch_ref(xg, yg, **kw)
-        val = decode_stream_jnp(z) * jnp.float32(1 << L)   # (M*N,)
-        acc = acc + val.reshape(M, N) * (sx * sw.reshape(1, N))
-    return acc
+    kt, n_tiles, xp, wpT = _tile_plan(x, w, k_tile)
+    L = _check_decode_window(n_bits, kt)
+    xd, sx = _quantize_tiles(xp, kt, n_tiles, n_bits)    # (M,T,kt,n), (M,T)
+    wd, sw = _quantize_tiles(wpT, kt, n_tiles, n_bits)   # (N,T,kt,n), (N,T)
+    if use:
+        return olm_matmul_pallas(xd, sx, wd, sw, block_m=block_m,
+                                 block_n=block_n, interpret=interpret, **kw)
+    return _broadcast_ref(xd, sx, wd, sw, L, **kw)
 
 
 def olm_matmul_ref(x: jax.Array, w: jax.Array, *, n_bits: int = 16,
                    k_tile: int = DEFAULT_K_TILE) -> jax.Array:
     """Pure-jnp oracle for `olm_matmul`: the same tiling, quantization and
-    stream-decode plumbing around the int64 reference recurrence. The
-    Pallas path must match this bit-for-bit (tests/test_dot_engine.py)."""
+    stream-decode plumbing around the int64 reference recurrence, with
+    the full (M*N, kt, n) operand broadcast. The Pallas grid kernel must
+    match this bit-for-bit (tests/test_dot_engine.py,
+    tests/test_olm_matmul_grid.py)."""
     return olm_matmul(x, w, n_bits=n_bits, k_tile=k_tile, use_pallas=False)
 
 
@@ -151,15 +197,49 @@ def olm_error_bound(x: jax.Array, w: jax.Array, *, n_bits: int = 16,
     """Documented per-element bound on |olm_matmul(x, w) - x @ w|, (M, N)
     float32: per K-tile, k lanes each contribute <= ULP_PER_LANE output
     ulp at 2^-n times the tile's power-of-two scale product."""
-    M, K = x.shape
-    _, N = w.shape
-    kt, n_tiles = _tiles(K, k_tile)
-    xp = pad_to_multiple(x.astype(jnp.float32), kt, 1)
-    wp = pad_to_multiple(w.astype(jnp.float32), kt, 0)
-    bound = jnp.zeros((M, N), jnp.float32)
+    kt, n_tiles, xp, wpT = _tile_plan(x, w, k_tile)
+    M, N = xp.shape[0], wpT.shape[0]
+    sx = pow2_scale(xp.reshape(M, n_tiles, kt), 2)[..., 0]    # (M, T)
+    sw = pow2_scale(wpT.reshape(N, n_tiles, kt), 2)[..., 0]   # (N, T)
     per_lane = jnp.float32(ULP_PER_LANE * 2.0 ** -n_bits)
-    for ti in range(n_tiles):
-        sx = pow2_scale(xp[:, ti * kt:(ti + 1) * kt], 1)        # (M, 1)
-        sw = pow2_scale(wp[ti * kt:(ti + 1) * kt, :].T, 1)      # (N, 1)
-        bound = bound + kt * per_lane * (sx * sw.reshape(1, N))
-    return bound
+    return kt * per_lane * jnp.einsum("mt,nt->mn", sx, sw)
+
+
+def digit_traffic(M: int, N: int, K: int, *, n_bits: int = 16,
+                  k_tile: int = DEFAULT_K_TILE,
+                  block_m: int = DEFAULT_BLOCK_M,
+                  block_n: int = DEFAULT_BLOCK_N) -> dict:
+    """Operand digit-grid traffic ledger for one (M, K) @ (K, N) matmul,
+    in int32 digit elements (4 bytes each) delivered to the compute body.
+
+    broadcast: the oracle/front-end fan-out — both grids replicated to
+      (M*N, kt, n) per K tile, i.e. x digits N times and w digits M times.
+    grid: the grid kernel's BlockSpec loads — each x-row grid once per
+      (row tile, K tile) and each w-column grid once per (column tile,
+      K tile); reuse = broadcast / grid, the harmonic mean
+      2/(1/block_m + 1/block_n) for even tilings (>= min(block_m,
+      block_n), and exactly min/2 x in the most lopsided case).
+
+    Per output tile the grid path materializes block_m + block_n
+    operand grids where broadcast materializes block_m * block_n of
+    each; summed over tiles that is M*N_tiles + N*M_tiles — linear in
+    M + N only when the block covers the whole output, O(M*N / reuse)
+    under fixed blocks (tests assert both regimes).
+    """
+    kt = min(k_tile, K)
+    n_tiles = -(-K // kt)
+    bm = max(1, min(block_m, M))
+    bn = max(1, min(block_n, N))
+    m_tiles = -(-M // bm)
+    n_out_tiles = -(-N // bn)
+    per_grid = kt * n_bits                      # one row/column digit grid
+    broadcast = 2 * M * N * per_grid * n_tiles
+    grid = (m_tiles * bm * n_out_tiles + n_out_tiles * bn * m_tiles) \
+        * per_grid * n_tiles
+    return {
+        "broadcast_elems": broadcast,
+        "grid_elems": grid,
+        "broadcast_bytes": 4 * broadcast,
+        "grid_bytes": 4 * grid,
+        "reuse": broadcast / grid,
+    }

@@ -1,0 +1,147 @@
+"""Grid-tiled Pallas matmul over the fused online inner-product array.
+
+This is the operand-reuse kernel the paper's *minimized interconnect*
+claim maps to on a TPU substrate: instead of the front-end broadcasting
+digit grids to (M*N, k_tile, n) on the host — the hardware's full
+operand fan-out — the kernel runs on an (M_tiles, N_tiles, K_tiles)
+grid whose BlockSpecs deliver each x-row digit grid once per output-row
+tile and each w-column digit grid once per output-column tile:
+
+  x digits (M, T, kt, n): block (block_m, 1, kt, n) at (i, kk) — the
+      index map ignores the N grid axis, so a row grid is fetched once
+      per (row tile, K tile) and reused across all block_n columns.
+  w digits (N, T, kt, n): block (block_n, 1, kt, n) at (j, kk) —
+      symmetric reuse across all block_m rows.
+
+Per grid step the body broadcasts the two small blocks *in VMEM* to the
+(block_m * block_n) lane batch, runs the shared lane_tree datapath
+(K-lane multiplier recurrence + online adder tree — the same function
+the batched dot kernel uses), stream-decodes in-kernel
+(kernels/common.decode_stream_inkernel), folds the 2^L tree scale and
+the per-(row, tile) quantization scales, and accumulates into the
+resident (block_m, block_n) float32 output block across the K grid
+dimension (innermost, so the block stays live — no Python K loop, no
+host-side partial-product round trips).
+
+Digit-grid traffic per K tile drops from 2*M*N*kt*n elements to
+(M*N_tiles + N*M_tiles)*kt*n — a harmonic-mean reuse factor
+2/(1/block_m + 1/block_n) >= min(block_m, block_n), measured by
+matmul.digit_traffic and asserted in tests/test_olm_matmul_grid.py.
+
+Bit-identity with the broadcast oracle holds by construction: the digit
+arithmetic is lane_tree (bit-exact vs the int64 recurrence), the decode
+is exact in float32 for any reduction order within the guarded
+n + 2L <= 24 stream window, every scale multiply is by a power of two
+(exact), and the K-tile accumulation order matches the oracle's loop.
+
+interpret=True on the CPU container; flip to False on a real TPU
+(ROADMAP open item: validate the Mosaic lowering of the 4-D operand
+blocks + per-level tree reshapes there).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.precision import OnlinePrecision
+from repro.kernels.common import (checked_schedule, decode_stream_inkernel,
+                                  pad_to_multiple)
+from .kernel import lane_tree
+from .ref import tree_levels
+
+__all__ = ["olm_matmul_pallas"]
+
+
+def _kernel(sched_ref, xd_ref, sx_ref, wd_ref, sw_ref, out_ref,
+            *, n, delta, t, S, L):
+    """One (block_m, block_n) output tile x one K tile."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _():
+        out_ref[...] = jnp.zeros(out_ref.shape, out_ref.dtype)
+
+    xd = xd_ref[...][:, 0]     # (block_m, kt, n) int32 digits in {-1,0,1}
+    wd = wd_ref[...][:, 0]     # (block_n, kt, n)
+    bm, kt, _ = xd.shape
+    bn = wd.shape[0]
+    # Operand reuse happens here: each row/column grid was loaded once
+    # and is fanned out to the (bm * bn) PE lane batch inside VMEM.
+    xg = jnp.broadcast_to(xd[:, None], (bm, bn, kt, n)).reshape(bm * bn, kt, n)
+    wg = jnp.broadcast_to(wd[None, :], (bm, bn, kt, n)).reshape(bm * bn, kt, n)
+    z = lane_tree(xg, wg, sched_ref[...], n=n, delta=delta, t=t, S=S)
+    val = decode_stream_inkernel(z) * jnp.float32(1 << L)   # exact 2^L fold
+    scale = sx_ref[...] * sw_ref[...].reshape(1, bn)        # (bm, bn), pow2
+    out_ref[...] += val.reshape(bm, bn) * scale
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n", "delta", "t", "truncated", "tail_gating",
+                     "tail_guard", "block_m", "block_n", "interpret"),
+)
+def olm_matmul_pallas(
+    x_digits: jax.Array,   # (M, T, kt, n) int32 per-K-tile row digit grids
+    x_scales: jax.Array,   # (M, T) float32 power-of-two row scales
+    w_digits: jax.Array,   # (N, T, kt, n) column digit grids (from w.T)
+    w_scales: jax.Array,   # (N, T)
+    *,
+    n: int,
+    delta: int = 3,
+    t: int = 2,
+    truncated: bool = True,
+    tail_gating: bool = True,
+    tail_guard: int = 2,
+    block_m: int = 8,
+    block_n: int = 8,
+    interpret: bool = True,  # CPU container: interpret; False on real TPU
+) -> jax.Array:
+    """Grid-tiled matmul through the fused array; returns (M, N) float32.
+
+    Operands arrive pre-quantized (matmul.py's quantize-and-dispatch
+    front-end): per K tile, each x row / w column is an (kt, n) signed-
+    digit grid with a power-of-two scale. The float32 accumulator is
+    carried across the K grid dimension inside the kernel.
+    """
+    cfg = OnlinePrecision(n=n, delta=delta, t=t, truncated=truncated,
+                          tail_gating=tail_gating, tail_guard=tail_guard)
+    sched_np, S = checked_schedule(cfg)
+    M, T, kt, n_ = x_digits.shape
+    N = w_digits.shape[0]
+    if n_ != n:
+        raise ValueError(f"operand digit count {n_} != cfg n {n}")
+    if w_digits.shape[1:] != (T, kt, n):
+        raise ValueError(
+            f"w digit grid {w_digits.shape} does not match x grid "
+            f"{x_digits.shape} in (K_tiles, k_tile, n)")
+    if x_scales.shape != (M, T) or w_scales.shape != (N, T):
+        raise ValueError("scale shapes must be (rows, K_tiles)")
+    L = tree_levels(kt)
+    bm = max(1, min(block_m, M))
+    bn = max(1, min(block_n, N))
+    xd = pad_to_multiple(x_digits.astype(jnp.int32), bm, 0)
+    sx = pad_to_multiple(x_scales.astype(jnp.float32), bm, 0)
+    wd = pad_to_multiple(w_digits.astype(jnp.int32), bn, 0)
+    sw = pad_to_multiple(w_scales.astype(jnp.float32), bn, 0)
+    Mp, Np = xd.shape[0], wd.shape[0]
+    grid = (Mp // bm, Np // bn, T)   # K innermost: accumulator stays live
+    kern = functools.partial(_kernel, n=n, delta=delta, t=t, S=S, L=L)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n + delta,), lambda i, j, k: (0,)),     # schedule
+            pl.BlockSpec((bm, 1, kt, n),
+                         lambda i, j, k: (i, k, 0, 0)),  # x rows: j-blind
+            pl.BlockSpec((bm, 1), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, 1, kt, n),
+                         lambda i, j, k: (j, k, 0, 0)),  # w cols: i-blind
+            pl.BlockSpec((bn, 1), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+        interpret=interpret,
+    )(jnp.asarray(sched_np), xd, sx, wd, sw)
+    return out[:M, :N]

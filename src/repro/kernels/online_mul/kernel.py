@@ -28,7 +28,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.precision import OnlinePrecision
-from .ref import schedule_arrays
+from repro.kernels.common import checked_schedule
 
 __all__ = ["online_mul_pallas", "mul_digit_loop"]
 
@@ -126,12 +126,8 @@ def online_mul_pallas(
     """
     cfg = OnlinePrecision(n=n, delta=delta, t=t, truncated=truncated,
                           tail_gating=tail_gating, tail_guard=tail_guard)
-    sched_np = schedule_arrays(cfg)
-    S = int(sched_np.max())  # datapath scale 2^S; == p (truncated) or n+delta
-    if S + 3 > 31:
-        raise ValueError(
-            f"int32 datapath needs max T(j)+3 <= 31, got {S + 3}; "
-            "use the int64 jnp reference for this configuration")
+    # datapath scale 2^S; S == p (truncated) or n+delta (full)
+    sched_np, S = checked_schedule(cfg)
     B = x_digits.shape[0]
     if B % block_b:
         raise ValueError(f"batch {B} must be divisible by block_b {block_b}")

@@ -44,16 +44,24 @@ class Request:
 class ServeEngine:
     def __init__(self, model: Model, params, *, slots: int = 4,
                  max_len: int = 512, greedy: bool = True,
-                 dot_mode: Optional[str] = None):
+                 dot_mode: Optional[str] = None,
+                 dot_tiling: Optional[Dict[str, int]] = None):
         # Per-deployment numerics override: serve the same checkpoint under
         # any registered DotEngine mode (e.g. "olm16" routes every decode
         # GEMM through the fused inner-product array) without touching the
         # model config or the engine's interpret/use_pallas deployment
-        # knobs. Params are unchanged — the digit modes quantize at use
-        # from the stored dtype.
+        # knobs. dot_tiling tunes the olm grid kernel per deployment
+        # (k_tile / block_m / block_n — e.g. widen block_n for the fat
+        # decode GEMVs). Params are unchanged — the digit modes quantize
+        # at use from the stored dtype.
+        override = dict(dot_tiling or {})
+        if bad := set(override) - {"k_tile", "block_m", "block_n"}:
+            raise ValueError(f"unknown dot_tiling knobs: {sorted(bad)}")
         if dot_mode is not None and dot_mode != model.eng.mode:
+            override["mode"] = dot_mode
+        if override:
             model = Model(model.cfg,
-                          dataclasses.replace(model.eng, mode=dot_mode))
+                          dataclasses.replace(model.eng, **override))
         self.model = model
         self.params = params
         self.slots = slots

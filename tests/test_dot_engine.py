@@ -89,7 +89,7 @@ class TestOlmMatmul:
         x = jnp.asarray(rng.standard_normal((M, K)).astype(np.float32))
         w = jnp.asarray(rng.standard_normal((K, N)).astype(np.float32))
         gp = np.asarray(olm_matmul(x, w, n_bits=n_bits, use_pallas=True,
-                                   block_b=4))
+                                   block_m=2, block_n=2))
         gr = np.asarray(olm_matmul_ref(x, w, n_bits=n_bits))
         np.testing.assert_array_equal(gp, gr)
 

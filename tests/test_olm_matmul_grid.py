@@ -1,0 +1,181 @@
+"""The grid-tiled olm matmul kernel: operand reuse without changing a bit.
+
+Three contracts:
+  * bit-identity — the (M_tiles, N_tiles, K_tiles) Pallas kernel matches
+    the broadcast jnp oracle bit-for-bit across block/k_tile sweeps,
+    ragged shapes, the M=1 GEMV case, and every registered olm mode;
+  * accumulator carry — the float32 accumulator carried across the K
+    grid dimension reproduces the oracle's K-tile loop exactly;
+  * operand traffic — digit-grid elements delivered to the compute body
+    scale with M + N on the grid path (vs M*N broadcast), with reuse
+    >= min(block_m, block_n)/2.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.configs.olm_array import MATMUL_MODES, MATMUL_TILING, engine_for
+from repro.core.numerics import DotEngine
+from repro.kernels.common import pow2_scale, sd_quantize
+from repro.kernels.online_dot.matmul import (DEFAULT_BLOCK_M,
+                                             DEFAULT_BLOCK_N,
+                                             DEFAULT_K_TILE, digit_traffic,
+                                             olm_error_bound, olm_matmul,
+                                             olm_matmul_ref)
+
+
+def _pair(rng, M, K, N):
+    return (jnp.asarray(rng.standard_normal((M, K)).astype(np.float32)),
+            jnp.asarray(rng.standard_normal((K, N)).astype(np.float32)))
+
+
+class TestGridBitIdentity:
+    @pytest.mark.parametrize("block_m,block_n", [(1, 1), (2, 4), (4, 2),
+                                                 (8, 8), (16, 3)])
+    def test_block_sweep_bitwise(self, rng, block_m, block_n):
+        x, w = _pair(rng, 9, 32, 11)   # ragged vs every tested block shape
+        gp = np.asarray(olm_matmul(x, w, use_pallas=True,
+                                   block_m=block_m, block_n=block_n))
+        gr = np.asarray(olm_matmul_ref(x, w))
+        np.testing.assert_array_equal(gp, gr)
+
+    @pytest.mark.parametrize("k_tile", [4, 8, 16])
+    def test_k_tile_sweep_bitwise(self, rng, k_tile):
+        x, w = _pair(rng, 5, 37, 6)    # ragged K: zero-padded last tile
+        gp = np.asarray(olm_matmul(x, w, k_tile=k_tile, use_pallas=True))
+        gr = np.asarray(olm_matmul_ref(x, w, k_tile=k_tile))
+        np.testing.assert_array_equal(gp, gr)
+
+    def test_accumulator_carry_across_k_tiles(self, rng):
+        # K = 4 tiles: the kernel's resident accumulator must replay the
+        # oracle's tile-loop f32 additions exactly, and dropping the K
+        # tiling (k_tile >= K would change the adder tree) must stay
+        # within the documented bound
+        x, w = _pair(rng, 6, 64, 7)
+        gp = np.asarray(olm_matmul(x, w, k_tile=16, use_pallas=True))
+        gr = np.asarray(olm_matmul_ref(x, w, k_tile=16))
+        np.testing.assert_array_equal(gp, gr)
+        exact = np.asarray(x) @ np.asarray(w)
+        bound = np.asarray(olm_error_bound(x, w, k_tile=16))
+        assert np.all(np.abs(gp - exact) <= bound)
+
+
+class TestRaggedShapes:
+    SHAPES = [(5, 20, 3),    # all of M, N ragged vs 8x8 blocks, K vs 16
+              (3, 7, 2),     # K < k_tile
+              (1, 24, 5),    # GEMV, M=1
+              (1, 16, 1),    # single output element
+              (17, 40, 9)]   # multiple ragged output tiles
+
+    @pytest.mark.parametrize("mode", sorted(MATMUL_MODES.values()))
+    @pytest.mark.parametrize("shape", SHAPES)
+    def test_every_olm_mode_both_paths(self, rng, mode, shape):
+        M, K, N = shape
+        n_bits = 8 if mode.endswith("8") else 16
+        x, w = _pair(rng, M, K, N)
+        yp = np.asarray(DotEngine(mode=mode, use_pallas=True).dot(x, w))
+        yr = np.asarray(DotEngine(mode=mode, use_pallas=False).dot(x, w))
+        np.testing.assert_array_equal(yp, yr)
+        exact = np.asarray(x) @ np.asarray(w)
+        bound = np.asarray(olm_error_bound(x, w, n_bits=n_bits))
+        assert np.all(np.abs(yr - exact) <= bound)
+
+    def test_gemv_through_engine_for(self, rng):
+        x, w = _pair(rng, 1, 48, 13)
+        eng = engine_for(16, use_pallas=True)
+        assert (eng.k_tile, eng.block_m, eng.block_n) == (
+            MATMUL_TILING["k_tile"], MATMUL_TILING["block_m"],
+            MATMUL_TILING["block_n"])
+        got = np.asarray(eng.dot(x, w))
+        want = np.asarray(olm_matmul_ref(x, w))
+        np.testing.assert_array_equal(got, want)
+
+
+class TestZeroPadding:
+    def test_all_zero_rows_give_exact_zero(self, rng):
+        x, w = _pair(rng, 6, 20, 4)
+        x = x.at[2].set(0.0)
+        w = w.at[:, 1].set(0.0)
+        for use in (True, False):
+            got = np.asarray(olm_matmul(x, w, use_pallas=use))
+            assert not got[2].any()      # zero row -> exactly zero row
+            assert not got[:, 1].any()   # zero column -> exactly zero col
+
+    def test_pow2_scale_zero_guard(self):
+        a = jnp.zeros((3, 8), jnp.float32)
+        s = np.asarray(pow2_scale(a, 1))
+        np.testing.assert_array_equal(s, np.ones((3, 1), np.float32))
+        d, s = sd_quantize(a, n=16, axis=1)
+        assert not np.asarray(d).any()
+        np.testing.assert_array_equal(np.asarray(s),
+                                      np.ones((3, 1), np.float32))
+
+    def test_padding_lanes_contribute_zero(self, rng):
+        # K=17 pads 15 dead lanes into the second tile; their digit grids
+        # must be all-zero so the padded matmul equals the K=32 matmul of
+        # the explicitly zero-extended operands, bit for bit
+        x, w = _pair(rng, 4, 17, 3)
+        xz = jnp.pad(x, ((0, 0), (0, 15)))
+        wz = jnp.pad(w, ((0, 15), (0, 0)))
+        for use in (True, False):
+            np.testing.assert_array_equal(
+                np.asarray(olm_matmul(x, w, use_pallas=use)),
+                np.asarray(olm_matmul(xz, wz, use_pallas=use)))
+
+
+class TestOperandTraffic:
+    def test_grid_scales_with_m_plus_n_not_mn(self):
+        # Per output tile the kernel materializes block_m + block_n digit
+        # grids, not block_m * block_n: with the whole output as one tile
+        # (block = shape), doubling both dims doubles grid traffic while
+        # broadcast traffic quadruples
+        t1 = digit_traffic(32, 32, DEFAULT_K_TILE, block_m=32, block_n=32)
+        t2 = digit_traffic(64, 64, DEFAULT_K_TILE, block_m=64, block_n=64)
+        assert t1["grid_elems"] == (32 + 32) * DEFAULT_K_TILE * 16
+        assert t2["grid_elems"] == 2 * t1["grid_elems"]          # ~ M + N
+        assert t2["broadcast_elems"] == 4 * t1["broadcast_elems"]  # ~ M * N
+        # fixed 8x8 blocks: traffic still down by the constant harmonic
+        # reuse factor at every size
+        for M, N in ((32, 32), (64, 64), (128, 128)):
+            t = digit_traffic(M, N, DEFAULT_K_TILE)
+            assert t["broadcast_elems"] == t["reuse"] * t["grid_elems"]
+            assert t["reuse"] == 2 / (1 / DEFAULT_BLOCK_M +
+                                      1 / DEFAULT_BLOCK_N)
+
+    def test_reuse_factor_meets_floor(self):
+        for M, N in ((64, 64), (128, 32), (8, 8)):
+            t = digit_traffic(M, N, 32)
+            assert t["reuse"] >= min(DEFAULT_BLOCK_M, DEFAULT_BLOCK_N) / 2
+        # even blocks: harmonic mean, here exactly min(bm, bn)
+        assert digit_traffic(64, 64, 32)["reuse"] == min(
+            DEFAULT_BLOCK_M, DEFAULT_BLOCK_N)
+
+    def test_traffic_counts_are_exact_elements(self):
+        # M=N=block, one K tile: grid loads each grid once -> (M + N)*kt*n
+        t = digit_traffic(8, 8, 16, n_bits=16)
+        assert t["grid_elems"] == (8 + 8) * 16 * 16
+        assert t["broadcast_elems"] == 2 * 8 * 8 * 16 * 16
+        assert t["grid_bytes"] == 4 * t["grid_elems"]
+
+
+class TestServingTilingOverride:
+    def test_dot_tiling_reaches_engine(self):
+        from repro.models.model import Model
+        from repro.serving.engine import ServeEngine
+        from repro.models.config import ModelConfig
+        cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=16,
+                          n_heads=2, n_kv_heads=2, d_ff=32, vocab_size=512,
+                          param_dtype="float32", compute_dtype="float32")
+        model = Model(cfg, DotEngine(mode="native"))
+        eng = ServeEngine(model, params=None, slots=1, max_len=8,
+                          dot_mode="olm16",
+                          dot_tiling={"block_m": 4, "block_n": 16,
+                                      "k_tile": 8})
+        assert eng.model.eng.mode == "olm16"
+        assert eng.model.eng.block_m == 4
+        assert eng.model.eng.block_n == 16
+        assert eng.model.eng.k_tile == 8
+        with pytest.raises(ValueError, match="unknown dot_tiling"):
+            ServeEngine(model, params=None, slots=1, max_len=8,
+                        dot_tiling={"block_q": 4})
