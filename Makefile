@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify bench bench-json test
+.PHONY: verify bench bench-json test tune
 
 # Tier-1 verification (same command as ROADMAP.md / CI)
 verify:
@@ -19,3 +19,10 @@ bench:
 BENCH_ARGS ?=
 bench-json:
 	$(PYTHON) -m benchmarks.run --json-dir results/bench $(BENCH_ARGS)
+
+# Populate the olm matmul tiling-autotuner cache (results/tuning.json)
+# for the launch/shapes.py shape set. TUNE_ARGS passes CLI flags, e.g.
+# TUNE_ARGS="--heuristic-only" to skip measurement.
+TUNE_ARGS ?=
+tune:
+	$(PYTHON) -m repro.kernels.online_dot.tuning $(TUNE_ARGS)

@@ -33,11 +33,13 @@ def _timeit(fn, *args, repeat=3, number=1):
 
 
 def _row(op, *, n=None, k=None, us=0.0, ulp=None, derived=None,
-         bytes_moved=None):
+         bytes_moved=None, bytes_float=None):
     r = {"op": op, "n": n, "k": k, "us": round(us, 2), "ulp": ulp,
          "derived": derived}
     if bytes_moved is not None:
         r["bytes_moved"] = int(bytes_moved)
+    if bytes_float is not None:
+        r["bytes_float"] = int(bytes_float)
     return r
 
 
@@ -225,14 +227,16 @@ def online_dot_bench():
 
 def olm_matmul_bench():
     """DotEngine's olm lowering: the grid-tiled Pallas kernel (operand
-    digit grids loaded once per output tile) against the broadcast
-    oracle (full (M*N, k_tile, n) fan-out — the pre-grid front-end and
-    the engine's in-model default use_pallas=False path). Reports wall
-    time, worst-case |error| vs the exact f32 matmul, how much of the
-    documented olm_error_bound budget that error uses (of_bound <= 1.0
-    is the tested guarantee), and the operand digit-grid bytes each path
-    moves (matmul.digit_traffic) — the reuse factor the paper's
-    minimized-interconnect discipline buys is bytes_bcast/bytes_grid."""
+    digit grids loaded once per output tile, host-side quantize) against
+    the broadcast oracle (full (M*N, k_tile, n) fan-out — the pre-grid
+    front-end and the engine's in-model default use_pallas=False path).
+    Reports wall time, worst-case |error| vs the exact f32 matmul, how
+    much of the documented olm_error_bound budget that error uses
+    (of_bound <= 1.0 is the tested guarantee), and both operand-traffic
+    columns per path (matmul.digit_traffic): the digit-grid bytes this
+    path moves and the float-tile bytes the fused quantize-in-kernel
+    path would move instead (digit / n_bits — see olm_matmul_fused for
+    the fused path's own wall clock)."""
     import jax.numpy as jnp
     from repro.kernels.online_dot.matmul import (DEFAULT_BLOCK_M,
                                                  DEFAULT_BLOCK_N,
@@ -242,7 +246,7 @@ def olm_matmul_bench():
     print("\n== olm_matmul: model GEMMs through the array lowering "
           "(grid kernel vs broadcast oracle) ==")
     print(f"{'MxKxN':>12} {'n':>3} {'path':>6} {'us':>10} {'max_err':>10} "
-          f"{'of_bound':>9} {'op_bytes':>10} {'reuse':>6}")
+          f"{'of_bound':>9} {'digit_B':>10} {'float_B':>9} {'reuse':>6}")
     rows = []
     cases = (((8, 16, 8), False), ((8, 64, 8), False),
              # acceptance case: M=N=64, n=16 — the digit-traffic cut
@@ -267,20 +271,21 @@ def olm_matmul_bench():
                 # real wall clock, comparable across paths
                 fn = lambda: np.asarray(
                     olm_matmul(jnp.asarray(a), jnp.asarray(b),
-                               n_bits=nb, use_pallas=use))
+                               n_bits=nb, use_pallas=use, quantize="host"))
                 fn()  # compile
                 us, got = _timeit(fn, repeat=2)
                 err = np.abs(np.asarray(got) - exact)
                 used = float((err / bound).max())
                 print(f"{M:>4}x{K:>3}x{N:>3} {nb:>3} {label:>6} {us:>10.1f} "
                       f"{err.max():>10.2e} {used:>9.3f} {op_bytes:>10} "
-                      f"{reuse:>6.1f}")
+                      f"{traffic['fused_bytes']:>9} {reuse:>6.1f}")
                 print(f"olm_matmul/{M}x{K}x{N}_n{nb}_{label},"
                       f"{us:.1f},{used:.4f}")
                 rows.append(_row(f"olm_matmul/{label}", n=nb, k=K, us=us,
                                  ulp=round(used, 4),
                                  derived=round(reuse, 2),
-                                 bytes_moved=op_bytes))
+                                 bytes_moved=op_bytes,
+                                 bytes_float=traffic["fused_bytes"]))
     blk = min(DEFAULT_BLOCK_M, DEFAULT_BLOCK_N)
     grid_rows = [r for r in rows if r["op"] == "olm_matmul/grid"]
     bc = {(r["n"], r["k"]): r for r in rows if r["op"] == "olm_matmul/bcast"}
@@ -288,6 +293,61 @@ def olm_matmul_bench():
         mate = bc[(r["n"], r["k"])]
         assert r["bytes_moved"] * (blk // 2) <= mate["bytes_moved"], \
             "grid kernel must cut digit-grid traffic >= min(bm,bn)/2 x"
+    return rows
+
+
+def olm_matmul_fused_bench():
+    """Quantize-in-kernel sweep: grid-host-quantize (pre-expanded digit
+    grids cross HBM) vs grid-in-kernel-quantize (raw float tiles cross
+    HBM, sd_quantize runs in the kernel prologue) vs the broadcast
+    oracle, at the default shape/tiling. Emits bytes_moved and wall
+    time per path; asserts the three outputs are bit-identical and that
+    the fused path moves >= 4x (actually n_bits x) fewer operand bytes
+    than the host-quantize grid path — the CI smoke step re-checks that
+    from the JSON so the traffic win can't silently regress."""
+    import jax.numpy as jnp
+    from repro.kernels.online_dot.matmul import digit_traffic, olm_matmul
+    rng = np.random.default_rng(11)
+    M, K, N = 64, 32, 64
+    print("\n== olm_matmul_fused: where quantization runs "
+          "(host grids vs in-kernel float tiles vs broadcast oracle) ==")
+    print(f"{'MxKxN':>12} {'n':>3} {'path':>11} {'us':>10} "
+          f"{'bytes_moved':>12} {'vs_host':>8}")
+    rows = []
+    a = rng.standard_normal((M, K)).astype(np.float32)
+    b = rng.standard_normal((K, N)).astype(np.float32)
+    for nb in (8, 16):
+        traffic = digit_traffic(M, N, K, n_bits=nb)
+        paths = (
+            ("bcast", dict(use_pallas=False), traffic["broadcast_bytes"]),
+            ("grid-host", dict(use_pallas=True, quantize="host"),
+             traffic["grid_bytes"]),
+            ("grid-fused", dict(use_pallas=True, quantize="kernel"),
+             traffic["fused_bytes"]),
+        )
+        outs = {}
+        for label, kw, op_bytes in paths:
+            fn = lambda: np.asarray(
+                olm_matmul(jnp.asarray(a), jnp.asarray(b), n_bits=nb, **kw))
+            fn()  # compile
+            us, got = _timeit(fn, repeat=2)
+            outs[label] = got
+            vs_host = traffic["grid_bytes"] / op_bytes
+            print(f"{M:>4}x{K:>3}x{N:>3} {nb:>3} {label:>11} {us:>10.1f} "
+                  f"{op_bytes:>12} {vs_host:>8.1f}")
+            print(f"olm_matmul_fused/{M}x{K}x{N}_n{nb}_{label},"
+                  f"{us:.1f},{op_bytes}")
+            rows.append(_row(f"olm_matmul_fused/{label}", n=nb, k=K, us=us,
+                             derived=round(vs_host, 2),
+                             bytes_moved=op_bytes))
+        # one numerics: quantize placement must not change a single bit
+        np.testing.assert_array_equal(outs["grid-fused"], outs["grid-host"])
+        np.testing.assert_array_equal(outs["grid-fused"], outs["bcast"])
+        # the acceptance gate: in-kernel quantize cuts operand traffic
+        # by n_bits x (>= 4x at every supported width) vs host quantize
+        assert traffic["fused_bytes"] * 4 <= traffic["grid_bytes"], \
+            "fused path must move >= 4x fewer operand bytes than host"
+        assert traffic["fused_bytes"] * nb == traffic["grid_bytes"]
     return rows
 
 
@@ -349,6 +409,7 @@ BENCHES = {
     "tpmm": tpmm_bench,
     "online_dot": online_dot_bench,
     "olm_matmul": olm_matmul_bench,
+    "olm_matmul_fused": olm_matmul_fused_bench,
     "fig7": pipeline_activity,
     "roofline": roofline_report,
 }

@@ -16,22 +16,35 @@ FULL_PRECISIONS = {
 # reference path; they stay digit-grid-API only for now).
 MATMUL_MODES = {8: "olm8", 16: "olm16"}
 
-# Grid-kernel tiling for the matmul lowering: k_tile lanes per adder
-# tree (the array width; n + 2*ceil(log2 k_tile) must stay inside the
-# 24-digit f32-exact decode window), and the (block_m, block_n) output
-# tile whose BlockSpecs load each operand digit grid once per tile —
-# the reuse factor is ~2/(1/block_m + 1/block_n).
+# Static grid-kernel tiling for the matmul lowering: k_tile lanes per
+# adder tree (the array width; n + 2*ceil(log2 k_tile) must stay inside
+# the 24-digit f32-exact decode window), and the (block_m, block_n)
+# output tile whose BlockSpecs load each operand once per tile — the
+# reuse factor is ~2/(1/block_m + 1/block_n). Since the autotuner
+# landed (kernels/online_dot/tuning) this is the explicit-opt-out
+# fallback (`engine_for(..., tiling=None)`) and the legacy candidate
+# the tuner always considers; `engine_for` defaults to tiling="auto".
 MATMUL_TILING = {"k_tile": 16, "block_m": 8, "block_n": 8}
 
 
-def engine_for(n_bits: int, **overrides) -> DotEngine:
+def engine_for(n_bits: int, *, tiling: str | None = "auto",
+               **overrides) -> DotEngine:
     """DotEngine running every model GEMM through the n_bits-digit fused
-    inner-product array (kernels/online_dot/matmul). The paper-array
-    MATMUL_TILING is applied unless overridden (any DotEngine field —
-    k_tile, block_m, block_n, use_pallas, interpret — may be)."""
+    inner-product array (kernels/online_dot/matmul).
+
+    tiling="auto" (default) resolves (block_m, block_n) per GEMM shape
+    through the tiling autotuner — a decode GEMV and a training GEMM
+    stop sharing one static 8x8 output tile — while k_tile stays at
+    the kernel's numerics default, so auto output is bit-identical to
+    the static default; tiling=None pins the static paper-array
+    MATMUL_TILING. Any DotEngine field (k_tile, block_m, block_n,
+    use_pallas, interpret) may be overridden and wins over the
+    autotuner."""
     if n_bits not in MATMUL_MODES:
         raise ValueError(
             f"no olm matmul mode at n_bits={n_bits}; "
             f"available: {sorted(MATMUL_MODES)}")
-    return DotEngine(mode=MATMUL_MODES[n_bits],
-                     **{**MATMUL_TILING, **overrides})
+    if tiling not in (None, "auto"):
+        raise ValueError(f"tiling must be 'auto' or None, got {tiling!r}")
+    base = {"tiling": "auto"} if tiling == "auto" else dict(MATMUL_TILING)
+    return DotEngine(mode=MATMUL_MODES[n_bits], **{**base, **overrides})

@@ -114,6 +114,7 @@ def _tpmm8(eng, x, w):
 def _olm_dot(eng: "DotEngine", x: jax.Array, w: jax.Array,
              n_bits: int) -> jax.Array:
     import functools
+    import math
 
     from repro.kernels.online_dot.matmul import olm_matmul
     # Grid-kernel tuning knobs ride on the engine (None = the kernel
@@ -122,6 +123,18 @@ def _olm_dot(eng: "DotEngine", x: jax.Array, w: jax.Array,
     tiling = {k: v for k, v in (("k_tile", eng.k_tile),
                                 ("block_m", eng.block_m),
                                 ("block_n", eng.block_n)) if v is not None}
+    if eng.tiling == "auto" and eng.use_pallas is not False:
+        # Shape-aware autotuned tiling per GEMM (shapes are static at
+        # trace time, so the lookup runs on the host during tracing).
+        # Explicitly pinned engine knobs win over the autotuner. With
+        # use_pallas=False the engine is certain to take the broadcast
+        # oracle, which ignores block shapes (and auto's k_tile is the
+        # pinned default anyway) — skip the lookup rather than pretend
+        # it does something.
+        from repro.kernels.online_dot.tuning import get_tiling
+        auto = get_tiling(math.prod(x.shape[:-1]), w.shape[-1],
+                          x.shape[-1], n_bits)
+        tiling = {**auto, **tiling}
     fn = functools.partial(olm_matmul, **tiling) if tiling else olm_matmul
     return _lowered_dot(eng, x, w, fn, n_bits)
 
@@ -157,12 +170,24 @@ class DotEngine:
     k_tile: Optional[int] = None
     block_m: Optional[int] = None
     block_n: Optional[int] = None
+    # tiling="auto" resolves (block_m, block_n) per GEMM shape through
+    # the kernels/online_dot/tuning autotuner (measured-or-heuristic,
+    # persistent cache) instead of one static default; explicitly set
+    # knobs above still win. Numerics are unchanged: block shapes are
+    # bit-invariant, and the tuner pins k_tile (the one knob that IS a
+    # numerics parameter) to the kernel default — only an explicit
+    # k_tile= here changes it.
+    tiling: Optional[str] = None
 
     def __post_init__(self):
         if self.mode not in _MODES:
             raise ValueError(
                 f"unknown DotEngine mode {self.mode!r}; registered: "
                 f"{', '.join(sorted(_MODES))}")
+        if self.tiling not in (None, "auto"):
+            raise ValueError(
+                f"unknown DotEngine tiling {self.tiling!r}; expected "
+                "None (static knobs / kernel defaults) or 'auto'")
 
     @staticmethod
     def modes() -> Tuple[str, ...]:

@@ -24,6 +24,7 @@ __all__ = [
     "pad_to_multiple",
     "pow2_scale",
     "sd_quantize",
+    "sd_quantize_inkernel",
     "decode_digits",
     "decode_stream",
     "decode_stream_jnp",
@@ -80,22 +81,71 @@ def pad_to_multiple(x: jax.Array, mult: int, axis: int) -> jax.Array:
 
 
 def pow2_scale(a: jax.Array, axis: int) -> jax.Array:
-    """Power-of-two scale per slice along `axis` (kept as size 1), at
-    least 2 * max|a| (exactly 2 * max|a| when the max is itself a power
-    of two, and marginally below under f32 log2 rounding), so u = a /
-    scale lies in [-1/2, 1/2] up to that rounding — consumers must
-    tolerate the closed endpoints. The power-of-two constraint makes
-    every downstream digit decomposition bit-exact, mirroring the SD
-    representation in the hardware design.
+    """Power-of-two scale per slice along `axis` (kept as size 1),
+    exactly 2^(ceil(log2 max|a|) + 1) >= 2 * max|a| (equality iff the
+    max is itself a power of two), so u = a / scale lies in [-1/2, 1/2]
+    with the endpoints closed — consumers must tolerate them. The
+    power-of-two constraint makes every downstream digit decomposition
+    bit-exact, mirroring the SD representation in the hardware design.
 
-    All-zero slices get scale 1.0 (not the 2^-98 a naive log2 floor
+    The exponent is read straight off the float32 bit pattern and the
+    scale is built by writing the exponent field back (both via
+    bitcast) — no log2/exp2 transcendentals, whose backend-dependent
+    ulp wobble would break the bit-identity between the host quantizer
+    and its in-kernel twin. That also makes this function legal inside
+    a Pallas kernel body (no captured array constants, elementwise ops
+    only), which is what lets the fused matmul kernel quantize raw
+    float tiles in its prologue. The exponent arithmetic runs on |max|
+    clamped to the normal range [2^-126, 2^126]; slices whose max
+    exceeds 2^126 are outside the supported domain (their scale 2^128+
+    is not a finite float32) and get an inf scale — the same loud
+    NaN-downstream failure the pre-bitcast exp2 implementation
+    produced there, not a silently saturated wrong value.
+
+    All-zero slices get scale 1.0 (not the 2^-125 the clamp floor
     would give): padding rows/tiles then quantize to all-zero digit
     grids with a benign scale, so padded lanes provably contribute
     exact zeros to any downstream product."""
     amax = jnp.max(jnp.abs(a), axis=axis, keepdims=True)
-    scale = jnp.exp2(jnp.ceil(jnp.log2(jnp.maximum(amax, 1e-30))) + 1.0)
-    scale = jnp.where(amax > 0, scale, 1.0)
-    return scale.astype(jnp.float32)
+    bits = jax.lax.bitcast_convert_type(
+        jnp.clip(amax, jnp.float32(2.0 ** -126), jnp.float32(2.0 ** 126)),
+        jnp.int32)
+    e_floor = (bits >> 23) - 127                 # floor(log2) for normals
+    e_ceil = jnp.where((bits & 0x7FFFFF) == 0, e_floor, e_floor + 1)
+    scale = jax.lax.bitcast_convert_type((e_ceil + 1 + 127) << 23,
+                                         jnp.float32)
+    scale = jnp.where(amax > jnp.float32(2.0 ** 126),
+                      jnp.float32(jnp.inf), scale)
+    return jnp.where(amax > 0, scale, jnp.float32(1.0)).astype(jnp.float32)
+
+
+def sd_quantize_inkernel(a: jax.Array, *, n: int
+                         ) -> tuple[jax.Array, jax.Array]:
+    """Quantize float slices along the *last* axis to MSDF signed-digit
+    grids — the single quantizer implementation, shared verbatim by the
+    host front-end (`sd_quantize` wraps it) and the fused matmul
+    kernel's prologue, so the two paths are bit-identical by
+    construction: same ops, same operands, same backend.
+
+    Legal inside a Pallas TPU kernel body: the digit-position shifts
+    come from `broadcasted_iota` (1-D iota does not lower on TPU),
+    `pow2_scale` is bitcast-based (no captured array constants, no
+    transcendentals), and everything else is elementwise int/float VPU
+    work.
+
+    Returns:
+      digits: (*a.shape, n) int32 in {-1, 0, 1}, appended digit axis,
+        encoding  a ~= scale * sum_i digits_i 2^-i  elementwise with
+        |error| <= scale * 2^-(n+1) (round-to-nearest at 2^-n).
+      scale: a.shape with the last axis reduced to 1; pow2 float32.
+    """
+    a = a.astype(jnp.float32)
+    scale = pow2_scale(a, -1)
+    v = jnp.round((a / scale) * (1 << n)).astype(jnp.int32)  # |v| <= 2^(n-1)
+    sign = jnp.sign(v).astype(jnp.int32)
+    pos = jax.lax.broadcasted_iota(jnp.int32, (1,) * a.ndim + (n,), a.ndim)
+    bits = (jnp.abs(v)[..., None] >> ((n - 1) - pos)) & 1    # digit 1..n
+    return sign[..., None] * bits, scale
 
 
 def sd_quantize(a: jax.Array, *, n: int, axis: int = -1
@@ -104,19 +154,22 @@ def sd_quantize(a: jax.Array, *, n: int, axis: int = -1
     core/sd.frac_to_digits: sign-magnitude binary digits with the sign
     applied to every digit — always a valid SD representation).
 
+    Host-side convenience wrapper over `sd_quantize_inkernel` (the one
+    implementation both paths share): moves `axis` last, quantizes,
+    moves it back.
+
     Returns:
       digits: (*a.shape, n) int32 in {-1, 0, 1}, appended digit axis,
         encoding  a ~= scale * sum_i digits_i 2^-i  elementwise with
         |error| <= scale * 2^-(n+1) (round-to-nearest at 2^-n).
       scale: a.shape with `axis` reduced to 1; power-of-two float32.
     """
-    a = a.astype(jnp.float32)
-    scale = pow2_scale(a, axis)
-    v = jnp.round((a / scale) * (1 << n)).astype(jnp.int32)  # |v| <= 2^(n-1)
-    sign = jnp.sign(v).astype(jnp.int32)
-    shifts = jnp.arange(n - 1, -1, -1, dtype=jnp.int32)      # digit 1..n
-    bits = (jnp.abs(v)[..., None] >> shifts) & 1
-    return sign[..., None] * bits, scale
+    ax = axis % a.ndim
+    if ax == a.ndim - 1:
+        return sd_quantize_inkernel(a, n=n)
+    digits, scale = sd_quantize_inkernel(jnp.moveaxis(a, ax, -1), n=n)
+    return (jnp.moveaxis(digits, -2, ax),
+            jnp.moveaxis(scale, -1, ax))
 
 
 def decode_digits(z, n: int) -> np.ndarray:

@@ -51,12 +51,12 @@ import jax.numpy as jnp
 from repro.core.precision import OnlinePrecision
 from repro.kernels.common import (decode_stream_jnp, pad_to_multiple,
                                   pow2_scale, resolve_use_pallas, sd_quantize)
-from .matmul_kernel import olm_matmul_pallas
+from .matmul_kernel import olm_matmul_fused_pallas, olm_matmul_pallas
 from .ref import online_dot_batch_ref, tree_levels
 
 __all__ = ["olm_matmul", "olm_matmul_ref", "olm_error_bound",
            "digit_traffic", "DEFAULT_K_TILE", "DEFAULT_BLOCK_M",
-           "DEFAULT_BLOCK_N", "ULP_PER_LANE"]
+           "DEFAULT_BLOCK_N", "DEFAULT_QUANTIZE", "ULP_PER_LANE"]
 
 # Array width: lanes reduced by one adder tree. 16 keeps the digit grids
 # VMEM-friendly and the stream length n + 2*ceil(log2 16) = n + 8 within
@@ -68,6 +68,14 @@ DEFAULT_K_TILE = 16
 # already buying an 8x digit-grid reuse factor.
 DEFAULT_BLOCK_M = 8
 DEFAULT_BLOCK_N = 8
+
+# Where signed-digit quantization runs on the Pallas path: "kernel"
+# fuses it into the kernel prologue so raw float tiles are what cross
+# HBM (n x fewer operand elements than digit grids — the paper's
+# recode-inside-the-array interconnect discipline); "host" quantizes up
+# front and ships pre-expanded digit grids (the PR-3 path, kept as the
+# near-oracle reference). Both are bit-identical (shared quantizer).
+DEFAULT_QUANTIZE = "kernel"
 
 # Documented per-lane error ledger in output ulp at 2^-n (see module
 # docstring): 2 quantized operands + 1.1 multiplier truncation, rounded
@@ -139,7 +147,7 @@ def _broadcast_ref(xd, sx, wd, sw, L, **kw) -> jax.Array:
 @functools.partial(
     jax.jit,
     static_argnames=("n_bits", "k_tile", "use_pallas", "block_m", "block_n",
-                     "interpret"),
+                     "quantize", "interpret"),
 )
 def olm_matmul(
     x: jax.Array,  # (M, K) float
@@ -150,16 +158,21 @@ def olm_matmul(
     use_pallas: bool | None = None,
     block_m: int = DEFAULT_BLOCK_M,
     block_n: int = DEFAULT_BLOCK_N,
+    quantize: str = DEFAULT_QUANTIZE,
     interpret: bool = True,
 ) -> jax.Array:
     """Matmul through the fused online inner-product array; (M, N) float32.
 
     use_pallas: True = grid-tiled Pallas kernel, False = int64 jnp
     broadcast oracle, None = Pallas iff the config fits the int32
-    datapath. Both paths are bit-identical (shared quantize plumbing,
-    bit-exact digit arithmetic, order-exact decode and accumulation).
-    block_m/block_n tile the output on the Pallas path (ignored by the
-    oracle, which models the full operand fan-out).
+    datapath. quantize selects where the Pallas path recodes operands:
+    "kernel" (default) fuses sd_quantize into the kernel prologue so
+    raw float tiles cross HBM; "host" ships pre-expanded digit grids
+    (the reference grid path). All three paths are bit-identical
+    (one shared quantizer, bit-exact digit arithmetic, order-exact
+    decode and accumulation). block_m/block_n tile the output on the
+    Pallas path (ignored by the oracle, which models the full operand
+    fan-out).
 
     Raises ValueError when n_bits + 2*ceil(log2 k_tile) exceeds the
     24-digit float32-exact decode window (see decode_stream_jnp).
@@ -168,12 +181,21 @@ def olm_matmul(
     K2, N = w.shape
     if K != K2:
         raise ValueError(f"contraction mismatch: x (M,{K}) @ w ({K2},N)")
+    if quantize not in ("kernel", "host"):
+        raise ValueError(f"quantize must be 'kernel' or 'host', "
+                         f"got {quantize!r}")
     cfg = _olm_cfg(n_bits)
     use = resolve_use_pallas(cfg, use_pallas)
     kw = dict(n=cfg.n, delta=cfg.delta, t=cfg.t, truncated=cfg.truncated,
               tail_gating=cfg.tail_gating, tail_guard=cfg.tail_guard)
     kt, n_tiles, xp, wpT = _tile_plan(x, w, k_tile)
     L = _check_decode_window(n_bits, kt)
+    if use and quantize == "kernel":
+        # No digit grid ever exists outside the kernel: ship the raw
+        # (rows, T, kt) float tiles and recode in the prologue.
+        return olm_matmul_fused_pallas(
+            xp.reshape(M, n_tiles, kt), wpT.reshape(N, n_tiles, kt),
+            block_m=block_m, block_n=block_n, interpret=interpret, **kw)
     xd, sx = _quantize_tiles(xp, kt, n_tiles, n_bits)    # (M,T,kt,n), (M,T)
     wd, sw = _quantize_tiles(wpT, kt, n_tiles, n_bits)   # (N,T,kt,n), (N,T)
     if use:
@@ -209,16 +231,26 @@ def digit_traffic(M: int, N: int, K: int, *, n_bits: int = 16,
                   k_tile: int = DEFAULT_K_TILE,
                   block_m: int = DEFAULT_BLOCK_M,
                   block_n: int = DEFAULT_BLOCK_N) -> dict:
-    """Operand digit-grid traffic ledger for one (M, K) @ (K, N) matmul,
-    in int32 digit elements (4 bytes each) delivered to the compute body.
+    """Operand traffic ledger for one (M, K) @ (K, N) matmul, in
+    elements (4 bytes each — int32 digits or float32 tiles) delivered
+    to the compute body.
 
-    broadcast: the oracle/front-end fan-out — both grids replicated to
-      (M*N, kt, n) per K tile, i.e. x digits N times and w digits M times.
-    grid: the grid kernel's BlockSpec loads — each x-row grid once per
-      (row tile, K tile) and each w-column grid once per (column tile,
-      K tile); reuse = broadcast / grid, the harmonic mean
-      2/(1/block_m + 1/block_n) for even tilings (>= min(block_m,
-      block_n), and exactly min/2 x in the most lopsided case).
+    broadcast: the oracle/front-end fan-out — both digit grids
+      replicated to (M*N, kt, n) per K tile, i.e. x digits N times and
+      w digits M times.
+    grid: the host-quantize grid kernel's BlockSpec loads — each x-row
+      digit grid once per (row tile, K tile) and each w-column grid
+      once per (column tile, K tile); reuse = broadcast / grid, the
+      harmonic mean 2/(1/block_m + 1/block_n) for even tilings
+      (>= min(block_m, block_n), and exactly min/2 x in the most
+      lopsided case).
+    fused: the quantize-in-kernel path — the same BlockSpec reuse
+      pattern, but each load is a raw (block, kt) *float tile* rather
+      than its (block, kt, n) digit-grid expansion, so element counts
+      drop by n_bits x again: fused_elems = grid_elems / n_bits, and
+      fused_reuse = broadcast / fused = n_bits * grid reuse. This is
+      what the paper's recode-inside-the-array interconnect saving
+      looks like in HBM bytes.
 
     Per output tile the grid path materializes block_m + block_n
     operand grids where broadcast materializes block_m * block_n of
@@ -233,13 +265,19 @@ def digit_traffic(M: int, N: int, K: int, *, n_bits: int = 16,
     m_tiles = -(-M // bm)
     n_out_tiles = -(-N // bn)
     per_grid = kt * n_bits                      # one row/column digit grid
+    per_tile = kt                               # one raw float row/column
+    loads = m_tiles * bm * n_out_tiles + n_out_tiles * bn * m_tiles
     broadcast = 2 * M * N * per_grid * n_tiles
-    grid = (m_tiles * bm * n_out_tiles + n_out_tiles * bn * m_tiles) \
-        * per_grid * n_tiles
+    grid = loads * per_grid * n_tiles
+    fused = loads * per_tile * n_tiles
     return {
         "broadcast_elems": broadcast,
         "grid_elems": grid,
+        "fused_elems": fused,
         "broadcast_bytes": 4 * broadcast,
         "grid_bytes": 4 * grid,
+        "fused_bytes": 4 * fused,
         "reuse": broadcast / grid,
+        "fused_reuse": broadcast / fused,
+        "fused_vs_grid": grid / fused,          # == n_bits
     }

@@ -4,8 +4,8 @@ This is the operand-reuse kernel the paper's *minimized interconnect*
 claim maps to on a TPU substrate: instead of the front-end broadcasting
 digit grids to (M*N, k_tile, n) on the host — the hardware's full
 operand fan-out — the kernel runs on an (M_tiles, N_tiles, K_tiles)
-grid whose BlockSpecs deliver each x-row digit grid once per output-row
-tile and each w-column digit grid once per output-column tile:
+grid whose BlockSpecs deliver each x-row operand once per output-row
+tile and each w-column operand once per output-column tile:
 
   x digits (M, T, kt, n): block (block_m, 1, kt, n) at (i, kk) — the
       index map ignores the N grid axis, so a row grid is fetched once
@@ -23,16 +23,35 @@ resident (block_m, block_n) float32 output block across the K grid
 dimension (innermost, so the block stays live — no Python K loop, no
 host-side partial-product round trips).
 
+Two operand formats share that datapath:
+
+  olm_matmul_pallas — the host-quantize path: operands arrive as
+      pre-expanded signed-digit grids, so every BlockSpec load moves
+      kt*n int32 digits per row/column. This is the oracle-adjacent
+      reference kernel.
+  olm_matmul_fused_pallas — the quantize-in-kernel path: BlockSpecs
+      load *raw float32 tiles* ((block, 1, kt) — n x fewer elements
+      than the digit grids they encode) and the kernel prologue runs
+      kernels/common.sd_quantize_inkernel, the exact function the host
+      front-end uses, before the same lane_tree body. This is the
+      software analog of the paper's interconnect discipline: recoding
+      happens *inside* the array, so only narrow operands cross HBM
+      (matmul.digit_traffic's fused_bytes column measures the cut).
+
 Digit-grid traffic per K tile drops from 2*M*N*kt*n elements to
 (M*N_tiles + N*M_tiles)*kt*n — a harmonic-mean reuse factor
-2/(1/block_m + 1/block_n) >= min(block_m, block_n), measured by
+2/(1/block_m + 1/block_n) >= min(block_m, block_n) — and the fused
+path divides the per-grid element count by n again, measured by
 matmul.digit_traffic and asserted in tests/test_olm_matmul_grid.py.
 
-Bit-identity with the broadcast oracle holds by construction: the digit
-arithmetic is lane_tree (bit-exact vs the int64 recurrence), the decode
-is exact in float32 for any reduction order within the guarded
-n + 2L <= 24 stream window, every scale multiply is by a power of two
-(exact), and the K-tile accumulation order matches the oracle's loop.
+Bit-identity across all three paths (fused kernel, host-quantize
+kernel, broadcast oracle) holds by construction: the quantizer is one
+shared function (sd_quantize_inkernel — bitcast pow2 scales, no
+transcendentals), the digit arithmetic is lane_tree (bit-exact vs the
+int64 recurrence), the decode is exact in float32 for any reduction
+order within the guarded n + 2L <= 24 stream window, every scale
+multiply is by a power of two (exact), and the K-tile accumulation
+order matches the oracle's loop.
 
 interpret=True on the CPU container; flip to False on a real TPU
 (ROADMAP open item: validate the Mosaic lowering of the 4-D operand
@@ -48,16 +67,37 @@ from jax.experimental import pallas as pl
 
 from repro.core.precision import OnlinePrecision
 from repro.kernels.common import (checked_schedule, decode_stream_inkernel,
-                                  pad_to_multiple)
+                                  pad_to_multiple, sd_quantize_inkernel)
 from .kernel import lane_tree
 from .ref import tree_levels
 
-__all__ = ["olm_matmul_pallas"]
+__all__ = ["olm_matmul_pallas", "olm_matmul_fused_pallas"]
+
+
+def _accumulate_tile(xd, sx, wd, sw, sched, out_ref, *, n, delta, t, S, L):
+    """Shared tile body: fan the per-row / per-column digit grids out to
+    the (bm * bn) PE lane batch inside VMEM, run lane_tree, decode, fold
+    the exact 2^L tree scale and the pow2 quantization scales, and
+    accumulate into the resident float32 output block. Both operand
+    formats (pre-quantized grids, raw float tiles) end up here, so their
+    arithmetic is identical instruction for instruction."""
+    bm, kt, _ = xd.shape
+    bn = wd.shape[0]
+    # Operand reuse happens here: each row/column grid was loaded (or,
+    # on the fused path, produced from its float tile) once and is
+    # fanned out to the (bm * bn) PE lane batch inside VMEM.
+    xg = jnp.broadcast_to(xd[:, None], (bm, bn, kt, n)).reshape(bm * bn, kt, n)
+    wg = jnp.broadcast_to(wd[None, :], (bm, bn, kt, n)).reshape(bm * bn, kt, n)
+    z = lane_tree(xg, wg, sched, n=n, delta=delta, t=t, S=S)
+    val = decode_stream_inkernel(z) * jnp.float32(1 << L)   # exact 2^L fold
+    scale = sx.reshape(bm, 1) * sw.reshape(1, bn)           # (bm, bn), pow2
+    out_ref[...] += val.reshape(bm, bn) * scale
 
 
 def _kernel(sched_ref, xd_ref, sx_ref, wd_ref, sw_ref, out_ref,
             *, n, delta, t, S, L):
-    """One (block_m, block_n) output tile x one K tile."""
+    """One (block_m, block_n) output tile x one K tile, host-quantized
+    operands: digit grids cross HBM."""
 
     @pl.when(pl.program_id(2) == 0)
     def _():
@@ -65,16 +105,28 @@ def _kernel(sched_ref, xd_ref, sx_ref, wd_ref, sw_ref, out_ref,
 
     xd = xd_ref[...][:, 0]     # (block_m, kt, n) int32 digits in {-1,0,1}
     wd = wd_ref[...][:, 0]     # (block_n, kt, n)
-    bm, kt, _ = xd.shape
-    bn = wd.shape[0]
-    # Operand reuse happens here: each row/column grid was loaded once
-    # and is fanned out to the (bm * bn) PE lane batch inside VMEM.
-    xg = jnp.broadcast_to(xd[:, None], (bm, bn, kt, n)).reshape(bm * bn, kt, n)
-    wg = jnp.broadcast_to(wd[None, :], (bm, bn, kt, n)).reshape(bm * bn, kt, n)
-    z = lane_tree(xg, wg, sched_ref[...], n=n, delta=delta, t=t, S=S)
-    val = decode_stream_inkernel(z) * jnp.float32(1 << L)   # exact 2^L fold
-    scale = sx_ref[...] * sw_ref[...].reshape(1, bn)        # (bm, bn), pow2
-    out_ref[...] += val.reshape(bm, bn) * scale
+    _accumulate_tile(xd, sx_ref[...], wd, sw_ref[...], sched_ref[...],
+                     out_ref, n=n, delta=delta, t=t, S=S, L=L)
+
+
+def _fused_kernel(sched_ref, x_ref, w_ref, out_ref, *, n, delta, t, S, L):
+    """One (block_m, block_n) output tile x one K tile, quantize fused
+    into the prologue: raw float32 tiles cross HBM (n x fewer elements
+    than their digit grids) and the signed-digit recoding happens here,
+    inside the array — the paper's reduced-interconnect discipline."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _():
+        out_ref[...] = jnp.zeros(out_ref.shape, out_ref.dtype)
+
+    xt = x_ref[...][:, 0]      # (block_m, kt) raw float32 row tile
+    wt = w_ref[...][:, 0]      # (block_n, kt) raw float32 column tile
+    # The prologue IS the host quantizer (same function, same backend):
+    # digits and pow2 scales are bit-identical to sd_quantize on host.
+    xd, sx = sd_quantize_inkernel(xt, n=n)   # (bm, kt, n), (bm, 1)
+    wd, sw = sd_quantize_inkernel(wt, n=n)
+    _accumulate_tile(xd, sx, wd, sw, sched_ref[...], out_ref,
+                     n=n, delta=delta, t=t, S=S, L=L)
 
 
 @functools.partial(
@@ -144,4 +196,70 @@ def olm_matmul_pallas(
         out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
         interpret=interpret,
     )(jnp.asarray(sched_np), xd, sx, wd, sw)
+    return out[:M, :N]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n", "delta", "t", "truncated", "tail_gating",
+                     "tail_guard", "block_m", "block_n", "interpret"),
+)
+def olm_matmul_fused_pallas(
+    x_tiles: jax.Array,    # (M, T, kt) float32 raw per-K-tile row slices
+    w_tiles: jax.Array,    # (N, T, kt) raw column slices (from w.T)
+    *,
+    n: int,
+    delta: int = 3,
+    t: int = 2,
+    truncated: bool = True,
+    tail_gating: bool = True,
+    tail_guard: int = 2,
+    block_m: int = 8,
+    block_n: int = 8,
+    interpret: bool = True,  # CPU container: interpret; False on real TPU
+) -> jax.Array:
+    """Grid-tiled matmul with signed-digit quantization fused into the
+    kernel prologue; returns (M, N) float32.
+
+    Operands arrive as *raw float32 tiles* — no digit grids ever exist
+    on the host or in HBM. Each BlockSpec load moves a (block, 1, kt)
+    float tile (n x fewer elements than the (block, 1, kt, n) digit
+    grids olm_matmul_pallas ships); the prologue runs
+    kernels/common.sd_quantize_inkernel — the very function the host
+    front-end uses — so digits, scales, and therefore the output are
+    bit-identical to the host-quantize path and the broadcast oracle.
+    """
+    cfg = OnlinePrecision(n=n, delta=delta, t=t, truncated=truncated,
+                          tail_gating=tail_gating, tail_guard=tail_guard)
+    sched_np, S = checked_schedule(cfg)
+    M, T, kt = x_tiles.shape
+    N = w_tiles.shape[0]
+    if w_tiles.shape[1:] != (T, kt):
+        raise ValueError(
+            f"w tiles {w_tiles.shape} do not match x tiles "
+            f"{x_tiles.shape} in (K_tiles, k_tile)")
+    L = tree_levels(kt)
+    bm = max(1, min(block_m, M))
+    bn = max(1, min(block_n, N))
+    # Zero-padding rows is benign: all-zero tiles quantize in-kernel to
+    # all-zero digit grids with scale 1.0 (pow2_scale's zero guard).
+    xt = pad_to_multiple(x_tiles.astype(jnp.float32), bm, 0)
+    wt = pad_to_multiple(w_tiles.astype(jnp.float32), bn, 0)
+    Mp, Np = xt.shape[0], wt.shape[0]
+    grid = (Mp // bm, Np // bn, T)   # K innermost: accumulator stays live
+    kern = functools.partial(_fused_kernel, n=n, delta=delta, t=t, S=S, L=L)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n + delta,), lambda i, j, k: (0,)),     # schedule
+            pl.BlockSpec((bm, 1, kt),
+                         lambda i, j, k: (i, k, 0)),   # x float rows: j-blind
+            pl.BlockSpec((bn, 1, kt),
+                         lambda i, j, k: (j, k, 0)),   # w float cols: i-blind
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+        interpret=interpret,
+    )(jnp.asarray(sched_np), xt, wt)
     return out[:M, :N]

@@ -1,0 +1,348 @@
+"""Shape-aware tiling autotuner for the olm grid matmul.
+
+The grid kernel's three knobs — (k_tile, block_m, block_n) — were a
+single static default (`configs/olm_array.MATMUL_TILING`, 16/8/8)
+regardless of GEMM shape, which is wrong at both extremes: a decode
+GEMV (M=1) wastes its whole block_m dimension, and a fat training GEMM
+leaves reuse on the table with an 8x8 tile. This module replaces the
+static default with a measured-or-heuristic lookup keyed on
+power-of-two buckets of (M, N, K, n_bits):
+
+  * `get_tiling(M, N, K, n_bits)` — the lookup the DotEngine
+    `tiling="auto"` path calls per GEMM shape at trace time. Cache hit
+    returns the stored entry (measured if `tune` ran, else the
+    memoized heuristic); miss computes `heuristic_tiling` and memoizes
+    it, so repeated traces of the same bucket are hits.
+  * `tune(M, N, K, n_bits)` — measures a small candidate grid around
+    the heuristic with `olm_matmul` on random data (shapes capped so
+    tuning stays CPU-friendly; the bucket key still records the real
+    shape class) and persists the winner.
+  * `TuningCache` — the persistent JSON store, default
+    `results/tuning.json` (`REPRO_TUNING_CACHE` overrides; `make tune`
+    populates it for the launch/shapes.py shape set via the CLI below).
+
+`tiling="auto"` is a pure performance choice that cannot change
+numerics, and the knob split is what guarantees that: block_m/block_n
+only re-tile the *output* (the quantizer, digit arithmetic, decode,
+and K-tile accumulation order are all block-invariant — bit-identity
+is property-tested), so the tuner explores them freely; k_tile, by
+contrast, is a numerics parameter — it sets the quantization slice
+width, adder-tree depth, and the per-K-tile term of olm_error_bound —
+so the auto path pins it to the kernel default (DEFAULT_K_TILE,
+clamped to K exactly as the kernel itself does) and a different
+k_tile must be an explicit caller choice (`DotEngine(k_tile=...)`,
+which wins over the tuner). Every candidate also respects the
+float32-exact decode window (n_bits + 2*ceil(log2 k_tile) <= 24) and
+the VMEM lane budget, so autotuning can never select a configuration
+the kernel would refuse.
+
+CLI (what `make tune` runs):
+
+  PYTHONPATH=src python -m repro.kernels.online_dot.tuning \
+      [--cache results/tuning.json] [--heuristic-only] [--cap 48]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+from typing import Dict, Optional
+
+from .ref import tree_levels
+
+__all__ = ["Tiling", "TuningCache", "bucket", "bucket_key", "max_k_tile",
+           "heuristic_tiling", "get_tiling", "tune", "default_cache"]
+
+# In-kernel lane batch budget (block_m * block_n * k_tile): the fused
+# kernel materializes this many multiplier lanes in VMEM per grid step.
+# 2048 keeps the digit matrices ((lanes, kt, n) int32) comfortably
+# inside a ~16 MB VMEM at n = 16 while leaving room to grow blocks.
+LANE_BUDGET = 2048
+
+# float32-exact stream decode window (kernels/common.decode_stream_jnp).
+DECODE_WINDOW = 24
+
+# Anchored to the repo root (four levels above this file's package
+# directory), not the CWD: `make tune` from the repo root and a serving
+# process launched from anywhere must agree on where the cache lives.
+# REPRO_TUNING_CACHE overrides for deployments with their own layout.
+_REPO_ROOT = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "..", "..", ".."))
+DEFAULT_CACHE_PATH = os.path.join(_REPO_ROOT, "results", "tuning.json")
+
+
+@dataclasses.dataclass(frozen=True)
+class Tiling:
+    """One grid-kernel configuration, the value the autotuner trades in."""
+    k_tile: int
+    block_m: int
+    block_n: int
+
+    def as_dict(self) -> Dict[str, int]:
+        return {"k_tile": self.k_tile, "block_m": self.block_m,
+                "block_n": self.block_n}
+
+
+def _pow2_ceil(v: int) -> int:
+    return 1 << max(0, int(v - 1).bit_length())
+
+
+def _pow2_floor(v: int) -> int:
+    return 1 << max(0, int(v).bit_length() - 1)
+
+
+def bucket(v: int) -> int:
+    """Shape bucket: the next power of two (>= 1). GEMM dims within one
+    bucket share a tiling entry, so the cache stays O(log shapes)."""
+    return _pow2_ceil(max(1, v))
+
+
+def bucket_key(M: int, N: int, K: int, n_bits: int) -> str:
+    return f"m{bucket(M)}n{bucket(N)}k{bucket(K)}b{n_bits}"
+
+
+def max_k_tile(n_bits: int) -> int:
+    """Largest power-of-two k_tile whose dot stream still decodes
+    exactly in float32: n_bits + 2*ceil(log2 kt) <= DECODE_WINDOW."""
+    kt = 1
+    while n_bits + 2 * tree_levels(kt * 2) <= DECODE_WINDOW:
+        kt *= 2
+    return kt
+
+
+def heuristic_tiling(M: int, N: int, K: int, n_bits: int) -> Tiling:
+    """Shape-aware default when nothing has been measured for a bucket.
+
+    k_tile is pinned to the kernel's numerics default (DEFAULT_K_TILE,
+    clamped to K exactly like the kernel's own kt = min(k_tile, K)) —
+    it sets the quantization slice width and adder-tree depth, so
+    letting the tuner move it would change results; see the module
+    docstring. The LANE_BUDGET residual is then split between block_m
+    and block_n near-square, each capped at its output dim — so a GEMV
+    (M=1) spends the whole budget on block_n instead of wasting 7/8 of
+    an 8x8 tile on nonexistent rows.
+    """
+    from .matmul import DEFAULT_K_TILE
+    # max_k_tile keeps the decode-window guarantee structural even if
+    # DEFAULT_K_TILE is ever raised past what a given n_bits allows
+    kt = min(DEFAULT_K_TILE, _pow2_ceil(K), max_k_tile(n_bits))
+    per_out = max(1, LANE_BUDGET // kt)          # block_m * block_n budget
+    bm = min(_pow2_ceil(M), _pow2_floor(max(1, int(per_out ** 0.5))))
+    bn = min(_pow2_ceil(N), max(1, per_out // bm))
+    bm = min(_pow2_ceil(M), max(1, per_out // bn))   # regrow if N was small
+    return Tiling(k_tile=kt, block_m=bm, block_n=bn)
+
+
+class TuningCache:
+    """Persistent (bucket key -> tiling entry) store with hit/miss
+    accounting. Entries are plain JSON dicts:
+
+      {"k_tile": .., "block_m": .., "block_n": ..,
+       "source": "measured" | "heuristic",
+       "shape": [M, N, K], "n_bits": .., "us": .. (measured only)}
+
+    Disk writes only happen via `save()` (the `tune` path); heuristic
+    memoization stays in memory so tracing a model never writes files.
+    """
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path if path is not None else os.environ.get(
+            "REPRO_TUNING_CACHE", DEFAULT_CACHE_PATH)
+        self.hits = 0
+        self.misses = 0
+        self._entries: Optional[Dict[str, dict]] = None
+
+    # -- storage --
+    def _load(self) -> Dict[str, dict]:
+        if self._entries is None:
+            self._entries = {}
+            if self.path and os.path.exists(self.path):
+                with open(self.path) as f:
+                    data = json.load(f)
+                self._entries = dict(data.get("entries", {}))
+        return self._entries
+
+    def save(self) -> None:
+        entries = self._load()
+        os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+        with open(self.path, "w") as f:
+            json.dump({"entries": entries}, f, indent=1, sort_keys=True)
+
+    # -- lookup API --
+    def lookup(self, M: int, N: int, K: int, n_bits: int) -> Optional[Tiling]:
+        e = self._load().get(bucket_key(M, N, K, n_bits))
+        if e is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        return Tiling(e["k_tile"], e["block_m"], e["block_n"])
+
+    def store(self, M: int, N: int, K: int, n_bits: int, tiling: Tiling,
+              *, source: str, us: Optional[float] = None) -> None:
+        entry = {**tiling.as_dict(), "source": source,
+                 "shape": [M, N, K], "n_bits": n_bits}
+        if us is not None:
+            entry["us"] = round(us, 2)
+        self._load()[bucket_key(M, N, K, n_bits)] = entry
+
+
+_DEFAULT_CACHE: Optional[TuningCache] = None
+
+
+def default_cache() -> TuningCache:
+    """The process-wide cache `tiling="auto"` reads (lazy singleton, so
+    REPRO_TUNING_CACHE set before first use is honored)."""
+    global _DEFAULT_CACHE
+    if _DEFAULT_CACHE is None:
+        _DEFAULT_CACHE = TuningCache()
+    return _DEFAULT_CACHE
+
+
+def get_tiling(M: int, N: int, K: int, n_bits: int,
+               cache: Optional[TuningCache] = None) -> Dict[str, int]:
+    """Measured-or-heuristic tiling for one GEMM shape (the
+    `tiling="auto"` entry point; shapes are static at trace time so
+    this runs on the host during tracing). Cache miss falls back to
+    `heuristic_tiling` and memoizes it in-memory, so the next trace of
+    the same bucket is a hit.
+
+    k_tile is re-pinned to the numerics default on every read — not
+    just at write time — so the never-changes-numerics guarantee is
+    structural: a cache file written by an older version, a different
+    DEFAULT_K_TILE, or a hand edit can adjust blocks (pure perf) but
+    can never alter what `tiling="auto"` computes."""
+    from .matmul import DEFAULT_K_TILE
+    cache = cache or default_cache()
+    pinned = min(DEFAULT_K_TILE, _pow2_ceil(K), max_k_tile(n_bits))
+    hit = cache.lookup(M, N, K, n_bits)
+    if hit is not None:
+        return {**hit.as_dict(), "k_tile": pinned}
+    t = heuristic_tiling(M, N, K, n_bits)
+    cache.store(M, N, K, n_bits, t, source="heuristic")
+    return {**t.as_dict(), "k_tile": pinned}
+
+
+def _candidates(M: int, N: int, K: int, n_bits: int) -> list[Tiling]:
+    """Small candidate grid around the heuristic: the heuristic itself,
+    the static legacy block shape, and block halvings/doublings that
+    stay inside the lane budget and output dims. k_tile is pinned to
+    the heuristic's numerics-default value for every candidate (see
+    module docstring) — the tuner only races bit-identical tilings."""
+    base = heuristic_tiling(M, N, K, n_bits)
+    kt = base.k_tile
+    cands = {base,
+             Tiling(kt, min(8, _pow2_ceil(M)), min(8, _pow2_ceil(N)))}
+    for bm in {base.block_m, max(1, base.block_m // 2),
+               min(_pow2_ceil(M), base.block_m * 2)}:
+        for bn in {base.block_n, max(1, base.block_n // 2),
+                   min(_pow2_ceil(N), base.block_n * 2)}:
+            if bm * bn * kt <= LANE_BUDGET:
+                cands.add(Tiling(kt, bm, bn))
+    return sorted(cands, key=lambda t: (t.k_tile, t.block_m, t.block_n))
+
+
+def tune(M: int, N: int, K: int, n_bits: int,
+         cache: Optional[TuningCache] = None, *, cap: int = 48,
+         repeat: int = 2, save: bool = True) -> Tiling:
+    """Measure the candidate grid for one GEMM bucket and persist the
+    winner. Candidates come from the *real* shape; measurement shapes
+    are capped (CPU interpret mode cannot time a million-row GEMM; the
+    bucket key still records the real shape class, and relative tile
+    timings transfer because the kernel's per-tile work is
+    shape-independent) — but each proxy dim is grown to cover the
+    largest candidate block, so a candidate is never silently clipped
+    by the proxy and a measured entry can never lose to the heuristic
+    it was supposed to improve on (the heuristic is in the race)."""
+    import numpy as np
+
+    import jax.numpy as jnp
+
+    from .matmul import olm_matmul
+
+    cands = _candidates(M, N, K, n_bits)
+    Mc = min(M, max(cap, 2 * max(c.block_m for c in cands)))
+    Nc = min(N, max(cap, 2 * max(c.block_n for c in cands)))
+    Kc = min(K, max(cap, max(c.k_tile for c in cands)))
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((Mc, Kc)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((Kc, Nc)).astype(np.float32))
+    best, best_us = None, float("inf")
+    for cand in cands:
+        fn = lambda: np.asarray(olm_matmul(
+            x, w, n_bits=n_bits, use_pallas=True, quantize="kernel",
+            k_tile=cand.k_tile, block_m=cand.block_m, block_n=cand.block_n))
+        fn()   # compile
+        us = float("inf")
+        for _ in range(repeat):
+            t0 = time.perf_counter()
+            fn()
+            us = min(us, (time.perf_counter() - t0) * 1e6)
+        if us < best_us:
+            best, best_us = cand, us
+    cache = cache or default_cache()
+    cache.store(M, N, K, n_bits, best, source="measured", us=best_us)
+    if save:
+        cache.save()
+    return best
+
+
+# ---------------------------------------------------------------- CLI
+
+
+def _launch_gemms() -> list[tuple[int, int, int]]:
+    """Representative (M, N, K) GEMMs for the launch/shapes.py shape
+    set: per shape case, M is the flattened row count its kind feeds
+    the dot engine (decode = global_batch rows, train/prefill =
+    batch*seq), crossed with the canonical projection shapes of a
+    transformer block at small/large d_model (attn d->d, MLP d->4d and
+    4d->d)."""
+    from repro.launch.shapes import SHAPES
+
+    gemms = set()
+    for case in SHAPES.values():
+        rows = (case.global_batch if case.kind == "decode"
+                else case.global_batch * case.seq_len)
+        for d in (1024, 4096):
+            gemms.update({(rows, d, d), (rows, 4 * d, d), (rows, d, 4 * d)})
+    return sorted(gemms)
+
+
+def main(argv: Optional[list[str]] = None) -> None:
+    ap = argparse.ArgumentParser(
+        description="populate the olm matmul tiling cache for the "
+                    "launch/shapes.py shape set")
+    ap.add_argument("--cache", default=None,
+                    help=f"cache path (default {DEFAULT_CACHE_PATH} or "
+                         "$REPRO_TUNING_CACHE)")
+    ap.add_argument("--cap", type=int, default=48,
+                    help="per-dim measurement cap (CPU-friendly proxies)")
+    ap.add_argument("--heuristic-only", action="store_true",
+                    help="record heuristic tilings without measuring")
+    ap.add_argument("--n-bits", default="8,16",
+                    help="comma-separated digit widths to tune")
+    args = ap.parse_args(argv)
+    cache = TuningCache(args.cache)
+    n_bits_list = [int(s) for s in args.n_bits.split(",")]
+    gemms = _launch_gemms()
+    seen = set()
+    for (M, N, K) in gemms:
+        for nb in n_bits_list:
+            key = bucket_key(M, N, K, nb)
+            if key in seen:
+                continue
+            seen.add(key)
+            if args.heuristic_only:
+                t = heuristic_tiling(M, N, K, nb)
+                cache.store(M, N, K, nb, t, source="heuristic")
+                print(f"{key}: heuristic {t.as_dict()}")
+            else:
+                t = tune(M, N, K, nb, cache, cap=args.cap, save=False)
+                print(f"{key}: measured {t.as_dict()}")
+    cache.save()
+    print(f"wrote {len(seen)} entries to {cache.path}")
+
+
+if __name__ == "__main__":
+    main()

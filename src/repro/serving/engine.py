@@ -17,7 +17,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import Callable, Deque, Dict, List, Optional
+from typing import Callable, Deque, Dict, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -45,18 +45,40 @@ class ServeEngine:
     def __init__(self, model: Model, params, *, slots: int = 4,
                  max_len: int = 512, greedy: bool = True,
                  dot_mode: Optional[str] = None,
-                 dot_tiling: Optional[Dict[str, int]] = None):
+                 dot_tiling: Union[str, Dict[str, object], None] = None):
         # Per-deployment numerics override: serve the same checkpoint under
         # any registered DotEngine mode (e.g. "olm16" routes every decode
         # GEMM through the fused inner-product array) without touching the
         # model config or the engine's interpret/use_pallas deployment
-        # knobs. dot_tiling tunes the olm grid kernel per deployment
-        # (k_tile / block_m / block_n — e.g. widen block_n for the fat
-        # decode GEMVs). Params are unchanged — the digit modes quantize
-        # at use from the stored dtype.
+        # knobs. dot_tiling tunes the olm grid kernel per deployment:
+        # the string "auto" (or {"tiling": "auto"}) turns on the
+        # shape-aware autotuner so prefill GEMMs and decode GEMVs each
+        # get their own (block_m, block_n) output tile — k_tile stays
+        # at the numerics default, so auto never changes outputs;
+        # explicit k_tile / block_m / block_n pins override it (e.g.
+        # widen block_n for the fat decode GEMVs). Params are unchanged
+        # — the digit modes quantize at use from the stored dtype.
+        if isinstance(dot_tiling, str):
+            if dot_tiling != "auto":
+                raise ValueError(
+                    f"unknown dot_tiling {dot_tiling!r}: the only string "
+                    "form is 'auto' (or pass a dict of knobs)")
+            dot_tiling = {"tiling": "auto"}
         override = dict(dot_tiling or {})
-        if bad := set(override) - {"k_tile", "block_m", "block_n"}:
+        if bad := set(override) - {"k_tile", "block_m", "block_n", "tiling"}:
             raise ValueError(f"unknown dot_tiling knobs: {sorted(bad)}")
+        if override.get("tiling") == "auto":
+            # Asking for the autotuner must actually engage it: clear
+            # the block knobs the model's engine had pinned (explicit
+            # knobs win over auto inside the engine, so stale static
+            # pins would silently turn "auto" into a no-op). Blocks are
+            # pure perf, so clearing them is safe; a pinned k_tile is a
+            # numerics choice (quantization slice width / tree depth)
+            # and survives — auto would supply the same default anyway
+            # unless the model builder pinned it deliberately. Knobs
+            # passed in this same dot_tiling dict survive too.
+            for knob in ("block_m", "block_n"):
+                override.setdefault(knob, None)
         if dot_mode is not None and dot_mode != model.eng.mode:
             override["mode"] = dot_mode
         if override:

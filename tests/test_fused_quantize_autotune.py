@@ -1,0 +1,336 @@
+"""Quantize-in-kernel olm matmul + the shape-aware tiling autotuner.
+
+Contracts under test:
+  * in-kernel sd_quantize — run *inside* a Pallas kernel body — emits
+    bit-identical digits and pow2 scales to the host quantizer (they
+    are one shared function), across n in {8, 16};
+  * the fused matmul path (raw float tiles over HBM, quantize in the
+    kernel prologue) is bit-identical to the host-quantize grid path
+    and the jnp broadcast oracle for every olm mode, ragged M/N/K, and
+    GEMV shapes;
+  * digit_traffic's fused columns: the fused path moves exactly
+    grid / n_bits operand elements (>= 4x fewer bytes at every
+    supported width — the acceptance gate);
+  * the autotuner: cache miss -> heuristic memoized -> hit; measured
+    entries persist across TuningCache instances; every produced
+    tiling respects the float32-exact decode window; and
+    tiling="auto" never changes numerics — only wall clock.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.configs.olm_array import MATMUL_MODES, MATMUL_TILING, engine_for
+from repro.core.numerics import DotEngine
+from repro.kernels.common import sd_quantize, sd_quantize_inkernel
+from repro.kernels.online_dot import tuning
+from repro.kernels.online_dot.matmul import digit_traffic, olm_matmul
+from repro.kernels.online_dot.ref import tree_levels
+from repro.kernels.online_dot.tuning import (Tiling, TuningCache, bucket_key,
+                                             get_tiling, heuristic_tiling,
+                                             max_k_tile, tune)
+
+
+def _pair(rng, M, K, N):
+    return (jnp.asarray(rng.standard_normal((M, K)).astype(np.float32)),
+            jnp.asarray(rng.standard_normal((K, N)).astype(np.float32)))
+
+
+class TestInKernelQuantize:
+    @pytest.mark.parametrize("n", [8, 16])
+    def test_inside_pallas_bitwise_matches_host(self, rng, n):
+        """The quantizer run as a Pallas kernel body must reproduce the
+        host sd_quantize digits and scales bit for bit."""
+        a = jnp.asarray(rng.standard_normal((6, 16)).astype(np.float32))
+
+        def kern(x_ref, d_ref, s_ref):
+            d, s = sd_quantize_inkernel(x_ref[...], n=n)
+            d_ref[...] = d
+            s_ref[...] = s
+
+        d_k, s_k = pl.pallas_call(
+            kern,
+            out_shape=(jax.ShapeDtypeStruct((6, 16, n), jnp.int32),
+                       jax.ShapeDtypeStruct((6, 1), jnp.float32)),
+            interpret=True)(a)
+        d_h, s_h = sd_quantize(a, n=n, axis=-1)
+        np.testing.assert_array_equal(np.asarray(d_k), np.asarray(d_h))
+        np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s_h))
+        assert set(np.unique(np.asarray(d_k))) <= {-1, 0, 1}
+
+    def test_host_wrapper_moves_axis(self, rng):
+        a = jnp.asarray(rng.standard_normal((4, 6)).astype(np.float32))
+        d0, s0 = sd_quantize(a, n=8, axis=0)
+        dT, sT = sd_quantize(a.T, n=8, axis=-1)
+        np.testing.assert_array_equal(np.asarray(d0),
+                                      np.moveaxis(np.asarray(dT), 0, 1))
+        np.testing.assert_array_equal(np.asarray(s0), np.asarray(sT).T)
+
+    @pytest.mark.parametrize("mode", sorted(MATMUL_MODES.values()))
+    @pytest.mark.parametrize("shape", [(5, 20, 3),   # all dims ragged
+                                       (3, 7, 2),    # K < k_tile
+                                       (1, 24, 5),   # GEMV, M=1
+                                       (17, 40, 9)])  # multi ragged tiles
+    def test_fused_bitwise_vs_host_and_oracle(self, rng, mode, shape):
+        M, K, N = shape
+        n_bits = 8 if mode.endswith("8") else 16
+        x, w = _pair(rng, M, K, N)
+        fused = np.asarray(olm_matmul(x, w, n_bits=n_bits, use_pallas=True,
+                                      quantize="kernel"))
+        host = np.asarray(olm_matmul(x, w, n_bits=n_bits, use_pallas=True,
+                                     quantize="host"))
+        oracle = np.asarray(olm_matmul(x, w, n_bits=n_bits,
+                                       use_pallas=False))
+        np.testing.assert_array_equal(fused, host)
+        np.testing.assert_array_equal(fused, oracle)
+
+    def test_fused_is_the_pallas_default(self, rng):
+        x, w = _pair(rng, 4, 16, 4)
+        got = np.asarray(olm_matmul(x, w, use_pallas=True))
+        want = np.asarray(olm_matmul(x, w, use_pallas=True,
+                                     quantize="kernel"))
+        np.testing.assert_array_equal(got, want)
+
+    def test_quantize_arg_validated(self):
+        x = jnp.zeros((2, 8), jnp.float32)
+        w = jnp.zeros((8, 2), jnp.float32)
+        with pytest.raises(ValueError, match="quantize"):
+            olm_matmul(x, w, quantize="device")
+
+    def test_out_of_domain_magnitudes_fail_loud(self):
+        # |a| > 2^126 has no finite pow2 scale >= 2*max|a|: the scale
+        # must go inf (NaN downstream) — the legacy exp2 behavior —
+        # never a silently saturated finite wrong answer
+        from repro.kernels.common import pow2_scale
+        a = jnp.asarray([[3e38, 1.0], [1.0, 2.0]], jnp.float32)
+        s = np.asarray(pow2_scale(a, 1))
+        assert np.isinf(s[0, 0])
+        assert np.isfinite(s[1, 0])
+        d, s2 = sd_quantize(a, n=16, axis=1)
+        assert not np.asarray(d)[0].any()       # inf scale -> zero digits
+        # in-domain magnitudes keep the exact >= 2*max invariant
+        big = jnp.asarray([[2.0 ** 126]], jnp.float32)
+        assert float(pow2_scale(big, 1)[0, 0]) == 2.0 ** 127
+
+
+class TestFusedTraffic:
+    @pytest.mark.parametrize("n_bits", [8, 16])
+    def test_fused_is_grid_over_n(self, n_bits):
+        t = digit_traffic(64, 64, 64, n_bits=n_bits)
+        assert t["fused_elems"] * n_bits == t["grid_elems"]
+        assert t["fused_bytes"] * n_bits == t["grid_bytes"]
+        assert t["fused_vs_grid"] == n_bits
+        assert t["fused_reuse"] == n_bits * t["reuse"]
+
+    def test_acceptance_floor_4x_at_defaults(self):
+        # n=16 defaults: in-kernel quantize moves 16x fewer operand
+        # bytes than the host-quantize grid path — >= the 4x gate
+        t = digit_traffic(64, 32, 64, n_bits=16)
+        assert t["fused_bytes"] * 4 <= t["grid_bytes"]
+        assert t["grid_bytes"] / t["fused_bytes"] == 16
+
+    def test_fused_reuse_pattern_matches_grid(self):
+        # same BlockSpec reuse structure: fused traffic scales with
+        # M + N when one tile covers the output, like the grid path
+        t1 = digit_traffic(32, 32, 16, block_m=32, block_n=32)
+        t2 = digit_traffic(64, 64, 16, block_m=64, block_n=64)
+        assert t1["fused_elems"] == (32 + 32) * 16
+        assert t2["fused_elems"] == 2 * t1["fused_elems"]
+
+
+class TestAutotunerCache:
+    def test_miss_memoizes_then_hits(self, tmp_path):
+        cache = TuningCache(str(tmp_path / "t.json"))
+        t0 = get_tiling(64, 64, 256, 16, cache)
+        assert (cache.misses, cache.hits) == (1, 0)
+        t1 = get_tiling(64, 64, 256, 16, cache)
+        assert (cache.misses, cache.hits) == (1, 1)
+        assert t0 == t1 == heuristic_tiling(64, 64, 256, 16).as_dict()
+        # same bucket (pow2 rounding) hits; different bucket misses
+        get_tiling(63, 64, 255, 16, cache)
+        assert (cache.misses, cache.hits) == (1, 2)
+        get_tiling(1, 64, 256, 16, cache)
+        assert (cache.misses, cache.hits) == (2, 2)
+
+    def test_memoization_stays_off_disk(self, tmp_path):
+        path = tmp_path / "t.json"
+        get_tiling(8, 8, 16, 16, TuningCache(str(path)))
+        assert not path.exists()
+
+    def test_measured_entry_persists(self, tmp_path):
+        path = str(tmp_path / "t.json")
+        cache = TuningCache(path)
+        best = tune(8, 8, 16, 16, cache, cap=8, repeat=1)
+        assert os.path.exists(path)
+        entry = json.load(open(path))["entries"][bucket_key(8, 8, 16, 16)]
+        assert entry["source"] == "measured"
+        assert Tiling(entry["k_tile"], entry["block_m"],
+                      entry["block_n"]) == best
+        # a fresh cache instance reads it back as a hit
+        fresh = TuningCache(path)
+        assert fresh.lookup(8, 8, 16, 16) == best
+        assert (fresh.hits, fresh.misses) == (1, 0)
+
+    def test_env_var_points_default_cache(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("REPRO_TUNING_CACHE", str(tmp_path / "env.json"))
+        monkeypatch.setattr(tuning, "_DEFAULT_CACHE", None)
+        assert tuning.default_cache().path == str(tmp_path / "env.json")
+
+    def test_stale_cache_k_tile_repinned_on_read(self, tmp_path):
+        # the never-changes-numerics guarantee must survive a cache
+        # written by another version or a hand edit: k_tile is
+        # re-pinned on every read, blocks (pure perf) are honored
+        path = tmp_path / "t.json"
+        entry = {"k_tile": 4, "block_m": 2, "block_n": 2,
+                 "source": "measured", "shape": [8, 8, 32], "n_bits": 16}
+        path.write_text(json.dumps(
+            {"entries": {bucket_key(8, 8, 32, 16): entry}}))
+        d = get_tiling(8, 8, 32, 16, TuningCache(str(path)))
+        assert d["k_tile"] == 16                       # re-pinned
+        assert (d["block_m"], d["block_n"]) == (2, 2)  # honored
+
+    def test_tune_candidates_come_from_real_shape(self):
+        # candidates must be derived from the real GEMM dims, not the
+        # measurement proxy — else a capped proxy clips block_n and a
+        # "measured" entry loses to the heuristic it should improve on
+        cands = tuning._candidates(1, 4096, 4096, 16)
+        assert heuristic_tiling(1, 4096, 4096, 16) in cands
+        assert max(c.block_n for c in cands) >= 128
+
+
+class TestAutotunerChoices:
+    @pytest.mark.parametrize("n_bits", [8, 16])
+    @pytest.mark.parametrize("shape", [(1, 4096, 4096), (8192, 4096, 1024),
+                                       (4, 11, 3), (128, 128, 128)])
+    def test_heuristic_is_always_legal(self, n_bits, shape):
+        M, N, K = shape
+        t = heuristic_tiling(M, N, K, n_bits)
+        # decode window: the kernel would refuse anything wider
+        assert n_bits + 2 * tree_levels(t.k_tile) <= 24
+        # VMEM lane budget
+        assert t.block_m * t.block_n * t.k_tile <= tuning.LANE_BUDGET
+        assert t.block_m >= 1 and t.block_n >= 1 and t.k_tile >= 1
+
+    def test_max_k_tile_decode_window(self):
+        assert max_k_tile(16) == 16
+        assert max_k_tile(8) == 256
+
+    def test_gemv_spends_budget_on_columns(self):
+        # M=1 decode GEMV: the static 8x8 default wastes 7/8 of its
+        # block_m; the heuristic must not
+        t = heuristic_tiling(1, 4096, 4096, 16)
+        assert t.block_m == 1
+        assert t.block_n > MATMUL_TILING["block_n"]
+
+    def test_square_gemm_beats_static_reuse(self):
+        # big square GEMM: per-tile harmonic reuse must be >= static 8x8
+        t = heuristic_tiling(8192, 8192, 4096, 16)
+        assert 2 / (1 / t.block_m + 1 / t.block_n) >= 8
+
+
+class TestAutoTilingThreading:
+    def test_auto_never_changes_numerics(self, rng):
+        """tiling="auto" is a pure perf choice: block shapes are
+        bit-invariant and the tuner pins k_tile (the one knob that IS a
+        numerics parameter) to the kernel default, so auto output is
+        bit-identical to the legacy static MATMUL_TILING default and
+        to the oracle — for every olm mode."""
+        for M, K, N in ((9, 37, 11), (4, 48, 6)):   # incl. K where a
+            x, w = _pair(rng, M, K, N)              # free tuner would
+            for mode in sorted(MATMUL_MODES.values()):   # widen k_tile
+                auto = np.asarray(
+                    DotEngine(mode=mode, tiling="auto",
+                              use_pallas=True).dot(x, w))
+                static = np.asarray(
+                    DotEngine(mode=mode, use_pallas=True,
+                              **MATMUL_TILING).dot(x, w))
+                oracle = np.asarray(
+                    DotEngine(mode=mode, use_pallas=False).dot(x, w))
+                np.testing.assert_array_equal(auto, static)
+                np.testing.assert_array_equal(auto, oracle)
+
+    def test_auto_pins_k_tile_to_numerics_default(self):
+        from repro.kernels.online_dot.matmul import DEFAULT_K_TILE
+        for (M, N, K) in ((1, 4096, 4096), (8192, 4096, 1024), (4, 6, 48)):
+            for nb in (8, 16):
+                t = heuristic_tiling(M, N, K, nb)
+                # same effective slice width as the kernel's own
+                # kt = min(DEFAULT_K_TILE, K) clamp
+                assert min(t.k_tile, K) == min(DEFAULT_K_TILE, K)
+
+    def test_explicit_knobs_win_over_auto(self, rng):
+        # pinned k_tile must survive tiling="auto" (engine knobs win)
+        eng = DotEngine(mode="olm16", tiling="auto", k_tile=4,
+                        use_pallas=True)
+        x, w = _pair(rng, 3, 8, 3)
+        got = np.asarray(eng.dot(x, w))
+        want = np.asarray(olm_matmul(x, w, k_tile=4, use_pallas=False))
+        np.testing.assert_array_equal(got, want)
+
+    def test_engine_for_defaults_to_auto(self):
+        eng = engine_for(16)
+        assert eng.tiling == "auto"
+        assert eng.k_tile is None and eng.block_m is None
+        static = engine_for(16, tiling=None)
+        assert static.tiling is None
+        assert (static.k_tile, static.block_m, static.block_n) == (
+            MATMUL_TILING["k_tile"], MATMUL_TILING["block_m"],
+            MATMUL_TILING["block_n"])
+        with pytest.raises(ValueError, match="tiling"):
+            engine_for(16, tiling="bogus")
+
+    def test_unknown_tiling_rejected(self):
+        with pytest.raises(ValueError, match="tiling"):
+            DotEngine(mode="olm16", tiling="measured")
+
+    def test_serve_engine_auto(self):
+        from repro.models.config import ModelConfig
+        from repro.models.model import Model
+        from repro.serving.engine import ServeEngine
+        cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=16,
+                          n_heads=2, n_kv_heads=2, d_ff=32, vocab_size=512,
+                          param_dtype="float32", compute_dtype="float32")
+        model = Model(cfg, DotEngine(mode="native"))
+        eng = ServeEngine(model, params=None, slots=1, max_len=8,
+                          dot_mode="olm16", dot_tiling="auto")
+        assert eng.model.eng.mode == "olm16"
+        assert eng.model.eng.tiling == "auto"
+        eng2 = ServeEngine(model, params=None, slots=1, max_len=8,
+                           dot_mode="olm16",
+                           dot_tiling={"tiling": "auto", "block_n": 32})
+        assert eng2.model.eng.tiling == "auto"
+        assert eng2.model.eng.block_n == 32
+
+    def test_serve_auto_clears_pinned_blocks_keeps_k_tile(self):
+        # a model built with the static legacy tiling must not turn
+        # dot_tiling="auto" into a silent no-op: auto clears pre-pinned
+        # *block* knobs (pure perf) so the autotuner engages, but a
+        # pinned k_tile is a numerics choice and must survive; knobs in
+        # the same dot_tiling dict survive too
+        from repro.models.config import ModelConfig
+        from repro.models.model import Model
+        from repro.serving.engine import ServeEngine
+        cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=16,
+                          n_heads=2, n_kv_heads=2, d_ff=32, vocab_size=512,
+                          param_dtype="float32", compute_dtype="float32")
+        model = Model(cfg, engine_for(16, tiling=None))   # pinned 8x8x16
+        assert model.eng.k_tile == MATMUL_TILING["k_tile"]
+        eng = ServeEngine(model, params=None, slots=1, max_len=8,
+                          dot_tiling="auto")
+        assert eng.model.eng.tiling == "auto"
+        assert eng.model.eng.k_tile == MATMUL_TILING["k_tile"]  # numerics
+        assert eng.model.eng.block_m is None
+        assert eng.model.eng.block_n is None
+        eng2 = ServeEngine(model, params=None, slots=1, max_len=8,
+                           dot_tiling={"tiling": "auto", "block_n": 64})
+        assert eng2.model.eng.block_n == 64
+        assert eng2.model.eng.block_m is None
+        with pytest.raises(ValueError, match="only string form is 'auto'"):
+            ServeEngine(model, params=None, slots=1, max_len=8,
+                        dot_tiling="autotune")

@@ -31,29 +31,37 @@ def _pair(rng, M, K, N):
 
 
 class TestGridBitIdentity:
+    # both Pallas operand formats must survive every sweep: "host"
+    # (pre-expanded digit grids — the near-oracle reference kernel) and
+    # "kernel" (the fused quantize-in-prologue default)
+    @pytest.mark.parametrize("quantize", ["host", "kernel"])
     @pytest.mark.parametrize("block_m,block_n", [(1, 1), (2, 4), (4, 2),
                                                  (8, 8), (16, 3)])
-    def test_block_sweep_bitwise(self, rng, block_m, block_n):
+    def test_block_sweep_bitwise(self, rng, quantize, block_m, block_n):
         x, w = _pair(rng, 9, 32, 11)   # ragged vs every tested block shape
-        gp = np.asarray(olm_matmul(x, w, use_pallas=True,
+        gp = np.asarray(olm_matmul(x, w, use_pallas=True, quantize=quantize,
                                    block_m=block_m, block_n=block_n))
         gr = np.asarray(olm_matmul_ref(x, w))
         np.testing.assert_array_equal(gp, gr)
 
+    @pytest.mark.parametrize("quantize", ["host", "kernel"])
     @pytest.mark.parametrize("k_tile", [4, 8, 16])
-    def test_k_tile_sweep_bitwise(self, rng, k_tile):
+    def test_k_tile_sweep_bitwise(self, rng, quantize, k_tile):
         x, w = _pair(rng, 5, 37, 6)    # ragged K: zero-padded last tile
-        gp = np.asarray(olm_matmul(x, w, k_tile=k_tile, use_pallas=True))
+        gp = np.asarray(olm_matmul(x, w, k_tile=k_tile, use_pallas=True,
+                                   quantize=quantize))
         gr = np.asarray(olm_matmul_ref(x, w, k_tile=k_tile))
         np.testing.assert_array_equal(gp, gr)
 
-    def test_accumulator_carry_across_k_tiles(self, rng):
+    @pytest.mark.parametrize("quantize", ["host", "kernel"])
+    def test_accumulator_carry_across_k_tiles(self, rng, quantize):
         # K = 4 tiles: the kernel's resident accumulator must replay the
         # oracle's tile-loop f32 additions exactly, and dropping the K
         # tiling (k_tile >= K would change the adder tree) must stay
         # within the documented bound
         x, w = _pair(rng, 6, 64, 7)
-        gp = np.asarray(olm_matmul(x, w, k_tile=16, use_pallas=True))
+        gp = np.asarray(olm_matmul(x, w, k_tile=16, use_pallas=True,
+                                   quantize=quantize))
         gr = np.asarray(olm_matmul_ref(x, w, k_tile=16))
         np.testing.assert_array_equal(gp, gr)
         exact = np.asarray(x) @ np.asarray(w)
@@ -83,13 +91,17 @@ class TestRaggedShapes:
 
     def test_gemv_through_engine_for(self, rng):
         x, w = _pair(rng, 1, 48, 13)
-        eng = engine_for(16, use_pallas=True)
+        # default engine_for is autotuned per shape; tiling=None pins
+        # the static paper-array MATMUL_TILING — both must match the
+        # oracle bit for bit (tiling never changes numerics)
+        assert engine_for(16, use_pallas=True).tiling == "auto"
+        eng = engine_for(16, use_pallas=True, tiling=None)
         assert (eng.k_tile, eng.block_m, eng.block_n) == (
             MATMUL_TILING["k_tile"], MATMUL_TILING["block_m"],
             MATMUL_TILING["block_n"])
-        got = np.asarray(eng.dot(x, w))
         want = np.asarray(olm_matmul_ref(x, w))
-        np.testing.assert_array_equal(got, want)
+        for e in (eng, engine_for(16, use_pallas=True)):
+            np.testing.assert_array_equal(np.asarray(e.dot(x, w)), want)
 
 
 class TestZeroPadding:
