@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify bench bench-json test tune
+.PHONY: verify bench bench-json check-bench test tune
 
 # Tier-1 verification (same command as ROADMAP.md / CI)
 verify:
@@ -19,6 +19,12 @@ bench:
 BENCH_ARGS ?=
 bench-json:
 	$(PYTHON) -m benchmarks.run --json-dir results/bench $(BENCH_ARGS)
+
+# The CI perf-story guard (run after bench-json): fused-vs-host traffic
+# floor at every registered olm width, fresh bench JSON vs the committed
+# results/baseline seeds, tuning.json schema + k_tile re-pin invariant.
+check-bench:
+	$(PYTHON) tools/check_bench.py
 
 # Populate the olm matmul tiling-autotuner cache (results/tuning.json)
 # for the launch/shapes.py shape set. TUNE_ARGS passes CLI flags, e.g.

@@ -257,8 +257,12 @@ def olm_matmul_bench():
     for (M, K, N), pallas_too in cases:
         a = rng.standard_normal((M, K)).astype(np.float32)
         b = rng.standard_normal((K, N)).astype(np.float32)
-        exact = a @ b
-        for nb in (8, 16):
+        # f64 reference: an f32 `a @ b` would contribute its own BLAS
+        # rounding (order-dependent across machines) to the ulp column,
+        # which at n = 24/32 is the same order as the measured error —
+        # the CI baseline diff needs this column machine-stable
+        exact = a.astype(np.float64) @ b.astype(np.float64)
+        for nb in (8, 16, 24, 32):   # every registered MATMUL_MODES width
             traffic = digit_traffic(M, N, K, n_bits=nb)
             bound = np.asarray(olm_error_bound(jnp.asarray(a),
                                                jnp.asarray(b), n_bits=nb))
@@ -300,11 +304,14 @@ def olm_matmul_fused_bench():
     """Quantize-in-kernel sweep: grid-host-quantize (pre-expanded digit
     grids cross HBM) vs grid-in-kernel-quantize (raw float tiles cross
     HBM, sd_quantize runs in the kernel prologue) vs the broadcast
-    oracle, at the default shape/tiling. Emits bytes_moved and wall
-    time per path; asserts the three outputs are bit-identical and that
-    the fused path moves >= 4x (actually n_bits x) fewer operand bytes
-    than the host-quantize grid path — the CI smoke step re-checks that
-    from the JSON so the traffic win can't silently regress."""
+    oracle, at the default shape/tiling, for every registered olm mode
+    width (8/16/24/32 — n = 24/32 exercise the wide two-limb/int64
+    stream decode). Emits bytes_moved and wall time per path; asserts
+    the three outputs are bit-identical and that the fused path moves
+    >= 4x (actually n_bits x) fewer operand bytes than the host-
+    quantize grid path — tools/check_bench.py re-checks that from the
+    JSON in CI so the traffic win can't silently regress at any
+    width."""
     import jax.numpy as jnp
     from repro.kernels.online_dot.matmul import digit_traffic, olm_matmul
     rng = np.random.default_rng(11)
@@ -316,7 +323,7 @@ def olm_matmul_fused_bench():
     rows = []
     a = rng.standard_normal((M, K)).astype(np.float32)
     b = rng.standard_normal((K, N)).astype(np.float32)
-    for nb in (8, 16):
+    for nb in (8, 16, 24, 32):       # every registered MATMUL_MODES width
         traffic = digit_traffic(M, N, K, n_bits=nb)
         paths = (
             ("bcast", dict(use_pallas=False), traffic["broadcast_bytes"]),

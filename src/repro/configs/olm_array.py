@@ -1,7 +1,7 @@
 """The paper's own configuration: pipelined online-multiplier inner-product
 arrays at n = 8/16/24/32 bits (delta=3, t=2, Eq.8 truncation, G=2 tail),
 plus the DotEngine wiring that lets a model select those arrays as its
-matmul numerics (mode "olm8" / "olm16")."""
+matmul numerics (modes "olm8" / "olm16" / "olm24" / "olm32")."""
 from repro.core.numerics import DotEngine
 from repro.core.precision import OnlinePrecision
 
@@ -11,14 +11,17 @@ FULL_PRECISIONS = {
     for n in (8, 16, 24, 32)
 }
 
-# Precisions whose matmul lowering is registered as a DotEngine mode
-# (n > 16 streams exceed the float32-exact decode window and the int32
-# reference path; they stay digit-grid-API only for now).
-MATMUL_MODES = {8: "olm8", 16: "olm16"}
+# Every ARRAY_PRECISIONS width is a registered DotEngine matmul mode.
+# n = 8/16 streams decode on the exact plain-f32 path; n = 24/32 exceed
+# the 24-digit f32 window and take the exact wide decode (int64
+# accumulator under x64, two-limb f32 otherwise) — see
+# kernels/common.decode_policy and the olm24/olm32 registry entries.
+MATMUL_MODES = {8: "olm8", 16: "olm16", 24: "olm24", 32: "olm32"}
 
 # Static grid-kernel tiling for the matmul lowering: k_tile lanes per
 # adder tree (the array width; n + 2*ceil(log2 k_tile) must stay inside
-# the 24-digit f32-exact decode window), and the (block_m, block_n)
+# the per-dtype exact decode window — 24 digits plain f32 for n <= 16,
+# 48 digits wide decode for n = 24/32), and the (block_m, block_n)
 # output tile whose BlockSpecs load each operand once per tile — the
 # reuse factor is ~2/(1/block_m + 1/block_n). Since the autotuner
 # landed (kernels/online_dot/tuning) this is the explicit-opt-out

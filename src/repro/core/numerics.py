@@ -10,11 +10,15 @@ Registered modes:
   tpmm16 / tpmm8 — the paper's truncated-precision inner products
     (kernels/tpmm): operands decomposed into digit planes, plane pairs
     beyond the significance cutoff never computed. n_bits = 16 / 8.
-  olm16 / olm8 — the paper's own inner-product array (kernels/online_dot
-    via its matmul front-end): K-lane online multipliers feeding a
-    digit-serial online adder tree, matmul tiles quantized to signed-
-    digit grids, digit streams decoded and accumulated in f32. The
-    fused kernel path is bit-identical to the pure-jnp oracle and
+  olm32 / olm24 / olm16 / olm8 — the paper's own inner-product array
+    (kernels/online_dot via its matmul front-end) at every
+    configs/olm_array.ARRAY_PRECISIONS width: K-lane online multipliers
+    feeding a digit-serial online adder tree, matmul tiles quantized to
+    signed-digit grids, digit streams decoded and accumulated in f32.
+    n = 8/16 decode on the exact plain-f32 path; n = 24/32 stream past
+    the 24-digit f32 window and take the wide decode (int64 accumulator
+    under x64, two-limb f32 otherwise — kernels/common.decode_policy).
+    Every fused kernel path is bit-identical to the pure-jnp oracle and
     bounded by kernels/online_dot/matmul.olm_error_bound.
 
 The engine is threaded through every dense, attention and MoE matmul, so
@@ -157,6 +161,30 @@ def _olm16(eng, x, w):
          "(digit-grid traffic / min(block_m, block_n))")
 def _olm8(eng, x, w):
     return _olm_dot(eng, x, w, 8)
+
+
+@register_mode(
+    "olm24",
+    summary="fused online inner-product array, 24-digit operands "
+            "(wide two-limb/int64 stream decode)",
+    error="<= k_tile * (3.1 @ 2^-24 + (T+1) @ 2^-26) per K-tile "
+          "(olm_error_bound wide term)",
+    cost="Eq.8-truncated digit-serial array at 24 digits; same grid-"
+         "tiled reuse, 1.5x the olm16 digit traffic on the host path")
+def _olm24(eng, x, w):
+    return _olm_dot(eng, x, w, 24)
+
+
+@register_mode(
+    "olm32",
+    summary="fused online inner-product array, 32-digit operands "
+            "(wide two-limb/int64 stream decode; oracle path x64-scoped)",
+    error="<= k_tile * (3.1 @ 2^-32 + (T+1) @ 2^-26) per K-tile "
+          "(olm_error_bound wide term)",
+    cost="Eq.8-truncated digit-serial array at 32 digits; same grid-"
+         "tiled reuse, 2x the olm16 digit traffic on the host path")
+def _olm32(eng, x, w):
+    return _olm_dot(eng, x, w, 32)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -29,7 +29,26 @@ __all__ = [
     "decode_stream",
     "decode_stream_jnp",
     "decode_stream_inkernel",
+    "DECODE_WINDOW_F32",
+    "DECODE_WINDOW_WIDE",
+    "decode_policy",
+    "int64_enabled",
+    "decode_stream_wide_jnp",
+    "decode_stream_wide_inkernel",
 ]
+
+# Exact stream-decode windows, in digits. Up to DECODE_WINDOW_F32 every
+# term d_i 2^-(i+1) and every partial subset sum fits the float32
+# significand, so a plain f32 contraction decodes exactly for any
+# reduction order (decode_stream_jnp / decode_stream_inkernel). Between
+# the two windows the stream still decodes exactly, but only through the
+# wide pair below: an int64 accumulator (x64 scope) or a two-limb f32
+# split — both round the exact dyadic value to float32 once, to the
+# identical bit pattern. Past DECODE_WINDOW_WIDE the low two-limb window
+# itself would exceed 24 digits and the decode would silently round, so
+# every consumer refuses (decode_policy raises).
+DECODE_WINDOW_F32 = 24
+DECODE_WINDOW_WIDE = 48
 
 
 def fits_int32(cfg: OnlinePrecision) -> bool:
@@ -133,18 +152,50 @@ def sd_quantize_inkernel(a: jax.Array, *, n: int
     transcendentals), and everything else is elementwise int/float VPU
     work.
 
+    Digit extraction is range-split on `n` (a static Python branch):
+    for n <= 31 the rounded magnitude |v| <= 2^(n-1) fits int32 and one
+    shift-and-mask reads every bit; at n = 32 the closed quantization
+    endpoint u = +-1/2 lands on |v| = 2^31, one past int32, so the
+    magnitude is kept in float32 (exact: |v| has at most 24 significant
+    bits by construction) and split into two exact 16-bit halves whose
+    int32 images are bit-sliced instead. The split needs no int64 and
+    no x64 scope, so the quantizer stays kernel-legal and bit-identical
+    across backends and x64 settings at every supported width. n > 32
+    is refused: a float32 input only carries 24 mantissa bits, so wider
+    grids would just encode quantization noise.
+
     Returns:
       digits: (*a.shape, n) int32 in {-1, 0, 1}, appended digit axis,
         encoding  a ~= scale * sum_i digits_i 2^-i  elementwise with
         |error| <= scale * 2^-(n+1) (round-to-nearest at 2^-n).
       scale: a.shape with the last axis reduced to 1; pow2 float32.
     """
+    if n > 32:
+        raise ValueError(
+            f"sd digit extraction supports n <= 32, got n={n} (float32 "
+            "inputs carry 24 mantissa bits; wider grids encode noise)")
     a = a.astype(jnp.float32)
     scale = pow2_scale(a, -1)
-    v = jnp.round((a / scale) * (1 << n)).astype(jnp.int32)  # |v| <= 2^(n-1)
-    sign = jnp.sign(v).astype(jnp.int32)
+    r = jnp.round((a / scale) * jnp.float32(2.0 ** n))  # exact; |r| <= 2^(n-1)
     pos = jax.lax.broadcasted_iota(jnp.int32, (1,) * a.ndim + (n,), a.ndim)
-    bits = (jnp.abs(v)[..., None] >> ((n - 1) - pos)) & 1    # digit 1..n
+    if n <= 31:
+        v = r.astype(jnp.int32)
+        sign = jnp.sign(v).astype(jnp.int32)
+        bits = (jnp.abs(v)[..., None] >> ((n - 1) - pos)) & 1   # digit 1..n
+        return sign[..., None] * bits, scale
+    # n = 32: |r| can be 2^31 — split the exact f32 magnitude into two
+    # 16-bit halves (both splits exact: A is an integer with <= 24
+    # significant bits, A_hi a pow2-scaled floor, the difference
+    # representable below 2^16) and bit-slice their int32 images.
+    sign = jnp.sign(r).astype(jnp.int32)
+    mag = jnp.abs(r)
+    hi = jnp.floor(mag * jnp.float32(2.0 ** -16)).astype(jnp.int32)
+    lo = (mag - jnp.floor(mag * jnp.float32(2.0 ** -16))
+          * jnp.float32(2.0 ** 16)).astype(jnp.int32)
+    shift = (n - 1) - pos                                        # 31 .. 0
+    bits = jnp.where(shift >= 16,
+                     (hi[..., None] >> jnp.maximum(shift - 16, 0)) & 1,
+                     (lo[..., None] >> jnp.minimum(shift, 15)) & 1)
     return sign[..., None] * bits, scale
 
 
@@ -208,6 +259,82 @@ def decode_stream_jnp(digits: jax.Array) -> jax.Array:
     bit-identical values."""
     w = jnp.asarray(_stream_weights(digits.shape[-1]))
     return digits.astype(jnp.float32) @ w
+
+
+def decode_policy(m: int) -> str:
+    """Which exact decode a stream of `m` digits needs: "f32" (plain f32
+    contraction, m <= 24) or "wide" (int64 accumulator / two-limb f32,
+    m <= 48). The one home of the per-stream-length decision the matmul
+    front-end, both Pallas matmul kernels, and the tiling autotuner all
+    share. Raises past the wide window, where even the two-limb split
+    would silently round."""
+    if m <= DECODE_WINDOW_F32:
+        return "f32"
+    if m <= DECODE_WINDOW_WIDE:
+        return "wide"
+    raise ValueError(
+        f"stream length {m} exceeds the {DECODE_WINDOW_WIDE}-digit wide "
+        f"(two-limb/int64) exact decode window; lower k_tile or n_bits")
+
+
+def int64_enabled() -> bool:
+    """True when int64 survives canonicalization (x64 on, globally or via
+    the repro.compat.enable_x64 scope)."""
+    return jax.dtypes.canonicalize_dtype(jnp.int64) == jnp.dtype(jnp.int64)
+
+
+def decode_stream_wide_jnp(digits: jax.Array) -> jax.Array:
+    """Exact float32 stream decode past the 24-digit f32 window, for
+    streams up to DECODE_WINDOW_WIDE digits (the n = 24/32 matmul modes).
+
+    Two implementations, selected by whether int64 is available, both
+    returning the SAME bits: the exact dyadic value sum_i d_i 2^-(i+1)
+    rounded to float32 once, round-to-nearest-even.
+
+      * int64 accumulator (x64 scope): the integer 2^m-scaled value is
+        accumulated exactly (|sum| < 2^m <= 2^48), converted to f32
+        (one RN-even rounding) and rescaled by the exact power 2^-m.
+      * two-limb f32 (x64 unavailable): the stream splits at digit 24
+        into hi/lo windows whose partial sums are each exact in f32
+        (every subset sum fits the 24-bit significand — the same
+        argument as decode_stream_jnp, applied per window), and the
+        final hi + lo add performs the single RN-even rounding of the
+        exact total.
+
+    Because both paths round the identical exact value once with the
+    identical rounding rule, results are bit-identical across x64
+    settings — tested in tests/test_wide_precision_decode.py — so the
+    olm24/olm32 three-path bit-identity holds on every CI leg."""
+    m = digits.shape[-1]
+    if m > DECODE_WINDOW_WIDE:
+        raise ValueError(f"stream length {m} exceeds the wide decode "
+                         f"window of {DECODE_WINDOW_WIDE} digits")
+    if int64_enabled():
+        w = jnp.asarray(np.int64(1) << np.arange(m - 1, -1, -1,
+                                                 dtype=np.int64))
+        total = digits.astype(jnp.int64) @ w          # exact, |.| < 2^48
+        return total.astype(jnp.float32) * jnp.float32(2.0 ** -m)
+    w = jnp.asarray(_stream_weights(m))
+    d = digits.astype(jnp.float32)
+    cut = DECODE_WINDOW_F32
+    return d[..., :cut] @ w[:cut] + d[..., cut:] @ w[cut:]
+
+
+def decode_stream_wide_inkernel(digits: jax.Array) -> jax.Array:
+    """`decode_stream_wide_jnp` usable inside a Pallas kernel body: the
+    two-limb split built from bitcast-exact pow2 weights (no captured
+    array constants, no int64 — kernel-legal on TPU datapaths and
+    independent of the x64 setting). Each window's masked sum is exact
+    for any reduction order (zeros from the mask are exact), and the
+    final hi + lo add is the single RN-even rounding of the exact
+    total — bit-identical to both decode_stream_wide_jnp branches."""
+    m = digits.shape[-1]
+    pos = jax.lax.broadcasted_iota(jnp.int32, (1, m), 1)
+    w = jax.lax.bitcast_convert_type((126 - pos) << 23, jnp.float32)
+    terms = digits.astype(jnp.float32) * w
+    hi = jnp.sum(jnp.where(pos < DECODE_WINDOW_F32, terms, 0.0), axis=-1)
+    lo = jnp.sum(jnp.where(pos < DECODE_WINDOW_F32, 0.0, terms), axis=-1)
+    return hi + lo
 
 
 def decode_stream_inkernel(digits: jax.Array) -> jax.Array:

@@ -28,11 +28,14 @@ the int64 reference recurrence, with operand grids broadcast to
 (M*N, k_tile, n) — the hardware's full operand fan-out, kept as the
 operand-traffic baseline (`digit_traffic` quantifies the reuse factor
 the grid kernel wins back). Because the kernel's digit arithmetic is
-bit-exact against the recurrence, the stream decode is exact in float32
-for any reduction order inside the guarded n + 2L <= 24 window, every
-scale multiply is a power of two, and both paths accumulate K tiles in
-the same order, the two paths produce bit-identical float32 outputs —
-the property DotEngine's olm modes are tested against.
+bit-exact against the recurrence, the stream decode is exact — plain
+f32 contraction inside the n + 2L <= 24 window, and the wide decode
+(int64 accumulator under x64, two-limb f32 otherwise; both round the
+exact dyadic value to f32 once, RN-even) up to 48 digits for the
+n = 24/32 modes — every scale multiply is a power of two, and both
+paths accumulate K tiles in the same order, the two paths produce
+bit-identical float32 outputs — the property DotEngine's olm modes are
+tested against.
 
 Error vs the exact float matmul is bounded by ``olm_error_bound``: per
 lane, quantization contributes <= 1 ulp at 2^-n (two round-to-nearest
@@ -49,14 +52,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.precision import OnlinePrecision
-from repro.kernels.common import (decode_stream_jnp, pad_to_multiple,
-                                  pow2_scale, resolve_use_pallas, sd_quantize)
+from repro.kernels.common import (decode_policy, decode_stream_jnp,
+                                  decode_stream_wide_jnp, int64_enabled,
+                                  pad_to_multiple, pow2_scale,
+                                  resolve_use_pallas, sd_quantize)
 from .matmul_kernel import olm_matmul_fused_pallas, olm_matmul_pallas
-from .ref import online_dot_batch_ref, tree_levels
+from .ref import online_dot_batch_ref, oracle_needs_x64, tree_levels
 
 __all__ = ["olm_matmul", "olm_matmul_ref", "olm_error_bound",
            "digit_traffic", "DEFAULT_K_TILE", "DEFAULT_BLOCK_M",
-           "DEFAULT_BLOCK_N", "DEFAULT_QUANTIZE", "ULP_PER_LANE"]
+           "DEFAULT_BLOCK_N", "DEFAULT_QUANTIZE", "ULP_PER_LANE",
+           "WIDE_DECODE_ULP"]
 
 # Array width: lanes reduced by one adder tree. 16 keeps the digit grids
 # VMEM-friendly and the stream length n + 2*ceil(log2 16) = n + 8 within
@@ -81,6 +87,18 @@ DEFAULT_QUANTIZE = "kernel"
 # docstring): 2 quantized operands + 1.1 multiplier truncation, rounded
 # up. Tests hold olm_matmul to k * ULP_PER_LANE * 2^-n per tile.
 ULP_PER_LANE = 3.1
+
+# Extra per-lane budget (in absolute units at the tile scale product)
+# for the wide-decode modes (stream > 24 digits, i.e. n = 24/32): the
+# wide decode rounds the exact dyadic tile value to float32 once —
+# <= 0.5 ulp of |val * 2^L| <= kt/4, i.e. <= kt * 2^-26 per tile — and
+# each of the T float32 K-tile accumulations rounds once more, each
+# <= 2^-24 * |acc| <= 2^-26 * kt * sum_t(sx_t * sw_t). Both fold into
+# one (T + 1) * 2^-26 per-lane term (olm_error_bound). Narrow modes
+# (n <= 16) keep the historical quantization-only bound: their decode
+# is exact and the same accumulation rounding is invisible under the
+# ~256x larger 2^-n quantization term.
+WIDE_DECODE_ULP = 2.0 ** -26
 
 
 def _olm_cfg(n_bits: int) -> OnlinePrecision:
@@ -113,32 +131,40 @@ def _quantize_tiles(rows: jax.Array, kt: int, n_tiles: int, n_bits: int
     return d, s[..., 0]
 
 
-def _check_decode_window(n_bits: int, kt: int) -> int:
+def _decode_plan(n_bits: int, kt: int) -> tuple[int, bool]:
+    """(tree levels L, wide?) for an n_bits-digit stream reduced over a
+    kt-lane tree — the dtype-aware decode policy: streams inside the
+    24-digit window decode on the plain f32 path (n = 8/16 at default
+    tiling, bit-for-bit the historical behavior); wider streams (the
+    n = 24/32 modes, or a deep tree at n = 16) take the exact wide
+    decode (int64 accumulator under x64, two-limb f32 otherwise).
+    Raises past the 48-digit wide window (kernels/common.decode_policy),
+    before any path is dispatched."""
     L = tree_levels(kt)
-    if n_bits + 2 * L > 24:
-        raise ValueError(
-            f"stream length {n_bits + 2 * L} (n_bits={n_bits}, "
-            f"k_tile={kt}) exceeds the float32-exact decode window of "
-            "24 digits; lower k_tile or n_bits (n=24/32 lowering is a "
-            "ROADMAP item)")
-    return L
+    try:
+        policy = decode_policy(n_bits + 2 * L)
+    except ValueError as e:
+        raise ValueError(f"n_bits={n_bits}, k_tile={kt}: {e}") from None
+    return L, policy == "wide"
 
 
-def _broadcast_ref(xd, sx, wd, sw, L, **kw) -> jax.Array:
+def _broadcast_ref(xd, sx, wd, sw, L, wide, **kw) -> jax.Array:
     """Pure-jnp oracle body: per K tile, broadcast the digit grids to the
     full (M*N, kt, n) operand fan-out — exactly what the hardware delivers
     to the PE array, and the traffic baseline the grid kernel beats —
-    run the int64 reference recurrence, decode and accumulate in f32 in
-    the same K-tile order as the kernel's grid."""
+    run the int64 reference recurrence, decode (wide path for > 24-digit
+    streams) and accumulate in f32 in the same K-tile order as the
+    kernel's grid."""
     M, T, kt, n = xd.shape
     N = wd.shape[0]
+    decode = decode_stream_wide_jnp if wide else decode_stream_jnp
     acc = jnp.zeros((M, N), jnp.float32)
     for ti in range(T):
         xg = jnp.broadcast_to(xd[:, ti][:, None], (M, N, kt, n))
         wg = jnp.broadcast_to(wd[:, ti][None, :], (M, N, kt, n))
         z = online_dot_batch_ref(xg.reshape(M * N, kt, n),
                                  wg.reshape(M * N, kt, n), **kw)
-        val = decode_stream_jnp(z) * jnp.float32(1 << L)    # (M*N,)
+        val = decode(z) * jnp.float32(1 << L)               # (M*N,)
         acc = acc + val.reshape(M, N) * (sx[:, ti:ti + 1] *
                                          sw[:, ti].reshape(1, N))
     return acc
@@ -146,9 +172,45 @@ def _broadcast_ref(xd, sx, wd, sw, L, **kw) -> jax.Array:
 
 @functools.partial(
     jax.jit,
-    static_argnames=("n_bits", "k_tile", "use_pallas", "block_m", "block_n",
+    static_argnames=("n_bits", "k_tile", "use", "block_m", "block_n",
                      "quantize", "interpret"),
 )
+def _olm_matmul_impl(
+    x: jax.Array,  # (M, K) float
+    w: jax.Array,  # (K, N) float
+    *,
+    n_bits: int,
+    k_tile: int,
+    use: bool,
+    block_m: int,
+    block_n: int,
+    quantize: str,
+    interpret: bool,
+) -> jax.Array:
+    """The jitted matmul body behind `olm_matmul`, dispatch already
+    resolved on the host (use: Pallas vs broadcast oracle; the wrapper
+    also owns the x64 scoping the n = 32 oracle needs)."""
+    M, K = x.shape
+    N = w.shape[1]
+    cfg = _olm_cfg(n_bits)
+    kw = dict(n=cfg.n, delta=cfg.delta, t=cfg.t, truncated=cfg.truncated,
+              tail_gating=cfg.tail_gating, tail_guard=cfg.tail_guard)
+    kt, n_tiles, xp, wpT = _tile_plan(x, w, k_tile)
+    L, wide = _decode_plan(n_bits, kt)
+    if use and quantize == "kernel":
+        # No digit grid ever exists outside the kernel: ship the raw
+        # (rows, T, kt) float tiles and recode in the prologue.
+        return olm_matmul_fused_pallas(
+            xp.reshape(M, n_tiles, kt), wpT.reshape(N, n_tiles, kt),
+            block_m=block_m, block_n=block_n, interpret=interpret, **kw)
+    xd, sx = _quantize_tiles(xp, kt, n_tiles, n_bits)    # (M,T,kt,n), (M,T)
+    wd, sw = _quantize_tiles(wpT, kt, n_tiles, n_bits)   # (N,T,kt,n), (N,T)
+    if use:
+        return olm_matmul_pallas(xd, sx, wd, sw, block_m=block_m,
+                                 block_n=block_n, interpret=interpret, **kw)
+    return _broadcast_ref(xd, sx, wd, sw, L, wide, **kw)
+
+
 def olm_matmul(
     x: jax.Array,  # (M, K) float
     w: jax.Array,  # (K, N) float
@@ -170,12 +232,22 @@ def olm_matmul(
     raw float tiles cross HBM; "host" ships pre-expanded digit grids
     (the reference grid path). All three paths are bit-identical
     (one shared quantizer, bit-exact digit arithmetic, order-exact
-    decode and accumulation). block_m/block_n tile the output on the
-    Pallas path (ignored by the oracle, which models the full operand
-    fan-out).
+    decode and accumulation — on the wide decode path of the n = 24/32
+    modes the int64-or-two-limb decode rounds the exact tile value to
+    f32 once, identically on every path and x64 setting).
+    block_m/block_n tile the output on the Pallas path (ignored by the
+    oracle, which models the full operand fan-out).
+
+    This host wrapper resolves dispatch, then scopes the call under
+    repro.compat.enable_x64 when the selected path needs real int64
+    and x64 is off: the broadcast oracle's full-width multiplier
+    recurrence at n = 32 (F + 3 = 38 bits — ref.oracle_needs_x64).
+    The Pallas paths never need the scope (Eq.8-truncated int32
+    datapath + two-limb quantize/decode).
 
     Raises ValueError when n_bits + 2*ceil(log2 k_tile) exceeds the
-    24-digit float32-exact decode window (see decode_stream_jnp).
+    48-digit wide exact decode window (kernels/common.decode_policy);
+    streams of 25..48 digits transparently use the wide decode.
     """
     M, K = x.shape
     K2, N = w.shape
@@ -186,22 +258,28 @@ def olm_matmul(
                          f"got {quantize!r}")
     cfg = _olm_cfg(n_bits)
     use = resolve_use_pallas(cfg, use_pallas)
-    kw = dict(n=cfg.n, delta=cfg.delta, t=cfg.t, truncated=cfg.truncated,
-              tail_gating=cfg.tail_gating, tail_guard=cfg.tail_guard)
-    kt, n_tiles, xp, wpT = _tile_plan(x, w, k_tile)
-    L = _check_decode_window(n_bits, kt)
-    if use and quantize == "kernel":
-        # No digit grid ever exists outside the kernel: ship the raw
-        # (rows, T, kt) float tiles and recode in the prologue.
-        return olm_matmul_fused_pallas(
-            xp.reshape(M, n_tiles, kt), wpT.reshape(N, n_tiles, kt),
-            block_m=block_m, block_n=block_n, interpret=interpret, **kw)
-    xd, sx = _quantize_tiles(xp, kt, n_tiles, n_bits)    # (M,T,kt,n), (M,T)
-    wd, sw = _quantize_tiles(wpT, kt, n_tiles, n_bits)   # (N,T,kt,n), (N,T)
-    if use:
-        return olm_matmul_pallas(xd, sx, wd, sw, block_m=block_m,
-                                 block_n=block_n, interpret=interpret, **kw)
-    return _broadcast_ref(xd, sx, wd, sw, L, **kw)
+    _decode_plan(n_bits, min(k_tile, K))     # refuse unservable streams early
+    call = functools.partial(
+        _olm_matmul_impl, x, w, n_bits=n_bits, k_tile=k_tile, use=use,
+        block_m=block_m, block_n=block_n, quantize=quantize,
+        interpret=interpret)
+    if not use and oracle_needs_x64(cfg.n, cfg.delta) and not int64_enabled():
+        if isinstance(x, jax.core.Tracer) or isinstance(w, jax.core.Tracer):
+            # Flipping the x64 config mid-trace corrupts the enclosing
+            # trace's loop-carry dtypes (observed on jax 0.4.x): the
+            # scope is only safe around an eager entry point. The
+            # Pallas paths (use_pallas=True/None) never need it — only
+            # the n = 32 oracle's full-width recurrence does.
+            raise ValueError(
+                f"the n_bits={n_bits} broadcast-oracle path needs int64 "
+                "but was called inside an already-traced computation: "
+                "wrap the outer jit call in repro.compat.enable_x64(), "
+                "or use the Pallas path (use_pallas=None/True), whose "
+                "Eq.8-truncated datapath fits int32")
+        from repro.compat import enable_x64
+        with enable_x64():
+            return call()
+    return call()
 
 
 def olm_matmul_ref(x: jax.Array, w: jax.Array, *, n_bits: int = 16,
@@ -218,13 +296,20 @@ def olm_error_bound(x: jax.Array, w: jax.Array, *, n_bits: int = 16,
                     k_tile: int = DEFAULT_K_TILE) -> jax.Array:
     """Documented per-element bound on |olm_matmul(x, w) - x @ w|, (M, N)
     float32: per K-tile, k lanes each contribute <= ULP_PER_LANE output
-    ulp at 2^-n times the tile's power-of-two scale product."""
+    ulp at 2^-n times the tile's power-of-two scale product. On the wide
+    decode path (stream > 24 digits — the n = 24/32 modes) the bound
+    adds (T + 1) * WIDE_DECODE_ULP per lane: one exact-value-to-f32
+    decode rounding per K tile plus T accumulator roundings, each
+    <= kt * 2^-26 at the tile scale product (see WIDE_DECODE_ULP)."""
     kt, n_tiles, xp, wpT = _tile_plan(x, w, k_tile)
     M, N = xp.shape[0], wpT.shape[0]
     sx = pow2_scale(xp.reshape(M, n_tiles, kt), 2)[..., 0]    # (M, T)
     sw = pow2_scale(wpT.reshape(N, n_tiles, kt), 2)[..., 0]   # (N, T)
-    per_lane = jnp.float32(ULP_PER_LANE * 2.0 ** -n_bits)
-    return kt * per_lane * jnp.einsum("mt,nt->mn", sx, sw)
+    _, wide = _decode_plan(n_bits, kt)
+    per_lane = ULP_PER_LANE * 2.0 ** -n_bits
+    if wide:
+        per_lane += (n_tiles + 1) * WIDE_DECODE_ULP
+    return kt * jnp.float32(per_lane) * jnp.einsum("mt,nt->mn", sx, sw)
 
 
 def digit_traffic(M: int, N: int, K: int, *, n_bits: int = 16,

@@ -47,9 +47,12 @@ matmul.digit_traffic and asserted in tests/test_olm_matmul_grid.py.
 Bit-identity across all three paths (fused kernel, host-quantize
 kernel, broadcast oracle) holds by construction: the quantizer is one
 shared function (sd_quantize_inkernel — bitcast pow2 scales, no
-transcendentals), the digit arithmetic is lane_tree (bit-exact vs the
-int64 recurrence), the decode is exact in float32 for any reduction
-order within the guarded n + 2L <= 24 stream window, every scale
+transcendentals, two-limb digit extraction at n = 32), the digit
+arithmetic is lane_tree (bit-exact vs the int64 recurrence), the
+stream decode is exact — plain f32 contraction inside the n + 2L <= 24
+window, the two-limb wide decode (kernels/common.decode_policy) up to
+48 digits for the n = 24/32 modes, both order-invariant and both
+rounding the exact dyadic value to float32 at most once — every scale
 multiply is by a power of two (exact), and the K-tile accumulation
 order matches the oracle's loop.
 
@@ -66,7 +69,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.precision import OnlinePrecision
-from repro.kernels.common import (checked_schedule, decode_stream_inkernel,
+from repro.kernels.common import (checked_schedule, decode_policy,
+                                  decode_stream_inkernel,
+                                  decode_stream_wide_inkernel,
                                   pad_to_multiple, sd_quantize_inkernel)
 from .kernel import lane_tree
 from .ref import tree_levels
@@ -74,13 +79,17 @@ from .ref import tree_levels
 __all__ = ["olm_matmul_pallas", "olm_matmul_fused_pallas"]
 
 
-def _accumulate_tile(xd, sx, wd, sw, sched, out_ref, *, n, delta, t, S, L):
+def _accumulate_tile(xd, sx, wd, sw, sched, out_ref,
+                     *, n, delta, t, S, L, wide):
     """Shared tile body: fan the per-row / per-column digit grids out to
     the (bm * bn) PE lane batch inside VMEM, run lane_tree, decode, fold
     the exact 2^L tree scale and the pow2 quantization scales, and
     accumulate into the resident float32 output block. Both operand
     formats (pre-quantized grids, raw float tiles) end up here, so their
-    arithmetic is identical instruction for instruction."""
+    arithmetic is identical instruction for instruction. `wide` (static,
+    from kernels/common.decode_policy on the n + 2L stream length)
+    selects the two-limb wide stream decode for the n = 24/32 modes —
+    bit-identical to the host oracle's int64-or-two-limb decode."""
     bm, kt, _ = xd.shape
     bn = wd.shape[0]
     # Operand reuse happens here: each row/column grid was loaded (or,
@@ -89,13 +98,14 @@ def _accumulate_tile(xd, sx, wd, sw, sched, out_ref, *, n, delta, t, S, L):
     xg = jnp.broadcast_to(xd[:, None], (bm, bn, kt, n)).reshape(bm * bn, kt, n)
     wg = jnp.broadcast_to(wd[None, :], (bm, bn, kt, n)).reshape(bm * bn, kt, n)
     z = lane_tree(xg, wg, sched, n=n, delta=delta, t=t, S=S)
-    val = decode_stream_inkernel(z) * jnp.float32(1 << L)   # exact 2^L fold
+    decode = decode_stream_wide_inkernel if wide else decode_stream_inkernel
+    val = decode(z) * jnp.float32(1 << L)                   # exact 2^L fold
     scale = sx.reshape(bm, 1) * sw.reshape(1, bn)           # (bm, bn), pow2
     out_ref[...] += val.reshape(bm, bn) * scale
 
 
 def _kernel(sched_ref, xd_ref, sx_ref, wd_ref, sw_ref, out_ref,
-            *, n, delta, t, S, L):
+            *, n, delta, t, S, L, wide):
     """One (block_m, block_n) output tile x one K tile, host-quantized
     operands: digit grids cross HBM."""
 
@@ -106,10 +116,11 @@ def _kernel(sched_ref, xd_ref, sx_ref, wd_ref, sw_ref, out_ref,
     xd = xd_ref[...][:, 0]     # (block_m, kt, n) int32 digits in {-1,0,1}
     wd = wd_ref[...][:, 0]     # (block_n, kt, n)
     _accumulate_tile(xd, sx_ref[...], wd, sw_ref[...], sched_ref[...],
-                     out_ref, n=n, delta=delta, t=t, S=S, L=L)
+                     out_ref, n=n, delta=delta, t=t, S=S, L=L, wide=wide)
 
 
-def _fused_kernel(sched_ref, x_ref, w_ref, out_ref, *, n, delta, t, S, L):
+def _fused_kernel(sched_ref, x_ref, w_ref, out_ref,
+                  *, n, delta, t, S, L, wide):
     """One (block_m, block_n) output tile x one K tile, quantize fused
     into the prologue: raw float32 tiles cross HBM (n x fewer elements
     than their digit grids) and the signed-digit recoding happens here,
@@ -126,7 +137,7 @@ def _fused_kernel(sched_ref, x_ref, w_ref, out_ref, *, n, delta, t, S, L):
     xd, sx = sd_quantize_inkernel(xt, n=n)   # (bm, kt, n), (bm, 1)
     wd, sw = sd_quantize_inkernel(wt, n=n)
     _accumulate_tile(xd, sx, wd, sw, sched_ref[...], out_ref,
-                     n=n, delta=delta, t=t, S=S, L=L)
+                     n=n, delta=delta, t=t, S=S, L=L, wide=wide)
 
 
 @functools.partial(
@@ -171,6 +182,7 @@ def olm_matmul_pallas(
     if x_scales.shape != (M, T) or w_scales.shape != (N, T):
         raise ValueError("scale shapes must be (rows, K_tiles)")
     L = tree_levels(kt)
+    wide = decode_policy(n + 2 * L) == "wide"
     bm = max(1, min(block_m, M))
     bn = max(1, min(block_n, N))
     xd = pad_to_multiple(x_digits.astype(jnp.int32), bm, 0)
@@ -179,7 +191,8 @@ def olm_matmul_pallas(
     sw = pad_to_multiple(w_scales.astype(jnp.float32), bn, 0)
     Mp, Np = xd.shape[0], wd.shape[0]
     grid = (Mp // bm, Np // bn, T)   # K innermost: accumulator stays live
-    kern = functools.partial(_kernel, n=n, delta=delta, t=t, S=S, L=L)
+    kern = functools.partial(_kernel, n=n, delta=delta, t=t, S=S, L=L,
+                             wide=wide)
     out = pl.pallas_call(
         kern,
         grid=grid,
@@ -239,6 +252,7 @@ def olm_matmul_fused_pallas(
             f"w tiles {w_tiles.shape} do not match x tiles "
             f"{x_tiles.shape} in (K_tiles, k_tile)")
     L = tree_levels(kt)
+    wide = decode_policy(n + 2 * L) == "wide"
     bm = max(1, min(block_m, M))
     bn = max(1, min(block_n, N))
     # Zero-padding rows is benign: all-zero tiles quantize in-kernel to
@@ -247,7 +261,8 @@ def olm_matmul_fused_pallas(
     wt = pad_to_multiple(w_tiles.astype(jnp.float32), bn, 0)
     Mp, Np = xt.shape[0], wt.shape[0]
     grid = (Mp // bm, Np // bn, T)   # K innermost: accumulator stays live
-    kern = functools.partial(_fused_kernel, n=n, delta=delta, t=t, S=S, L=L)
+    kern = functools.partial(_fused_kernel, n=n, delta=delta, t=t, S=S, L=L,
+                             wide=wide)
     out = pl.pallas_call(
         kern,
         grid=grid,

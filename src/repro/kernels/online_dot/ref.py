@@ -31,7 +31,21 @@ import jax.numpy as jnp
 
 from repro.kernels.online_mul.ref import online_mul_batch_ref
 
-__all__ = ["adder_tree", "tree_levels", "online_dot_batch_ref"]
+__all__ = ["adder_tree", "tree_levels", "oracle_needs_x64",
+           "online_dot_batch_ref"]
+
+
+def oracle_needs_x64(n: int, delta: int = 3) -> bool:
+    """True when the full-width reference recurrence (this module's int64
+    oracle, via online_mul_batch_ref) overflows a canonicalized-to-int32
+    datapath: its registers span F = n + delta bits plus 3 bits of
+    residual/selection headroom. The Eq.8-*truncated* Pallas datapath
+    fits int32 at every ARRAY_PRECISIONS width (max T(j) + 3 <= 31 even
+    at n = 32 — the paper's reduced-working-precision point), but the
+    untruncated-width oracle needs real int64 above n = 25, so the
+    matmul front-end scopes its n = 32 oracle path under
+    repro.compat.enable_x64 when x64 is not already on."""
+    return n + delta + 3 > 31
 
 
 def tree_levels(k: int) -> int:

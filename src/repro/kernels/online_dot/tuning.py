@@ -32,9 +32,10 @@ so the auto path pins it to the kernel default (DEFAULT_K_TILE,
 clamped to K exactly as the kernel itself does) and a different
 k_tile must be an explicit caller choice (`DotEngine(k_tile=...)`,
 which wins over the tuner). Every candidate also respects the
-float32-exact decode window (n_bits + 2*ceil(log2 k_tile) <= 24) and
-the VMEM lane budget, so autotuning can never select a configuration
-the kernel would refuse.
+per-dtype exact decode window (`decode_window`: 24 digits plain-f32
+for n <= 16, 48 digits wide decode for n = 24/32) and the VMEM lane
+budget, so autotuning can never select a configuration the kernel
+would refuse.
 
 CLI (what `make tune` runs):
 
@@ -50,9 +51,12 @@ import os
 import time
 from typing import Dict, Optional
 
+from repro.kernels.common import DECODE_WINDOW_F32, DECODE_WINDOW_WIDE
+
 from .ref import tree_levels
 
-__all__ = ["Tiling", "TuningCache", "bucket", "bucket_key", "max_k_tile",
+__all__ = ["Tiling", "TuningCache", "bucket", "bucket_key",
+           "decode_window", "max_k_tile", "pinned_k_tile",
            "heuristic_tiling", "get_tiling", "tune", "default_cache"]
 
 # In-kernel lane batch budget (block_m * block_n * k_tile): the fused
@@ -61,8 +65,16 @@ __all__ = ["Tiling", "TuningCache", "bucket", "bucket_key", "max_k_tile",
 # inside a ~16 MB VMEM at n = 16 while leaving room to grow blocks.
 LANE_BUDGET = 2048
 
-# float32-exact stream decode window (kernels/common.decode_stream_jnp).
-DECODE_WINDOW = 24
+
+def decode_window(n_bits: int) -> int:
+    """Per-dtype exact decode window the tuner must keep streams inside:
+    n <= 16 stays on the plain-f32 path (24 digits — by policy, not
+    necessity: a 25..48-digit n = 16 stream *would* decode exactly on
+    the wide path, but auto tilings must stay bit-identical to the
+    static default, whose streams are f32-narrow); n = 24/32 have no
+    f32-narrow tiling at all, so they get the 48-digit wide window
+    (kernels/common.DECODE_WINDOW_WIDE)."""
+    return DECODE_WINDOW_F32 if n_bits <= 16 else DECODE_WINDOW_WIDE
 
 # Anchored to the repo root (four levels above this file's package
 # directory), not the CWD: `make tune` from the repo root and a serving
@@ -105,11 +117,23 @@ def bucket_key(M: int, N: int, K: int, n_bits: int) -> str:
 
 def max_k_tile(n_bits: int) -> int:
     """Largest power-of-two k_tile whose dot stream still decodes
-    exactly in float32: n_bits + 2*ceil(log2 kt) <= DECODE_WINDOW."""
+    exactly on this width's decode path:
+    n_bits + 2*ceil(log2 kt) <= decode_window(n_bits)."""
+    window = decode_window(n_bits)
     kt = 1
-    while n_bits + 2 * tree_levels(kt * 2) <= DECODE_WINDOW:
+    while n_bits + 2 * tree_levels(kt * 2) <= window:
         kt *= 2
     return kt
+
+
+def pinned_k_tile(K: int, n_bits: int) -> int:
+    """The k_tile `tiling="auto"` always serves: the kernel numerics
+    default clamped to the K bucket and the per-dtype decode window —
+    the ONE formula behind the never-changes-numerics guarantee. The
+    auto path, the heuristic, and tools/check_bench.py's tuning-cache
+    guard all call this, so the invariant can't drift between them."""
+    from .matmul import DEFAULT_K_TILE
+    return min(DEFAULT_K_TILE, _pow2_ceil(K), max_k_tile(n_bits))
 
 
 def heuristic_tiling(M: int, N: int, K: int, n_bits: int) -> Tiling:
@@ -124,10 +148,9 @@ def heuristic_tiling(M: int, N: int, K: int, n_bits: int) -> Tiling:
     (M=1) spends the whole budget on block_n instead of wasting 7/8 of
     an 8x8 tile on nonexistent rows.
     """
-    from .matmul import DEFAULT_K_TILE
-    # max_k_tile keeps the decode-window guarantee structural even if
+    # pinned_k_tile keeps the decode-window guarantee structural even if
     # DEFAULT_K_TILE is ever raised past what a given n_bits allows
-    kt = min(DEFAULT_K_TILE, _pow2_ceil(K), max_k_tile(n_bits))
+    kt = pinned_k_tile(K, n_bits)
     per_out = max(1, LANE_BUDGET // kt)          # block_m * block_n budget
     bm = min(_pow2_ceil(M), _pow2_floor(max(1, int(per_out ** 0.5))))
     bn = min(_pow2_ceil(N), max(1, per_out // bm))
@@ -213,9 +236,8 @@ def get_tiling(M: int, N: int, K: int, n_bits: int,
     structural: a cache file written by an older version, a different
     DEFAULT_K_TILE, or a hand edit can adjust blocks (pure perf) but
     can never alter what `tiling="auto"` computes."""
-    from .matmul import DEFAULT_K_TILE
     cache = cache or default_cache()
-    pinned = min(DEFAULT_K_TILE, _pow2_ceil(K), max_k_tile(n_bits))
+    pinned = pinned_k_tile(K, n_bits)
     hit = cache.lookup(M, N, K, n_bits)
     if hit is not None:
         return {**hit.as_dict(), "k_tile": pinned}
@@ -320,7 +342,7 @@ def main(argv: Optional[list[str]] = None) -> None:
                     help="per-dim measurement cap (CPU-friendly proxies)")
     ap.add_argument("--heuristic-only", action="store_true",
                     help="record heuristic tilings without measuring")
-    ap.add_argument("--n-bits", default="8,16",
+    ap.add_argument("--n-bits", default="8,16,24,32",
                     help="comma-separated digit widths to tune")
     args = ap.parse_args(argv)
     cache = TuningCache(args.cache)

@@ -276,12 +276,14 @@ def attention_apply(
             t_sharded = msize > 1 and cfg.n_kv_heads % msize != 0
             lane_pos = positions[:, 0]
             idx_b = jnp.mod(lane_pos, T) if ring else jnp.minimum(lane_pos, T - 1)
-            ck = jax.vmap(
-                lambda c, kk, i: jax.lax.dynamic_update_slice(c, kk, (i, 0, 0))
-            )(kv_cache["k"], k.astype(kv_cache["k"].dtype), idx_b)
-            cv = jax.vmap(
-                lambda c, vv, i: jax.lax.dynamic_update_slice(c, vv, (i, 0, 0))
-            )(kv_cache["v"], v.astype(kv_cache["v"].dtype), idx_b)
+            # zero indices take i's dtype: mixing traced int32 lane
+            # indices with bare Python 0s type-errors under x64
+            _upd = lambda c, kk, i: jax.lax.dynamic_update_slice(
+                c, kk, (i,) + (jnp.zeros((), i.dtype),) * 2)
+            ck = jax.vmap(_upd)(kv_cache["k"],
+                                k.astype(kv_cache["k"].dtype), idx_b)
+            cv = jax.vmap(_upd)(kv_cache["v"],
+                                v.astype(kv_cache["v"].dtype), idx_b)
             new_cache = {"k": ck, "v": cv, "len": jnp.maximum(cur, lane_pos.max() + 1)}
             slots = jnp.arange(T)
             if ring:  # per-lane slot->absolute-position map
@@ -305,12 +307,12 @@ def attention_apply(
             vw = jnp.roll(vw, shift, axis=1)
         else:
             kw, vw = k, v
+        # all-Python-int indices: a mixed (0, jnp.int32-zero, 0, 0) tuple
+        # type-errors under x64, where bare 0 canonicalizes to int64
         ck = jax.lax.dynamic_update_slice(
-            kv_cache["k"], kw.astype(kv_cache["k"].dtype),
-            (0, jnp.zeros((), jnp.int32), 0, 0))
+            kv_cache["k"], kw.astype(kv_cache["k"].dtype), (0, 0, 0, 0))
         cv = jax.lax.dynamic_update_slice(
-            kv_cache["v"], vw.astype(kv_cache["v"].dtype),
-            (0, jnp.zeros((), jnp.int32), 0, 0))
+            kv_cache["v"], vw.astype(kv_cache["v"].dtype), (0, 0, 0, 0))
         new_cache = {"k": ck, "v": cv, "len": cur + S}
 
     if memory is not None:

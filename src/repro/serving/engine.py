@@ -47,10 +47,13 @@ class ServeEngine:
                  dot_mode: Optional[str] = None,
                  dot_tiling: Union[str, Dict[str, object], None] = None):
         # Per-deployment numerics override: serve the same checkpoint under
-        # any registered DotEngine mode (e.g. "olm16" routes every decode
-        # GEMM through the fused inner-product array) without touching the
-        # model config or the engine's interpret/use_pallas deployment
-        # knobs. dot_tiling tunes the olm grid kernel per deployment:
+        # any registered DotEngine mode — every configs/olm_array
+        # ARRAY_PRECISIONS width ("olm8" .. "olm32") routes decode GEMMs
+        # through the fused inner-product array; the n = 24/32 modes
+        # transparently use the wide (int64/two-limb) stream decode —
+        # without touching the model config or the engine's
+        # interpret/use_pallas deployment knobs.
+        # dot_tiling tunes the olm grid kernel per deployment:
         # the string "auto" (or {"tiling": "auto"}) turns on the
         # shape-aware autotuner so prefill GEMMs and decode GEMVs each
         # get their own (block_m, block_n) output tile — k_tile stays

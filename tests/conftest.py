@@ -1,8 +1,28 @@
+import os
+
 import numpy as np
 import pytest
 
 # NOTE: do NOT set XLA_FLAGS device-count here — smoke tests and benches
 # must see the single real CPU device; only launch/dryrun.py forces 512.
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _x64_scope():
+    """REPRO_TEST_X64=1 runs the whole tier-1 suite inside the
+    repro.compat.enable_x64 scope (the CI x64 matrix axis): the wide
+    stream decode then takes its int64-accumulator branch and the n = 32
+    oracle runs without the front-end's own enable_x64 wrap — every
+    bit-identity assertion must hold either way, which is exactly the
+    cross-x64 invariant the wide decode documents. Going through the
+    compat shim (jax.experimental.enable_x64 on 0.4.x, jax.enable_x64 on
+    0.6+) also exercises the shim itself on both CI JAX versions."""
+    if os.environ.get("REPRO_TEST_X64") == "1":
+        from repro.compat import enable_x64
+        with enable_x64():
+            yield
+    else:
+        yield
 
 
 @pytest.fixture(scope="session")

@@ -43,7 +43,7 @@ def _pair(rng, M, K, N):
 
 
 class TestInKernelQuantize:
-    @pytest.mark.parametrize("n", [8, 16])
+    @pytest.mark.parametrize("n", [8, 16, 24, 32])
     def test_inside_pallas_bitwise_matches_host(self, rng, n):
         """The quantizer run as a Pallas kernel body must reproduce the
         host sd_quantize digits and scales bit for bit."""
@@ -79,7 +79,7 @@ class TestInKernelQuantize:
                                        (17, 40, 9)])  # multi ragged tiles
     def test_fused_bitwise_vs_host_and_oracle(self, rng, mode, shape):
         M, K, N = shape
-        n_bits = 8 if mode.endswith("8") else 16
+        n_bits = int(mode.removeprefix("olm"))   # olm8..olm32
         x, w = _pair(rng, M, K, N)
         fused = np.asarray(olm_matmul(x, w, n_bits=n_bits, use_pallas=True,
                                       quantize="kernel"))
@@ -205,21 +205,30 @@ class TestAutotunerCache:
 
 
 class TestAutotunerChoices:
-    @pytest.mark.parametrize("n_bits", [8, 16])
+    @pytest.mark.parametrize("n_bits", [8, 16, 24, 32])
     @pytest.mark.parametrize("shape", [(1, 4096, 4096), (8192, 4096, 1024),
                                        (4, 11, 3), (128, 128, 128)])
     def test_heuristic_is_always_legal(self, n_bits, shape):
         M, N, K = shape
         t = heuristic_tiling(M, N, K, n_bits)
-        # decode window: the kernel would refuse anything wider
-        assert n_bits + 2 * tree_levels(t.k_tile) <= 24
+        # per-dtype decode window: the kernel would refuse anything wider
+        assert n_bits + 2 * tree_levels(t.k_tile) <= \
+            tuning.decode_window(n_bits)
         # VMEM lane budget
         assert t.block_m * t.block_n * t.k_tile <= tuning.LANE_BUDGET
         assert t.block_m >= 1 and t.block_n >= 1 and t.k_tile >= 1
 
     def test_max_k_tile_decode_window(self):
+        # n <= 16: plain-f32 24-digit window (by policy — auto tilings
+        # must stay bit-identical to the f32-narrow static default)
         assert max_k_tile(16) == 16
         assert max_k_tile(8) == 256
+        # n = 24/32 have no f32-narrow tiling: the 48-digit wide window
+        # applies (n + 2*ceil(log2 kt) <= 48)
+        assert max_k_tile(24) == 4096
+        assert max_k_tile(32) == 256
+        assert tuning.decode_window(16) == 24
+        assert tuning.decode_window(24) == 48
 
     def test_gemv_spends_budget_on_columns(self):
         # M=1 decode GEMV: the static 8x8 default wastes 7/8 of its
@@ -258,7 +267,7 @@ class TestAutoTilingThreading:
     def test_auto_pins_k_tile_to_numerics_default(self):
         from repro.kernels.online_dot.matmul import DEFAULT_K_TILE
         for (M, N, K) in ((1, 4096, 4096), (8192, 4096, 1024), (4, 6, 48)):
-            for nb in (8, 16):
+            for nb in (8, 16, 24, 32):
                 t = heuristic_tiling(M, N, K, nb)
                 # same effective slice width as the kernel's own
                 # kt = min(DEFAULT_K_TILE, K) clamp

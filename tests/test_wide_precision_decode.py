@@ -1,0 +1,278 @@
+"""Wide-precision (n = 24/32) decode/quantize subsystem.
+
+Contracts under test:
+  * decode policy — streams <= 24 digits stay on the plain-f32 exact
+    path (n = 8/16 at default tiling: bit-for-bit the historical
+    behavior), 25..48 digits take the wide decode, wider refuses;
+  * wide decode exactness & x64 invariance — the int64-accumulator
+    branch (under repro.compat.enable_x64), the two-limb jnp branch,
+    and the in-kernel two-limb form all round the exact dyadic stream
+    value to float32 once, to the identical bit pattern, and agree
+    with an arbitrary-precision host reference;
+  * the n = 32 quantizer — two-limb digit extraction is exact against
+    a python-int reference including the closed endpoint |v| = 2^31
+    that overflows the int32 path;
+  * three-path bit-identity at n = 24/32 — fused kernel, host-quantize
+    kernel and broadcast oracle agree bitwise over ragged + GEMV
+    shapes, with and without x64;
+  * olm_error_bound holds per registered mode against the f64 matmul.
+"""
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.compat import enable_x64
+from repro.configs.olm_array import MATMUL_MODES
+from repro.kernels.common import (DECODE_WINDOW_F32, DECODE_WINDOW_WIDE,
+                                  decode_policy, decode_stream_inkernel,
+                                  decode_stream_wide_inkernel,
+                                  decode_stream_wide_jnp, int64_enabled,
+                                  sd_quantize, sd_quantize_inkernel)
+from repro.kernels.online_dot.matmul import (olm_error_bound, olm_matmul,
+                                             olm_matmul_ref)
+
+
+def _exact_stream_value(digits) -> np.ndarray:
+    """Arbitrary-precision decode: sum_i d_i 2^-(i+1) via python ints,
+    rounded to f32 only at the very end (numpy RN-even cast from the
+    f64-exact dyadic value — exact up to 52-digit streams)."""
+    d = np.asarray(digits, np.int64)
+    m = d.shape[-1]
+    scaled = d @ (np.int64(1) << np.arange(m - 1, -1, -1, dtype=np.int64))
+    return (scaled.astype(np.float64) * 2.0 ** -m).astype(np.float32)
+
+
+class TestDecodePolicy:
+    def test_windows(self):
+        assert decode_policy(1) == "f32"
+        assert decode_policy(DECODE_WINDOW_F32) == "f32"
+        assert decode_policy(DECODE_WINDOW_F32 + 1) == "wide"
+        assert decode_policy(DECODE_WINDOW_WIDE) == "wide"
+        with pytest.raises(ValueError, match="decode window"):
+            decode_policy(DECODE_WINDOW_WIDE + 1)
+
+    def test_default_tiling_streams(self):
+        # at the default k_tile=16 tree (L=4): n = 8/16 stay narrow,
+        # n = 24/32 go wide — the mode boundary the registry documents
+        from repro.kernels.online_dot.matmul import _decode_plan
+        assert _decode_plan(8, 16) == (4, False)
+        assert _decode_plan(16, 16) == (4, False)
+        assert _decode_plan(24, 16) == (4, True)
+        assert _decode_plan(32, 16) == (4, True)
+
+
+class TestWideDecode:
+    @pytest.mark.parametrize("m", [28, 40, DECODE_WINDOW_WIDE])
+    def test_exact_and_branch_identical(self, rng, m):
+        d = jnp.asarray(rng.integers(-1, 2, size=(256, m)).astype(np.int32))
+        want = _exact_stream_value(d)
+        got_ambient = np.asarray(decode_stream_wide_jnp(d))
+        got_kernelform = np.asarray(decode_stream_wide_inkernel(d))
+        with enable_x64():
+            assert int64_enabled()
+            got_int64 = np.asarray(decode_stream_wide_jnp(d))
+        np.testing.assert_array_equal(got_ambient, want)
+        np.testing.assert_array_equal(got_kernelform, want)
+        # the x64 CI axis flips which branch `ambient` took; both must
+        # produce the same bits as the forced-int64 run
+        np.testing.assert_array_equal(got_ambient, got_int64)
+
+    def test_narrow_streams_match_f32_decode(self, rng):
+        # inside the f32 window the wide decode degenerates to the
+        # plain exact decode bit-for-bit (lo window is empty/zero)
+        d = jnp.asarray(rng.integers(-1, 2, size=(64, 20)).astype(np.int32))
+        np.testing.assert_array_equal(
+            np.asarray(decode_stream_wide_inkernel(d)),
+            np.asarray(decode_stream_inkernel(d)))
+
+    def test_inside_pallas_body(self, rng):
+        # the in-kernel two-limb decode must survive an actual
+        # pallas_call and still match the host wide decode bitwise
+        m = 40
+        d = jnp.asarray(rng.integers(-1, 2, size=(8, m)).astype(np.int32))
+
+        def kern(d_ref, o_ref):
+            o_ref[...] = decode_stream_wide_inkernel(d_ref[...])
+
+        got = pl.pallas_call(
+            kern, out_shape=jax.ShapeDtypeStruct((8,), jnp.float32),
+            interpret=True)(d)
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.asarray(decode_stream_wide_jnp(d)))
+
+    def test_window_guard(self, rng):
+        d = jnp.asarray(rng.integers(-1, 2, size=(4, 49)).astype(np.int32))
+        with pytest.raises(ValueError, match="wide decode"):
+            decode_stream_wide_jnp(d)
+
+
+class TestQuantizerN32:
+    def _reference_digits(self, a, scale, n):
+        """Digit grid via python ints — no 32-bit anything."""
+        out = np.zeros(a.shape + (n,), np.int32)
+        for idx in np.ndindex(a.shape):
+            u = float(a[idx]) / float(scale[idx[:-1] + (0,)])
+            v = round(u * (1 << n))          # RN-even, like jnp.round
+            s = (v > 0) - (v < 0)
+            for p in range(n):
+                out[idx + (p,)] = s * ((abs(v) >> (n - 1 - p)) & 1)
+        return out
+
+    @pytest.mark.parametrize("n", [24, 32])
+    def test_matches_python_int_reference(self, rng, n):
+        a = rng.standard_normal((6, 9)).astype(np.float32)
+        d, s = sd_quantize(jnp.asarray(a), n=n, axis=-1)
+        d, s = np.asarray(d), np.asarray(s)
+        assert set(np.unique(d)) <= {-1, 0, 1}
+        np.testing.assert_array_equal(d, self._reference_digits(a, s, n))
+
+    def test_closed_endpoint_hits_2_pow_31(self):
+        # u = -1/2 exactly -> |v| = 2^31, one past int32: the two-limb
+        # extraction must encode it as digit 1 at position 1 (value
+        # 2^-1), where the int32 path would overflow
+        a = np.array([[-2.0, 0.5, 0.0]], np.float32)   # max 2.0 -> scale 4
+        d, s = sd_quantize(jnp.asarray(a), n=32, axis=-1)
+        d, s = np.asarray(d), np.asarray(s)
+        assert float(s[0, 0]) == 4.0
+        want_first = np.zeros(32, np.int32)
+        want_first[0] = -1                              # -1/2 = -2^-1
+        np.testing.assert_array_equal(d[0, 0], want_first)
+        np.testing.assert_array_equal(d, self._reference_digits(a, s, 32))
+
+    @pytest.mark.parametrize("n", [24, 32])
+    def test_roundtrip_within_half_ulp(self, rng, n):
+        a = rng.standard_normal((8, 12)).astype(np.float32)
+        d, s = sd_quantize(jnp.asarray(a), n=n, axis=1)
+        w = 0.5 ** np.arange(1, n + 1)
+        rec = (np.asarray(d) @ w) * np.asarray(s)
+        assert np.max(np.abs(rec - a)) <= np.asarray(s).max() * 2.0 ** -(n + 1)
+
+    def test_width_guard(self):
+        with pytest.raises(ValueError, match="n <= 32"):
+            sd_quantize_inkernel(jnp.ones((2, 4), jnp.float32), n=33)
+
+
+class TestWideMatmulModes:
+    SHAPES = [(5, 20, 3),    # all dims ragged
+              (3, 7, 2),     # K < k_tile
+              (1, 24, 5),    # GEMV, M=1
+              (1, 16, 1),    # single output element
+              (17, 40, 9)]   # multiple ragged output tiles
+
+    @pytest.mark.parametrize("n_bits", [24, 32])
+    @pytest.mark.parametrize("shape", SHAPES)
+    def test_three_paths_bitwise(self, rng, n_bits, shape):
+        M, K, N = shape
+        x = jnp.asarray(rng.standard_normal((M, K)).astype(np.float32))
+        w = jnp.asarray(rng.standard_normal((K, N)).astype(np.float32))
+        fused = np.asarray(olm_matmul(x, w, n_bits=n_bits, use_pallas=True,
+                                      quantize="kernel"))
+        host = np.asarray(olm_matmul(x, w, n_bits=n_bits, use_pallas=True,
+                                     quantize="host"))
+        oracle = np.asarray(olm_matmul(x, w, n_bits=n_bits,
+                                       use_pallas=False))
+        np.testing.assert_array_equal(fused, host)
+        np.testing.assert_array_equal(fused, oracle)
+
+    @pytest.mark.parametrize("n_bits", [24, 32])
+    def test_x64_scope_does_not_change_bits(self, rng, n_bits):
+        # the x64 CI axis must see the same bits: wide decode rounds
+        # the same exact value RN-even on the int64 and two-limb
+        # branches, and the n = 32 oracle's auto enable_x64 scope is
+        # equivalent to running inside an ambient one
+        x = jnp.asarray(rng.standard_normal((4, 36)).astype(np.float32))
+        w = jnp.asarray(rng.standard_normal((36, 5)).astype(np.float32))
+        ambient = {use: np.asarray(olm_matmul(x, w, n_bits=n_bits,
+                                              use_pallas=use))
+                   for use in (True, False)}
+        with enable_x64():
+            scoped = {use: np.asarray(olm_matmul(x, w, n_bits=n_bits,
+                                                 use_pallas=use))
+                      for use in (True, False)}
+        for use in (True, False):
+            np.testing.assert_array_equal(ambient[use], scoped[use])
+        np.testing.assert_array_equal(ambient[True], ambient[False])
+
+    def test_n32_oracle_under_outer_jit(self, rng):
+        # flipping x64 mid-trace would corrupt the enclosing trace's
+        # loop carries, so the auto-scope must refuse inside an outer
+        # jit without ambient x64 — and work under an ambient scope,
+        # producing the same bits as the eager auto-scoped call; the
+        # Pallas path needs no scope at all (int32 truncated datapath)
+        x = jnp.asarray(rng.standard_normal((3, 20)).astype(np.float32))
+        w = jnp.asarray(rng.standard_normal((20, 4)).astype(np.float32))
+        step = jax.jit(lambda x, w: olm_matmul(x, w, n_bits=32,
+                                               use_pallas=False))
+        eager = np.asarray(olm_matmul(x, w, n_bits=32, use_pallas=False))
+        if int64_enabled():       # the x64 CI axis: no refusal needed
+            np.testing.assert_array_equal(np.asarray(step(x, w)), eager)
+        else:
+            with pytest.raises(ValueError, match="enable_x64"):
+                step(x, w)
+            with enable_x64():
+                np.testing.assert_array_equal(np.asarray(step(x, w)), eager)
+        pallas_step = jax.jit(lambda x, w: olm_matmul(x, w, n_bits=32,
+                                                      use_pallas=True))
+        np.testing.assert_array_equal(np.asarray(pallas_step(x, w)), eager)
+
+    @pytest.mark.parametrize("mode", sorted(MATMUL_MODES.values()))
+    @pytest.mark.parametrize("shape", SHAPES)
+    def test_error_bound_vs_f64_every_mode(self, rng, mode, shape):
+        M, K, N = shape
+        n_bits = int(mode.removeprefix("olm"))
+        x = jnp.asarray(rng.standard_normal((M, K)).astype(np.float32))
+        w = jnp.asarray(rng.standard_normal((K, N)).astype(np.float32))
+        got = np.asarray(olm_matmul_ref(x, w, n_bits=n_bits))
+        exact = np.asarray(x, np.float64) @ np.asarray(w, np.float64)
+        bound = np.asarray(olm_error_bound(x, w, n_bits=n_bits))
+        assert np.all(np.abs(got - exact) <= bound)
+
+    @pytest.mark.parametrize("n_bits", [24, 32])
+    def test_wide_bound_includes_decode_term(self, rng, n_bits):
+        # the wide bound must carry the (T + 1) * WIDE_DECODE_ULP
+        # decode/accumulation rounding term on top of the bare
+        # quantization ledger — exactly as documented
+        from repro.kernels.common import pow2_scale
+        from repro.kernels.online_dot.matmul import (ULP_PER_LANE,
+                                                     WIDE_DECODE_ULP)
+        x = rng.standard_normal((3, 32)).astype(np.float32)
+        w = rng.standard_normal((32, 4)).astype(np.float32)
+        bound = np.asarray(olm_error_bound(jnp.asarray(x), jnp.asarray(w),
+                                           n_bits=n_bits))
+        kt, T = 16, 2
+        sx = np.asarray(pow2_scale(jnp.asarray(x.reshape(3, T, kt)),
+                                   2))[..., 0]
+        sw = np.asarray(pow2_scale(jnp.asarray(w.T.copy().reshape(4, T, kt)),
+                                   2))[..., 0]
+        per_lane = ULP_PER_LANE * 2.0 ** -n_bits + (T + 1) * WIDE_DECODE_ULP
+        want = kt * np.float32(per_lane) * np.einsum("mt,nt->mn", sx, sw)
+        np.testing.assert_allclose(bound, want, rtol=1e-6)
+
+
+class TestCheckBenchTool:
+    def test_tuning_invariant_check_runs(self):
+        root = Path(__file__).resolve().parents[1]
+        res = subprocess.run(
+            [sys.executable, str(root / "tools" / "check_bench.py"),
+             "--only", "tuning"],
+            capture_output=True, text=True, cwd=root)
+        assert res.returncode == 0, res.stdout + res.stderr
+        assert "re-pin invariant holds" in res.stdout
+
+    def test_tuning_check_rejects_broken_schema(self, tmp_path):
+        root = Path(__file__).resolve().parents[1]
+        bad = tmp_path / "tuning.json"
+        bad.write_text('{"entries": {"m8n8k8b16": {"k_tile": "wide"}}}')
+        res = subprocess.run(
+            [sys.executable, str(root / "tools" / "check_bench.py"),
+             "--only", "tuning", "--tuning", str(bad)],
+            capture_output=True, text=True, cwd=root)
+        assert res.returncode == 1
+        assert "FAIL" in res.stdout

@@ -1,0 +1,214 @@
+#!/usr/bin/env python
+"""CI guard over the perf story: traffic, baselines, tuning cache.
+
+Replaces the old inline-heredoc CI step with a checked-in, locally
+runnable tool. Three independent checks (all on by default):
+
+  traffic   — from results/bench/BENCH_olm_matmul_fused.json: for EVERY
+              registered olm matmul mode (configs/olm_array.MATMUL_MODES,
+              n = 8/16/24/32), the quantize-in-kernel path must move
+              >= 4x fewer operand bytes than its host-quantize grid
+              mate (n_bits x by construction — the documented floor),
+              and no registered width may be missing from the bench (a
+              silently narrowed sweep is itself a regression).
+  baseline  — every committed seed under results/baseline/ must have a
+              freshly generated mate under results/bench/ whose rows
+              match: traffic columns (bytes_moved / bytes_float) and
+              analytic `derived` values (reuse ratios, cut factors)
+              exactly, error columns (ulp) within --tol relative; rows
+              present in the seed may not disappear. Wall-clock (us) is
+              never compared — too noisy for shared CI runners; the
+              JSON artifacts track it.
+  tuning    — results/tuning.json must parse against the TuningCache
+              schema, and for every cached entry the value
+              `tiling="auto"` would actually serve (get_tiling on the
+              entry's recorded shape) must re-pin k_tile to the kernel
+              numerics default — the PR-4 invariant that a stale or
+              hand-edited cache can adjust blocks (pure perf) but can
+              never change model outputs.
+
+Usage (CI runs it bare from the repo root after the bench smoke step):
+
+  python tools/check_bench.py [--bench results/bench]
+      [--baseline results/baseline] [--tuning results/tuning.json]
+      [--tol 0.1] [--only traffic,baseline,tuning]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_REPO_ROOT, "src"))
+
+from repro.configs.olm_array import MATMUL_MODES                  # noqa: E402
+from repro.kernels.online_dot.tuning import (TuningCache,         # noqa: E402
+                                             get_tiling, pinned_k_tile)
+
+_BUCKET_KEY = re.compile(r"^m\d+n\d+k\d+b\d+$")
+_TUNING_REQUIRED = {"k_tile": int, "block_m": int, "block_n": int,
+                    "source": str, "shape": list, "n_bits": int}
+
+
+class CheckFailure(Exception):
+    pass
+
+
+def _load(path: str) -> dict:
+    if not os.path.exists(path):
+        raise CheckFailure(f"missing file: {path}")
+    with open(path) as f:
+        return json.load(f)
+
+
+def check_traffic(bench_dir: str) -> None:
+    """Fused-vs-host operand-byte floor, for every registered mode."""
+    rows = _load(os.path.join(bench_dir,
+                              "BENCH_olm_matmul_fused.json"))["rows"]
+    host = {r["n"]: r["bytes_moved"] for r in rows
+            if r["op"] == "olm_matmul_fused/grid-host"}
+    fused = {r["n"]: r["bytes_moved"] for r in rows
+             if r["op"] == "olm_matmul_fused/grid-fused"}
+    missing = set(MATMUL_MODES) - (set(host) & set(fused))
+    if missing:
+        raise CheckFailure(
+            f"olm_matmul_fused bench is missing registered widths "
+            f"{sorted(missing)} (have host={sorted(host)}, "
+            f"fused={sorted(fused)}): the sweep must cover every "
+            "MATMUL_MODES entry")
+    for n in sorted(fused):
+        fb, hb = fused[n], host[n]
+        if fb * 4 > hb:
+            raise CheckFailure(
+                f"n={n}: fused path moved {fb} B vs host {hb} B — "
+                f"below the documented >= 4x cut")
+        print(f"  traffic n={n}: fused {fb} B vs host {hb} B "
+              f"({hb / fb:.0f}x cut) ok")
+
+
+def _close(a, b, tol: float) -> bool:
+    if a is None or b is None:
+        return a == b
+    if isinstance(a, str) or isinstance(b, str):
+        return a == b
+    return abs(a - b) <= tol * max(abs(a), abs(b)) + 1e-9
+
+
+def check_baseline(bench_dir: str, baseline_dir: str, tol: float) -> None:
+    """Fresh bench JSON vs the committed seeds, with tolerance."""
+    seeds = sorted(f for f in os.listdir(baseline_dir)
+                   if f.startswith("BENCH_") and f.endswith(".json"))
+    if not seeds:
+        raise CheckFailure(f"no BENCH_*.json seeds under {baseline_dir}")
+    for name in seeds:
+        want = {(r["op"], r["n"], r["k"]): r
+                for r in _load(os.path.join(baseline_dir, name))["rows"]}
+        got = {(r["op"], r["n"], r["k"]): r
+               for r in _load(os.path.join(bench_dir, name))["rows"]}
+        if missing := set(want) - set(got):
+            raise CheckFailure(
+                f"{name}: rows vanished vs the committed baseline: "
+                f"{sorted(missing)} — coverage may not silently narrow")
+        for key, w in sorted(want.items()):
+            g = got[key]
+            # exact: traffic columns and `derived` are analytic counts/
+            # ratios — a single byte or ratio tick is a real regression
+            for col in ("bytes_moved", "bytes_float", "derived"):
+                if w.get(col) != g.get(col):
+                    raise CheckFailure(
+                        f"{name} {key}: {col} {g.get(col)} != baseline "
+                        f"{w.get(col)} (traffic/structure regression)")
+            # tolerant: measured error columns may wiggle across
+            # backends (the bench's f64 reference keeps this small)
+            if not _close(w.get("ulp"), g.get("ulp"), tol):
+                raise CheckFailure(
+                    f"{name} {key}: ulp {g.get('ulp')} vs baseline "
+                    f"{w.get('ulp')} exceeds rel tol {tol}")
+        print(f"  baseline {name}: {len(want)} rows match "
+              f"(bytes/derived exact, ulp within {tol:.0%})")
+
+
+def check_tuning(tuning_path: str) -> None:
+    """Schema + the k_tile-re-pin numerics invariant, per cached entry."""
+    data = _load(tuning_path)
+    if set(data) != {"entries"} or not isinstance(data["entries"], dict):
+        raise CheckFailure(
+            f"{tuning_path}: top level must be exactly {{'entries': "
+            f"{{...}}}}, got keys {sorted(data)}")
+    cache = TuningCache(tuning_path)   # one parse, shared by every lookup
+    for key, e in sorted(data["entries"].items()):
+        if not _BUCKET_KEY.match(key):
+            raise CheckFailure(f"{tuning_path}: malformed bucket key {key!r}")
+        for field, typ in _TUNING_REQUIRED.items():
+            if not isinstance(e.get(field), typ):
+                raise CheckFailure(
+                    f"{tuning_path} {key}: field {field!r} missing or not "
+                    f"{typ.__name__}: {e.get(field)!r}")
+        if e["source"] not in ("measured", "heuristic"):
+            raise CheckFailure(
+                f"{tuning_path} {key}: unknown source {e['source']!r}")
+        if len(e["shape"]) != 3 or not all(
+                isinstance(v, int) and v >= 1 for v in e["shape"]):
+            raise CheckFailure(
+                f"{tuning_path} {key}: shape must be three ints >= 1, "
+                f"got {e['shape']}")
+        if min(e["block_m"], e["block_n"], e["k_tile"]) < 1:
+            raise CheckFailure(f"{tuning_path} {key}: non-positive tiling")
+        # The invariant: whatever k_tile the entry stores, what
+        # tiling="auto" serves for this entry's shape must be the
+        # kernel numerics default (tuning.pinned_k_tile — the same
+        # formula the auto path itself uses, so the guard can't drift).
+        M, N, K = e["shape"]
+        served = get_tiling(M, N, K, e["n_bits"], cache)
+        pinned = pinned_k_tile(K, e["n_bits"])
+        if served["k_tile"] != pinned:
+            raise CheckFailure(
+                f"{tuning_path} {key}: auto would serve k_tile="
+                f"{served['k_tile']}, numerics default is {pinned} — "
+                "the re-pin invariant is broken")
+    print(f"  tuning {tuning_path}: {len(data['entries'])} entries valid, "
+          "k_tile re-pin invariant holds")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--bench", default=os.path.join(_REPO_ROOT, "results",
+                                                    "bench"))
+    ap.add_argument("--baseline", default=os.path.join(_REPO_ROOT, "results",
+                                                       "baseline"))
+    ap.add_argument("--tuning", default=os.path.join(_REPO_ROOT, "results",
+                                                     "tuning.json"))
+    ap.add_argument("--tol", type=float, default=0.1,
+                    help="relative tolerance for derived/ulp columns")
+    ap.add_argument("--only", default="traffic,baseline,tuning",
+                    help="comma-separated subset of checks to run")
+    args = ap.parse_args(argv)
+    checks = {
+        "traffic": lambda: check_traffic(args.bench),
+        "baseline": lambda: check_baseline(args.bench, args.baseline,
+                                           args.tol),
+        "tuning": lambda: check_tuning(args.tuning),
+    }
+    failed = False
+    for name in args.only.split(","):
+        name = name.strip()
+        if name not in checks:
+            print(f"unknown check {name!r}; have {sorted(checks)}")
+            return 2
+        print(f"check_bench: {name}")
+        try:
+            checks[name]()
+        except CheckFailure as e:
+            print(f"  FAIL: {e}")
+            failed = True
+    if failed:
+        return 1
+    print("check_bench: all checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
