@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify bench bench-json check-bench test tune
+.PHONY: verify bench bench-json check-bench test tune lint lint-kernels
 
 # Tier-1 verification (same command as ROADMAP.md / CI)
 verify:
@@ -25,6 +25,20 @@ bench-json:
 # results/baseline seeds, tuning.json schema + k_tile re-pin invariant.
 check-bench:
 	$(PYTHON) tools/check_bench.py
+
+# Static analyzer (tools/olmlint.py): jaxpr kernel contracts + int32
+# overflow proof + VMEM model + AST repo rules. ruff (style) runs only
+# where installed — the dev container ships without it; CI installs it.
+lint:
+	$(PYTHON) tools/olmlint.py
+	@command -v ruff >/dev/null 2>&1 \
+		&& ruff check . \
+		|| echo "ruff not installed; skipping style pass (CI runs it)"
+
+# Kernel engine only (skips AST + ruff): the loop you run while
+# editing a kernel body or a truncation schedule.
+lint-kernels:
+	$(PYTHON) tools/olmlint.py --engine kernels
 
 # Populate the olm matmul tiling-autotuner cache (results/tuning.json)
 # for the launch/shapes.py shape set. TUNE_ARGS passes CLI flags, e.g.

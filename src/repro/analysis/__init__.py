@@ -1,0 +1,57 @@
+"""olmlint — static kernel-contract & numerics analyzer.
+
+Two engines over the repo's correctness story (README "Kernel
+contracts" maps each contract to the paper invariant it enforces):
+
+  Engine 1 (kernel lint): abstract jaxpr tracing of every registered
+    Pallas kernel body at every MATMUL_MODES width x representative
+    tiling bucket, under both x64 settings (jaxpr_lint); a symbolic
+    worst-case magnitude proof of int32 non-overflow through the Fig. 7
+    / Eq. 8 truncation schedule plus decode-window coverage of the
+    autotuner's legal k_tile range (overflow); and a static VMEM
+    footprint model from the kernels' own block-shape tables against
+    the width-aware lane budget (vmem).
+
+  Engine 2 (AST lint): repo architecture rules over src/ with a
+    committed suppression baseline (ast_lint).
+
+CLI: tools/olmlint.py (`make lint`, `make lint-kernels`). CI runs both
+engines on both jax matrix versions alongside check-bench.
+"""
+from __future__ import annotations
+
+from typing import Iterable
+
+from . import ast_lint, jaxpr_lint, overflow, vmem
+from .contracts import CONTRACTS, Violation
+from .registry import KernelCase, iter_cases
+
+__all__ = ["CONTRACTS", "Violation", "KernelCase", "iter_cases",
+           "run_kernel_lint", "run_ast_lint", "run_all"]
+
+
+def run_kernel_lint(widths: Iterable[int] | None = None,
+                    tuning_path: str | None = None) -> list[Violation]:
+    """Engine 1: jaxpr contracts + overflow proof + VMEM model."""
+    out: list[Violation] = []
+    out.extend(jaxpr_lint.run(widths))
+    out.extend(overflow.run(widths))
+    out.extend(vmem.run(widths, tuning_path))
+    return out
+
+
+def run_ast_lint(root: str | None = None,
+                 baseline: set[str] | str | None = None
+                 ) -> tuple[list[Violation], list[str], set[str]]:
+    """Engine 2: AST repo rules. Returns (violations, raw keys, unused
+    baseline entries) — see ast_lint.run."""
+    return ast_lint.run(root, baseline)
+
+
+def run_all(widths: Iterable[int] | None = None,
+            root: str | None = None,
+            baseline: set[str] | str | None = None) -> list[Violation]:
+    """Both engines; the CLI's default."""
+    violations = run_kernel_lint(widths)
+    ast_violations, _, _ = run_ast_lint(root, baseline)
+    return violations + ast_violations

@@ -1,0 +1,190 @@
+"""Engine 2: fast AST lint enforcing repo architecture rules over src/.
+
+Three repo-specific rules (style is ruff's job — see ruff.toml):
+
+  ast-raw-dot              no jnp.dot / lax.dot_general calls outside
+                           core/numerics.py: contractions route through
+                           DotEngine so olm mode dispatch can't be
+                           bypassed.
+  ast-x64-config           no jax.config.update("jax_enable_x64", ...)
+                           outside compat.py: x64 is scoped via
+                           repro.compat.enable_x64, never global.
+  ast-transcendental-scale no math.log2 / exp2 / pow calls inside the
+                           scale-computation modules: pow2 scales are
+                           exponent-field bitcasts, exact on every
+                           backend.
+
+Import aliases are resolved per module (import jax.numpy as jnp,
+from jax import lax, from jax.lax import dot_general, ...) so renaming
+an import cannot dodge a rule. Grandfathered sites live in a committed
+suppression baseline keyed `rule::relpath::qualname` — moving or adding
+a call invalidates its key, so the baseline can only shrink silently,
+never grow.
+"""
+from __future__ import annotations
+
+import ast
+import json
+import os
+from typing import Iterable
+
+from .contracts import Violation
+
+__all__ = ["RAW_DOT_CALLS", "TRANSCENDENTAL_CALLS", "SCALE_MODULES",
+           "DEFAULT_BASELINE_PATH", "lint_file", "load_baseline",
+           "baseline_key", "run"]
+
+_REPO_ROOT = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "..", ".."))
+DEFAULT_BASELINE_PATH = os.path.join(_REPO_ROOT, "tools",
+                                     "olmlint_baseline.json")
+
+# Fully-qualified callables each rule bans (post alias resolution).
+RAW_DOT_CALLS = frozenset({
+    "jax.numpy.dot", "jax.lax.dot", "jax.lax.dot_general",
+})
+TRANSCENDENTAL_CALLS = frozenset({
+    "math.log2", "math.exp2", "math.pow",
+    "numpy.exp2", "numpy.log2", "numpy.power",
+    "jax.numpy.exp2", "jax.numpy.log2", "jax.numpy.power",
+    "jax.lax.exp2", "jax.lax.exp", "jax.lax.log", "jax.lax.pow",
+})
+
+# repo-relative allowlists / scopes (posix-style paths)
+RAW_DOT_ALLOWED = ("src/repro/core/numerics.py",)
+X64_ALLOWED = ("src/repro/compat.py",)
+# modules that compute or apply pow2 scales — the bit-exactness surface
+SCALE_MODULES = (
+    "src/repro/kernels/common.py",
+    "src/repro/kernels/tpmm/quantize.py",
+    "src/repro/core/sd.py",
+)
+
+
+def _import_aliases(tree: ast.Module) -> dict:
+    """name-in-module -> fully qualified dotted prefix."""
+    aliases: dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                aliases[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            if node.level:      # relative imports never alias jax/numpy
+                continue
+            for a in node.names:
+                aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+    return aliases
+
+
+def _dotted(func: ast.AST, aliases: dict) -> str | None:
+    """Resolve a call's func node to a fully qualified dotted name."""
+    parts: list[str] = []
+    node = func
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    base = aliases.get(node.id, node.id)
+    return ".".join([base, *reversed(parts)])
+
+
+def baseline_key(rule: str, relpath: str, qualname: str) -> str:
+    return f"{rule}::{relpath}::{qualname}"
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, relpath: str, aliases: dict, src_lines: list[str]):
+        self.relpath = relpath
+        self.aliases = aliases
+        self.src_lines = src_lines
+        self.stack: list[str] = []
+        self.findings: list[tuple[str, int, str]] = []  # (rule, line, qual)
+
+    def _qual(self) -> str:
+        return ".".join(self.stack) or "<module>"
+
+    def visit_FunctionDef(self, node):
+        self.stack.append(node.name)
+        self.generic_visit(node)
+        self.stack.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+    visit_ClassDef = visit_FunctionDef
+
+    def visit_Call(self, node: ast.Call):
+        name = _dotted(node.func, self.aliases)
+        if name:
+            if (name in RAW_DOT_CALLS
+                    and self.relpath not in RAW_DOT_ALLOWED):
+                self.findings.append(("ast-raw-dot", node.lineno,
+                                      self._qual()))
+            if (name in TRANSCENDENTAL_CALLS
+                    and self.relpath in SCALE_MODULES):
+                self.findings.append(("ast-transcendental-scale",
+                                      node.lineno, self._qual()))
+            if (name.endswith("config.update")
+                    and self.relpath not in X64_ALLOWED
+                    and node.args
+                    and isinstance(node.args[0], ast.Constant)
+                    and node.args[0].value == "jax_enable_x64"):
+                self.findings.append(("ast-x64-config", node.lineno,
+                                      self._qual()))
+        self.generic_visit(node)
+
+
+def lint_file(path: str, root: str | None = None
+              ) -> list[tuple[str, str, int, str]]:
+    """Lint one file; returns (rule, relpath, lineno, qualname) tuples
+    (suppression not yet applied — `run` handles the baseline)."""
+    root = root or _REPO_ROOT
+    relpath = os.path.relpath(os.path.abspath(path), root).replace(os.sep, "/")
+    with open(path, encoding="utf-8") as f:
+        src = f.read()
+    tree = ast.parse(src, filename=path)
+    v = _Visitor(relpath, _import_aliases(tree), src.splitlines())
+    v.visit(tree)
+    return [(rule, relpath, line, qual) for rule, line, qual in v.findings]
+
+
+def load_baseline(path: str | None = None) -> set[str]:
+    path = path or DEFAULT_BASELINE_PATH
+    if not os.path.exists(path):
+        return set()
+    with open(path) as f:
+        return set(json.load(f).get("suppressions", []))
+
+
+def run(root: str | None = None, baseline: set[str] | str | None = None
+        ) -> tuple[list[Violation], list[str], set[str]]:
+    """Lint every .py under src/ of `root`.
+
+    Returns (violations, raw_keys, unused_baseline): raw_keys is every
+    finding's baseline key pre-suppression (what --write-baseline
+    records); unused_baseline entries are stale suppressions worth
+    pruning (reported, never fatal)."""
+    root = os.path.abspath(root or _REPO_ROOT)
+    if not isinstance(baseline, set):
+        baseline = load_baseline(baseline)
+    violations: list[Violation] = []
+    raw_keys: list[str] = []
+    used: set[str] = set()
+    src_root = os.path.join(root, "src")
+    for dirpath, dirnames, filenames in os.walk(src_root):
+        dirnames.sort()
+        for fn in sorted(filenames):
+            if not fn.endswith(".py"):
+                continue
+            for rule, relpath, line, qual in lint_file(
+                    os.path.join(dirpath, fn), root):
+                key = baseline_key(rule, relpath, qual)
+                raw_keys.append(key)
+                if key in baseline:
+                    used.add(key)
+                    continue
+                violations.append(Violation(
+                    rule, f"{relpath}:{line}",
+                    f"in {qual} (suppress with baseline key {key!r} "
+                    "only for grandfathered sites)"))
+    return violations, raw_keys, baseline - used

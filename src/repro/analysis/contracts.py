@@ -1,0 +1,79 @@
+"""Contract registry and the Violation record every olmlint engine emits.
+
+A *contract* is one statically checkable invariant the paper's
+correctness story rests on. Each has a stable id (the key below) that
+failures are reported under — tests assert on these ids, the CLI prints
+them, and the suppression baseline keys off them — plus a one-line
+statement of the invariant and where it comes from (paper Eq. 8, the
+exact-decode windows, TPU lowering rules, or repo architecture).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["Violation", "CONTRACTS"]
+
+CONTRACTS = {
+    # -- Engine 1: jaxpr contract checker (repro.analysis.jaxpr_lint) --
+    "kernel-no-int64": (
+        "Pallas kernel bodies must not contain int64/uint64/float64 "
+        "primitives or x64-dependent dtypes: the TPU datapath is 32-bit "
+        "and results must be bit-identical across x64 settings."),
+    "kernel-no-transcendental": (
+        "No transcendental primitives (exp/exp2/log/log2/pow/...) inside "
+        "kernel bodies: the pow2-scale path must stay bitcast-exact — a "
+        "backend's ulp wobble on exp2 breaks host/kernel bit-identity."),
+    "kernel-no-1d-iota": (
+        "No 1-D iota inside kernel bodies: it does not lower on TPU; use "
+        "lax.broadcasted_iota with a >= 2-D shape."),
+    "kernel-accum-dtype": (
+        "Kernel outputs/accumulators must carry the declared dtype "
+        "(int32 digit streams, float32 matmul accumulators) — a widened "
+        "or narrowed accumulator silently changes numerics."),
+    # -- Engine 1: symbolic overflow prover (repro.analysis.overflow) --
+    "int32-overflow": (
+        "Worst-case magnitude propagation through the Fig. 7 truncation "
+        "schedule (paper Eq. 8: p = ceil((2n+delta+t)/3)) must prove "
+        "every architectural quantity of the digit recurrence fits int32 "
+        "for each (n_bits, k_tile) in the autotuner's legal range."),
+    "decode-window": (
+        "Dot-stream length n + 2*ceil(log2 k_tile) must stay inside the "
+        "width's exact decode window (24 digits plain-f32, 48 wide "
+        "two-limb) — past it the decode silently rounds and the "
+        "three-path bit-identity breaks."),
+    # -- Engine 1: static VMEM footprint model (repro.analysis.vmem) --
+    "vmem-budget": (
+        "The per-grid-step VMEM footprint from the kernel's BlockSpecs "
+        "plus the in-kernel lane working set must respect the width-aware "
+        "lane budget (tuning.lane_budget) and the ~16 MB VMEM capacity."),
+    # -- Engine 2: AST repo lint (repro.analysis.ast_lint) --
+    "ast-raw-dot": (
+        "No raw jnp.dot / lax.dot_general outside core/numerics.py: "
+        "every contraction routes through DotEngine so mode dispatch and "
+        "the olm bit-identity guarantees cannot be bypassed."),
+    "ast-x64-config": (
+        "No jax.config.update('jax_enable_x64', ...) outside compat.py: "
+        "x64 is scoped via repro.compat.enable_x64, never flipped "
+        "globally — global flips leak into other tests/kernels."),
+    "ast-transcendental-scale": (
+        "No math.log2 / jnp.exp2 / jnp.log2 / pow in scale-computation "
+        "modules: pow2 scales are built by exponent-field bitcast so "
+        "they are exact powers of two on every backend."),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One contract failure: the contract id, where it was found (kernel
+    case name or file:line), and the offending evidence (jaxpr eqn, AST
+    source line, or the numbers that broke the bound)."""
+
+    contract: str
+    where: str
+    detail: str
+
+    def __str__(self) -> str:
+        text = CONTRACTS.get(self.contract, "(unknown contract)")
+        return (f"[{self.contract}] {self.where}\n"
+                f"    {self.detail}\n"
+                f"    contract: {text}")

@@ -1,0 +1,137 @@
+"""Engine 1 core: jaxpr contract checks on abstractly traced kernels.
+
+Each registered kernel body (repro.analysis.registry) is traced with
+jax.make_jaxpr under BOTH x64 settings (repro.compat.enable_x64 scope —
+never a global config flip) and every equation, including those inside
+scan/while/cond/pjit sub-jaxprs, is checked against the kernel-legality
+contracts:
+
+  kernel-no-int64           no 64-bit avals anywhere in the body. With
+                            x64 off JAX canonicalizes int64 away, so the
+                            x64-ON trace is the adversarial one: a
+                            Python-int fori_loop bound or a stray
+                            astype(int64) only shows there — precisely
+                            the "works on CI leg A, breaks on leg B"
+                            class this engine exists to kill.
+  kernel-no-transcendental  no exp/exp2/log/pow/... primitives: pow2
+                            scales and decode weights must be built by
+                            exponent-field bitcast, never a libm call.
+  kernel-no-1d-iota         1-D iota does not lower on TPU.
+  kernel-accum-dtype        body outputs carry their declared dtypes.
+
+Failures carry the offending equation (pretty-printed, truncated) so
+`make lint-kernels` output points at the exact primitive.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Iterator, Sequence
+
+from repro import compat
+
+from .contracts import Violation
+from .registry import KernelCase, iter_cases
+
+__all__ = ["BANNED_DTYPES", "TRANSCENDENTAL_PRIMS", "iter_eqns",
+           "check_jaxpr", "check_case", "run"]
+
+BANNED_DTYPES = frozenset({"int64", "uint64", "float64", "complex128"})
+
+# lax primitive names with data-dependent libm semantics. integer_pow is
+# deliberately absent: x**2 lowers to it and it is exact multiplication.
+TRANSCENDENTAL_PRIMS = frozenset({
+    "exp", "exp2", "expm1", "log", "log2", "log1p", "pow", "sqrt", "rsqrt",
+    "cbrt", "logistic", "tanh", "tan", "sin", "cos", "asin", "acos", "atan",
+    "atan2", "sinh", "cosh", "asinh", "acosh", "atanh", "erf", "erfc",
+    "erf_inv", "digamma", "lgamma",
+})
+
+
+def _sub_jaxprs(params: dict) -> Iterator:
+    """Yield every (Closed)Jaxpr hiding in an eqn's params — scan/while
+    bodies, cond branches, pjit/closed_call callees. Duck-typed (an
+    object with .eqns is a Jaxpr, one with .jaxpr wraps one) so it works
+    across the jax 0.4.x..latest core API moves."""
+    for v in params.values():
+        vs = v if isinstance(v, (tuple, list)) else (v,)
+        for item in vs:
+            if hasattr(item, "jaxpr") and hasattr(item.jaxpr, "eqns"):
+                yield item.jaxpr
+            elif hasattr(item, "eqns"):
+                yield item
+
+
+def iter_eqns(jaxpr) -> Iterator:
+    """All equations of `jaxpr`, depth-first through sub-jaxprs."""
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for sub in _sub_jaxprs(eqn.params):
+            yield from iter_eqns(sub)
+
+
+def _fmt_eqn(eqn) -> str:
+    text = " ".join(str(eqn).split())
+    return text if len(text) <= 180 else text[:177] + "..."
+
+
+def check_jaxpr(closed, *, where: str,
+                out_dtypes: Sequence[str] | None = None) -> list[Violation]:
+    """Run the per-equation contracts over one closed jaxpr."""
+    out: list[Violation] = []
+    jaxpr = closed.jaxpr if hasattr(closed, "jaxpr") else closed
+    for eqn in iter_eqns(jaxpr):
+        prim = eqn.primitive.name
+        for var in (*eqn.invars, *eqn.outvars):
+            aval = getattr(var, "aval", None)
+            dt = str(getattr(aval, "dtype", ""))
+            if dt in BANNED_DTYPES:
+                out.append(Violation(
+                    "kernel-no-int64", where,
+                    f"{dt} aval in eqn: {_fmt_eqn(eqn)}"))
+                break
+        if prim in TRANSCENDENTAL_PRIMS:
+            out.append(Violation(
+                "kernel-no-transcendental", where,
+                f"transcendental primitive '{prim}': {_fmt_eqn(eqn)}"))
+        if prim == "iota" and len(eqn.params.get("shape", ())) == 1:
+            out.append(Violation(
+                "kernel-no-1d-iota", where,
+                f"1-D iota (does not lower on TPU): {_fmt_eqn(eqn)}"))
+    if out_dtypes is not None:
+        got = tuple(str(v.aval.dtype) for v in jaxpr.outvars)
+        if got != tuple(out_dtypes):
+            out.append(Violation(
+                "kernel-accum-dtype", where,
+                f"body outputs carry {got}, declared {tuple(out_dtypes)}"))
+    return out
+
+
+def check_case(case: KernelCase) -> list[Violation]:
+    """Trace one kernel case under both x64 settings and check it. The
+    trace itself failing is reported as a violation rather than raised:
+    a kernel that cannot even trace under some x64 setting has broken
+    the x64-independence contract."""
+    out: list[Violation] = []
+    for x64 in (False, True):
+        leg = f"{case.name} [x64={'on' if x64 else 'off'}]"
+        try:
+            with compat.enable_x64(x64):
+                closed = case.trace()
+        except Exception as e:  # noqa: BLE001 — any trace error is a finding
+            out.append(Violation(
+                "kernel-no-int64", leg,
+                f"abstract trace failed under this x64 setting: {e}"))
+            continue
+        out.extend(check_jaxpr(closed, where=leg,
+                               out_dtypes=case.out_dtypes))
+    return out
+
+
+def run(widths: Iterable[int] | None = None,
+        cases: Sequence[KernelCase] | None = None) -> list[Violation]:
+    """Jaxpr-lint every registered kernel case (or the given ones)."""
+    if cases is None:
+        cases = iter_cases(tuple(widths) if widths is not None else None)
+    out: list[Violation] = []
+    for case in cases:
+        out.extend(check_case(case))
+    return out

@@ -1,0 +1,214 @@
+"""Engine 1 core: symbolic worst-case magnitude propagation (Eq. 8).
+
+`checked_schedule` guards kernel entry with the coarse bound
+max T(j) + 3 <= 31 — a spot check on the schedule's plateau. This
+module *proves* the property it stands for: an interval-arithmetic walk
+of the exact int32 recurrence in kernels/online_mul/kernel.py
+(mul_digit_loop), mirroring it operation for operation — the arriving-
+digit register writes, the SELECTOR mux term, the arithmetic-shift
+truncations (whose toward--inf rounding can GROW a negative magnitude
+by 2^drop - 1: that slack is modeled, not ignored), the V = 2W + append
+update, and the selection-cased residual after the z_j * 2^S
+subtraction — propagating the worst-case magnitude of every
+architectural quantity across all n + delta steps of the Fig. 7
+schedule. The prover is strictly finer than the runtime guard, so
+everything `fits_int32` accepts must come out proven here (one
+direction; the prover also rejects configs the guard rejects, e.g. the
+untruncated n = 32 schedule whose S = 35 puts the first live register
+write at 2^34).
+
+The online adder tree needs no interval walk: its digits provably never
+leave {-2..2}, shown by exhaustive enumeration of the 2-digit-window
+recurrence over all (e_k, e_{k+1}, e_{k+2}) triples — the shared middle
+digit is what makes w_k = +-1 with t_{k+1} of the same sign impossible.
+What k_tile actually constrains is the *stream length* into the exact
+decode, checked against the per-width window for every k_tile in the
+autotuner's legal range.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Iterable
+
+from repro.core.precision import OnlinePrecision
+from repro.kernels.common import decode_policy, fits_int32
+from repro.kernels.online_dot.ref import tree_levels
+from repro.kernels.online_dot.tuning import decode_window, max_k_tile
+from repro.kernels.online_mul.ref import schedule_arrays
+
+from .contracts import Violation
+
+__all__ = ["prove_schedule", "adder_tree_digit_bound", "check_schedule",
+           "check_decode_windows", "run"]
+
+INT32_MAX = 2**31 - 1
+
+
+_G_ZERO = 62   # granule sentinel for an exactly-zero quantity
+
+
+def _ival(mag: int, granule: int) -> tuple[int, int]:
+    """Interval element: value v satisfies |v| <= mag AND v is a
+    multiple of 2^granule. Tracking the granule is what keeps the walk
+    tight: floor_at is *exact* on values already aligned to its drop
+    (the common case — register updates add aligned weights), so slack
+    only enters where the real datapath truncates real bits."""
+    return (mag, granule if mag else _G_ZERO)
+
+
+def _add(a, b):
+    return _ival(a[0] + b[0], min(a[1], b[1]))
+
+
+def _shr(a, k: int):
+    """Arithmetic shift right by k (floor): exact when aligned, else
+    the floor of a negative value rounds away from zero by < 1."""
+    m, g = a
+    if g >= k:
+        return _ival(m >> k, g - k)
+    return _ival(-((-m) >> k), 0)   # ceil(m / 2^k)
+
+
+def _floor_at(a, drop: int):
+    """The kernel's floor_at: truncate below 2^drop toward -inf. Exact
+    on aligned values; otherwise the magnitude bound rounds up to the
+    next multiple of 2^drop (v = -m floors to -ceil(m/2^drop)*2^drop)."""
+    m, g = a
+    if drop <= 0 or g >= drop:
+        return a
+    return _ival(-((-m) >> drop) << drop, drop)
+
+
+def prove_schedule(cfg: OnlinePrecision) -> tuple[int, str]:
+    """Worst-case bit width any architectural quantity of the int32
+    digit recurrence reaches under `cfg`'s T(j) schedule.
+
+    Returns (bits, detail): bits is the width needed (<= 31 means every
+    intermediate provably fits int32, sign bit excluded); detail names
+    the widest quantity and the step it peaks at. The walk is a sound
+    over-approximation: digits range over their full {-1,0,1} domain
+    independently and the z_j selection is a case union, so any real
+    digit pattern's trajectory lies inside the tracked intervals.
+    """
+    sched = [int(v) for v in schedule_arrays(cfg)]
+    S = max(sched)
+    n, delta, t = cfg.n, cfg.delta, cfg.t
+    X = Y = W = _ival(0, _G_ZERO)
+    peak, peak_detail = 0, "all-zero datapath"
+
+    def note(a, what: str, step: int):
+        nonlocal peak, peak_detail
+        if a[0] > peak:
+            peak = a[0]
+            peak_detail = f"{what} at step {step} (j={step - delta})"
+
+    for s in range(n + delta):
+        j = s - delta
+        T = sched[s]
+        q = s + 1                       # arriving digit position
+        dig = 1 if 1 <= q <= n else 0   # |x_q|, |y_q| <= 1 while in range
+        drop = max(S - T, 0)
+        live = q <= min(T, S) and dig
+        wq = _ival(1 << max(S - q, 0), max(S - q, 0)) if live else _ival(0, 0)
+        note(wq, "digit weight wq", s)
+        Yf = _add(Y, wq)                # Y + yn*wq, |yn| <= 1
+        note(Yf, "Y register after append", s)
+        term = _add(X, Yf)              # X*yn + Yf*xn, digit mul <= identity
+        note(term, "SELECTOR mux term", s)
+        append = _floor_at(_shr(term, delta), drop)
+        Xf = _add(X, wq)
+        note(Xf, "X register after append", s)
+        X = _floor_at(Xf, drop)
+        Y = _floor_at(Yf, drop)
+        V = _add(_ival(2 * W[0], W[1] + 1), append)
+        note(V, "residual V = 2W + append", s)
+        if j >= 0:
+            note(_ival(1 << S, S), "output digit weight 2^S", s)
+            # selection cases on vq = V >> (S - t): z_j in {-1,0,1}.
+            # z_j = 0 only while |V| < thr; the +-1 subtraction leaves
+            # |V - 2^S| <= max(V_max - 2^S, 2^S - thr) when reachable.
+            thr = 2 << (S - t)
+            m = min(V[0], thr)
+            if V[0] >= thr:
+                m = max(m, V[0] - (1 << S), (1 << S) - thr)
+            w_pre = _ival(m, min(V[1], S))
+        else:
+            w_pre = V
+        W = _floor_at(w_pre, drop)
+        note(W, "residual W after truncation", s)
+    return peak.bit_length(), f"{peak_detail}: |.| <= {peak} " \
+                              f"({peak.bit_length()} bits; S={S})"
+
+
+def adder_tree_digit_bound() -> int:
+    """Max |output digit| of the online adder-tree recurrence, proven by
+    exhaustive enumeration of its 2-digit window over every consistent
+    (e_k, e_{k+1}, e_{k+2}) triple with e in [-2, 2] (pairwise sums of
+    SD digits). Must be 1: then level outputs are again SD digits, the
+    per-level bound holds inductively down the whole tree, and no tree
+    value ever stresses int32."""
+    def transfer(e, en):
+        if e >= 2 or (e == 1 and en >= 0):
+            return 1
+        if e <= -2 or (e == -1 and en < 0):
+            return -1
+        return 0
+
+    worst = 0
+    rng = range(-2, 3)
+    for ek, e1, e2 in itertools.product(rng, rng, rng):
+        w_k = ek - 2 * transfer(ek, e1)
+        out = w_k + transfer(e1, e2)
+        worst = max(worst, abs(out))
+    return worst
+
+
+def check_schedule(cfg: OnlinePrecision, *, where: str) -> list[Violation]:
+    """int32-overflow contract for one precision config."""
+    bits, detail = prove_schedule(cfg)
+    if bits <= 31:
+        return []
+    extra = ("" if not fits_int32(cfg) else
+             " — and the runtime fits_int32 guard WRONGLY accepts it")
+    return [Violation("int32-overflow", where,
+                      f"recurrence needs {bits} bits: {detail}{extra}")]
+
+
+def check_decode_windows(n_bits: int, *, where: str) -> list[Violation]:
+    """decode-window contract over the autotuner's legal k_tile range
+    (every power of two up to max_k_tile), plus the tree-digit lemma
+    that makes stream length the only k_tile-dependent hazard."""
+    out: list[Violation] = []
+    bound = adder_tree_digit_bound()
+    if bound > 1:
+        out.append(Violation(
+            "int32-overflow", where,
+            f"adder-tree output digits reach |{bound}| > 1: the "
+            "per-level SD-digit induction is broken"))
+    kt, window = 1, decode_window(n_bits)
+    while kt <= max_k_tile(n_bits):
+        m = n_bits + 2 * tree_levels(kt)
+        try:
+            decode_policy(m)
+            legal = m <= window
+        except ValueError:
+            legal = False
+        if not legal:
+            out.append(Violation(
+                "decode-window", f"{where} k_tile={kt}",
+                f"stream length {m} = {n_bits} + 2*ceil(log2 {kt}) "
+                f"exceeds this width's exact window of {window} digits"))
+        kt *= 2
+    return out
+
+
+def run(widths: Iterable[int] | None = None) -> list[Violation]:
+    """Prove the overflow/decode contracts for every registered width."""
+    from repro.configs.olm_array import MATMUL_MODES
+    widths = tuple(sorted(widths if widths is not None else MATMUL_MODES))
+    out: list[Violation] = []
+    for n in widths:
+        cfg = OnlinePrecision(n=n)
+        out.extend(check_schedule(cfg, where=f"schedule/olm{n}"))
+        out.extend(check_decode_windows(n, where=f"decode/olm{n}"))
+    return out

@@ -1,0 +1,169 @@
+"""Registered-kernel enumeration for the olmlint jaxpr engine.
+
+One KernelCase per (pure kernel body, width, representative tiling
+bucket). The bodies are the exact functions the shipped pallas_call
+kernels execute — tile_update / fused_tile_update (both matmul paths),
+lane_tree (the batched dot kernel), mul_digit_loop (the online
+multiplier), plane_accumulate (tpmm) — traced abstractly with
+jax.make_jaxpr on ShapeDtypeStructs, so enumerating all of them costs
+no FLOPs and no device memory.
+
+Tiling buckets per width: the static configs/olm_array.MATMUL_TILING
+default, the autotuner's GEMV heuristic (M=1 decode), and its large
+training-GEMM heuristic — the three shapes the tuner actually serves —
+deduplicated per width. New kernel families (e.g. the truncated
+olm{n}t{p} modes on the ROADMAP) register here to come under the same
+static contracts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.olm_array import MATMUL_MODES, MATMUL_TILING
+from repro.core.precision import OnlinePrecision
+from repro.kernels.common import checked_schedule, decode_policy
+from repro.kernels.online_dot.kernel import lane_tree
+from repro.kernels.online_dot.matmul_kernel import (fused_tile_update,
+                                                    tile_update)
+from repro.kernels.online_dot.ref import tree_levels
+from repro.kernels.online_dot.tuning import heuristic_tiling, pinned_k_tile
+from repro.kernels.online_mul.kernel import mul_digit_loop
+from repro.kernels.tpmm.kernel import plane_accumulate
+from repro.kernels.tpmm.ref import kept_levels
+
+__all__ = ["KernelCase", "representative_tilings", "iter_cases"]
+
+# Representative lane-count for the standalone (non-matmul) kernels: a
+# small block keeps the traced jaxprs small without changing which
+# primitives appear (block size is a shape, not a code path).
+_BLOCK_B = 8
+_DOT_K = 16
+# tpmm traces at its MXU-aligned default blocks.
+_TPMM_BLOCK = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelCase:
+    """One abstract trace target: `trace()` returns the closed jaxpr of
+    the kernel body under the ambient x64 setting; `out_dtypes` is what
+    the body's outputs must carry (the kernel-accum-dtype contract);
+    `tiling` (k_tile, block_m, block_n) is set for matmul cases so the
+    VMEM engine can reuse the same enumeration."""
+
+    name: str
+    n_bits: int
+    trace: Callable[[], jax.core.ClosedJaxpr]
+    out_dtypes: Tuple[str, ...]
+    tiling: Tuple[int, int, int] | None = None
+
+
+def representative_tilings(n_bits: int) -> dict:
+    """label -> (k_tile, block_m, block_n): the tiling buckets the
+    matmul kernels actually run under for this width — the static
+    default plus the autotuner's GEMV and training-GEMM heuristics —
+    deduplicated (wide modes often collapse buckets)."""
+    kt_static = pinned_k_tile(MATMUL_TILING["k_tile"], n_bits)
+    buckets = {
+        "static": (kt_static, MATMUL_TILING["block_m"],
+                   MATMUL_TILING["block_n"]),
+    }
+    for label, (M, N, K) in (("gemv", (1, 4096, 4096)),
+                             ("train", (8192, 4096, 4096))):
+        t = heuristic_tiling(M, N, K, n_bits)
+        tiling = (t.k_tile, t.block_m, t.block_n)
+        if tiling not in buckets.values():
+            buckets[label] = tiling
+    return buckets
+
+
+def _sched_aval(cfg: OnlinePrecision):
+    return jax.ShapeDtypeStruct((cfg.n + cfg.delta,), jnp.int32)
+
+
+def _matmul_statics(n_bits: int, kt: int) -> dict:
+    """The static kwargs both matmul tile bodies take, exactly as the
+    pallas_call front-end computes them."""
+    cfg = OnlinePrecision(n=n_bits)
+    _, S = checked_schedule(cfg)
+    L = tree_levels(kt)
+    return dict(n=n_bits, delta=cfg.delta, t=cfg.t, S=S, L=L,
+                wide=decode_policy(n_bits + 2 * L) == "wide")
+
+
+def iter_cases(widths: Tuple[int, ...] | None = None) -> list[KernelCase]:
+    """Every registered Pallas kernel body x width x tiling bucket."""
+    widths = tuple(sorted(widths if widths is not None else MATMUL_MODES))
+    cases: list[KernelCase] = []
+    i32 = jnp.int32
+    f32 = jnp.float32
+    for n in widths:
+        cfg = OnlinePrecision(n=n)
+        sched = _sched_aval(cfg)
+        mul_kw = dict(n=n, delta=cfg.delta, t=cfg.t,
+                      S=checked_schedule(cfg)[1])
+
+        # online_mul: the batched digit recurrence (mul_digit_loop).
+        dig2 = jax.ShapeDtypeStruct((_BLOCK_B, n), i32)
+        cases.append(KernelCase(
+            name=f"mul_digit_loop/olm{n}", n_bits=n,
+            trace=functools.partial(
+                jax.make_jaxpr(functools.partial(mul_digit_loop, **mul_kw)),
+                dig2, dig2, sched),
+            out_dtypes=("int32",)))
+
+        # online_dot: K-lane multiplier + online adder tree (lane_tree).
+        dig3 = jax.ShapeDtypeStruct((_BLOCK_B, _DOT_K, n), i32)
+        cases.append(KernelCase(
+            name=f"lane_tree/olm{n}/k{_DOT_K}", n_bits=n,
+            trace=functools.partial(
+                jax.make_jaxpr(functools.partial(lane_tree, **mul_kw)),
+                dig3, dig3, sched),
+            out_dtypes=("int32",)))
+
+        # both matmul paths, per representative tiling bucket.
+        for label, (kt, bm, bn) in representative_tilings(n).items():
+            statics = _matmul_statics(n, kt)
+            xd = jax.ShapeDtypeStruct((bm, kt, n), i32)
+            wd = jax.ShapeDtypeStruct((bn, kt, n), i32)
+            sx = jax.ShapeDtypeStruct((bm, 1), f32)
+            sw = jax.ShapeDtypeStruct((bn, 1), f32)
+            cases.append(KernelCase(
+                name=f"matmul-host/olm{n}/{label}-k{kt}m{bm}n{bn}",
+                n_bits=n,
+                trace=functools.partial(
+                    jax.make_jaxpr(functools.partial(tile_update, **statics)),
+                    xd, sx, wd, sw, sched),
+                out_dtypes=("float32",), tiling=(kt, bm, bn)))
+            xt = jax.ShapeDtypeStruct((bm, kt), f32)
+            wt = jax.ShapeDtypeStruct((bn, kt), f32)
+            cases.append(KernelCase(
+                name=f"matmul-fused/olm{n}/{label}-k{kt}m{bm}n{bn}",
+                n_bits=n,
+                trace=functools.partial(
+                    jax.make_jaxpr(
+                        functools.partial(fused_tile_update, **statics)),
+                    xt, wt, sched),
+                out_dtypes=("float32",), tiling=(kt, bm, bn)))
+
+        # tpmm: digit-plane matmul body at its supported widths (planes
+        # are 4-bit; D = n/4 must be integral and <= 8).
+        if n % 4 == 0 and n // 4 <= 8:
+            D = n // 4
+            lmax = kept_levels(n, 4)
+            a = jax.ShapeDtypeStruct((D, _TPMM_BLOCK, _TPMM_BLOCK), jnp.int8)
+            b = jax.ShapeDtypeStruct((D, _TPMM_BLOCK, _TPMM_BLOCK), jnp.int8)
+            acc = jax.ShapeDtypeStruct((_TPMM_BLOCK, _TPMM_BLOCK), f32)
+            cases.append(KernelCase(
+                name=f"tpmm/plane_accumulate/n{n}", n_bits=n,
+                trace=functools.partial(
+                    jax.make_jaxpr(functools.partial(
+                        plane_accumulate, n_planes=D, plane_bits=4,
+                        lmax=lmax)),
+                    a, b, acc),
+                out_dtypes=("float32",)))
+    return cases

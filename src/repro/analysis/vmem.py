@@ -1,0 +1,159 @@
+"""Engine 1 core: static VMEM footprint model vs the width-aware budget.
+
+The footprint of one grid step is computed from the SAME block-shape
+tables the pallas_calls build their BlockSpecs from (each kernel
+module's *_block_shapes function — one source, so kernel and analyzer
+cannot disagree), plus the in-kernel lane working set the matmul tile
+bodies materialize on top of their blocks: the broadcast digit grids
+(2 x (block_m*block_n, k_tile, n) int32), the product streams, and the
+dot stream — the quantities `tuning.lane_budget` exists to bound.
+
+Two checks per matmul case:
+
+  vmem-budget (lane)  block_m * block_n * k_tile <= lane_budget(n_bits)
+                      — the exact inequality heuristic_tiling and
+                      _candidates spend, imported from tuning (the ONE
+                      budget function; Issue 6 satellite 1).
+  vmem-budget (bytes) blocks + lane working set <= VMEM_BYTES (~16 MB).
+
+The committed tuning cache (results/tuning.json) is validated entry by
+entry against the same two checks, so a stale or hand-edited cache that
+would steer the kernel over budget fails lint before it fails on a TPU.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Iterable
+
+import numpy as np
+
+from repro.kernels.online_dot.kernel import dot_block_shapes
+from repro.kernels.online_dot.matmul_kernel import (fused_matmul_block_shapes,
+                                                    matmul_block_shapes)
+from repro.kernels.online_dot.ref import tree_levels
+from repro.kernels.online_dot.tuning import (DEFAULT_CACHE_PATH, lane_budget,
+                                             max_k_tile)
+from repro.kernels.online_mul.kernel import mul_block_shapes
+from repro.kernels.tpmm.kernel import tpmm_block_shapes
+
+from .contracts import Violation
+from .registry import representative_tilings
+
+__all__ = ["VMEM_BYTES", "block_bytes", "matmul_working_set_bytes",
+           "check_matmul_tiling", "check_tuning_cache", "run"]
+
+# Per-core VMEM capacity the footprint model checks against
+# (TPUv4/v5-class cores carry 16 MB of VMEM).
+VMEM_BYTES = 16 * 2**20
+
+_DELTA = 3   # OnlinePrecision default online delay
+
+
+def block_bytes(blocks: dict) -> int:
+    """Total bytes of one grid step's VMEM-resident blocks, from a
+    *_block_shapes table (name -> (shape, dtype))."""
+    return sum(int(np.prod(shape)) * np.dtype(dtype).itemsize
+               for shape, dtype in blocks.values())
+
+
+def matmul_working_set_bytes(n_bits: int, kt: int, bm: int, bn: int) -> int:
+    """Bytes the matmul tile body materializes beyond its input blocks:
+    the two broadcast digit grids fanned out to the (bm*bn) lane batch,
+    the per-lane product streams, and the decoded dot stream — int32
+    everywhere (mirrors tile_update -> lane_tree)."""
+    lanes = bm * bn
+    m_out = n_bits + 2 * tree_levels(kt)
+    grids = 2 * lanes * kt * n_bits          # xg, wg broadcast grids
+    prods = lanes * kt * n_bits              # mul_digit_loop output
+    stream = lanes * m_out                   # adder-tree dot stream
+    return 4 * (grids + prods + stream)
+
+
+def check_matmul_tiling(n_bits: int, kt: int, bm: int, bn: int,
+                        *, where: str) -> list[Violation]:
+    """Both vmem-budget checks for one matmul tiling at one width."""
+    out: list[Violation] = []
+    lanes, budget = bm * bn * kt, lane_budget(n_bits)
+    if lanes > budget:
+        out.append(Violation(
+            "vmem-budget", where,
+            f"lane batch block_m*block_n*k_tile = {bm}*{bn}*{kt} = "
+            f"{lanes} exceeds lane_budget({n_bits}) = {budget}"))
+    if kt > max_k_tile(n_bits):
+        out.append(Violation(
+            "decode-window", where,
+            f"k_tile {kt} exceeds max_k_tile({n_bits}) = "
+            f"{max_k_tile(n_bits)} — the stream would leave the exact "
+            "decode window"))
+    for label, blocks in (
+            ("host", matmul_block_shapes(n=n_bits, delta=_DELTA, kt=kt,
+                                         bm=bm, bn=bn)),
+            ("fused", fused_matmul_block_shapes(n=n_bits, delta=_DELTA,
+                                                kt=kt, bm=bm, bn=bn))):
+        total = (block_bytes(blocks)
+                 + matmul_working_set_bytes(n_bits, kt, bm, bn))
+        if total > VMEM_BYTES:
+            out.append(Violation(
+                "vmem-budget", f"{where} [{label} path]",
+                f"static footprint {total} B (blocks "
+                f"{block_bytes(blocks)} B + lane working set) exceeds "
+                f"VMEM capacity {VMEM_BYTES} B"))
+    return out
+
+
+def _check_simple_kernels(n_bits: int) -> list[Violation]:
+    """Footprint-only checks for the non-matmul kernel layouts at their
+    shipped default block sizes."""
+    out: list[Violation] = []
+    fixed = {
+        f"online_mul/olm{n_bits}": mul_block_shapes(
+            n=n_bits, delta=_DELTA, block_b=1024),
+        f"online_dot/olm{n_bits}": dot_block_shapes(
+            n=n_bits, delta=_DELTA, K=16, block_b=8),
+    }
+    if n_bits % 4 == 0 and n_bits // 4 <= 8:
+        fixed[f"tpmm/n{n_bits}"] = tpmm_block_shapes(
+            n_planes=n_bits // 4, block_m=128, block_n=128, block_k=128)
+    for where, blocks in fixed.items():
+        total = block_bytes(blocks)
+        if total > VMEM_BYTES:
+            out.append(Violation(
+                "vmem-budget", where,
+                f"static block footprint {total} B exceeds VMEM "
+                f"capacity {VMEM_BYTES} B"))
+    return out
+
+
+def check_tuning_cache(path: str | None = None) -> list[Violation]:
+    """Validate every committed tuning-cache entry against the same
+    budget the analyzer applies to the registered tilings."""
+    path = path or DEFAULT_CACHE_PATH
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        entries = json.load(f).get("entries", {})
+    out: list[Violation] = []
+    for key in sorted(entries):
+        e = entries[key]
+        out.extend(check_matmul_tiling(
+            int(e["n_bits"]), int(e["k_tile"]), int(e["block_m"]),
+            int(e["block_n"]),
+            where=f"tuning-cache {os.path.basename(path)}::{key}"))
+    return out
+
+
+def run(widths: Iterable[int] | None = None,
+        tuning_path: str | None = None) -> list[Violation]:
+    """VMEM-lint every registered width's representative tilings, the
+    fixed-layout kernels, and the committed tuning cache."""
+    from repro.configs.olm_array import MATMUL_MODES
+    widths = tuple(sorted(widths if widths is not None else MATMUL_MODES))
+    out: list[Violation] = []
+    for n in widths:
+        out.extend(_check_simple_kernels(n))
+        for label, (kt, bm, bn) in representative_tilings(n).items():
+            out.extend(check_matmul_tiling(
+                n, kt, bm, bn, where=f"matmul/olm{n}/{label}"))
+    out.extend(check_tuning_cache(tuning_path))
+    return out

@@ -332,8 +332,11 @@ def decode_stream_wide_inkernel(digits: jax.Array) -> jax.Array:
     pos = jax.lax.broadcasted_iota(jnp.int32, (1, m), 1)
     w = jax.lax.bitcast_convert_type((126 - pos) << 23, jnp.float32)
     terms = digits.astype(jnp.float32) * w
-    hi = jnp.sum(jnp.where(pos < DECODE_WINDOW_F32, terms, 0.0), axis=-1)
-    lo = jnp.sum(jnp.where(pos < DECODE_WINDOW_F32, 0.0, terms), axis=-1)
+    # float32-typed zero: a bare 0.0 traces as a weak float64 aval under
+    # x64, tripping the kernel-no-int64 (no 64-bit dtypes) contract.
+    f0 = jnp.float32(0.0)
+    hi = jnp.sum(jnp.where(pos < DECODE_WINDOW_F32, terms, f0), axis=-1)
+    lo = jnp.sum(jnp.where(pos < DECODE_WINDOW_F32, f0, terms), axis=-1)
     return hi + lo
 
 

@@ -33,7 +33,23 @@ from repro.kernels.common import checked_schedule
 from repro.kernels.online_mul.kernel import mul_digit_loop
 from .ref import adder_tree, tree_levels
 
-__all__ = ["online_dot_pallas", "lane_tree"]
+__all__ = ["online_dot_pallas", "lane_tree", "dot_block_shapes"]
+
+
+def dot_block_shapes(*, n: int, delta: int, K: int, block_b: int) -> dict:
+    """Per-grid-step VMEM block table: name -> (block shape, dtype).
+
+    Single source for the online_dot_pallas layout — the pallas_call
+    below builds its BlockSpecs from it and the olmlint VMEM footprint
+    model (repro.analysis.vmem) sums it.
+    """
+    m_out = n + 2 * tree_levels(K)
+    return {
+        "sched": ((n + delta,), jnp.int32),
+        "x_digits": ((block_b, K, n), jnp.int32),
+        "y_digits": ((block_b, K, n), jnp.int32),
+        "z_stream": ((block_b, m_out), jnp.int32),
+    }
 
 
 def lane_tree(xd, yd, sched, *, n, delta, t, S):
@@ -99,15 +115,16 @@ def online_dot_pallas(
     sched = jnp.asarray(sched_np)
     grid = (B // block_b,)
     kern = functools.partial(_kernel, n=n, delta=delta, t=t, S=S)
+    blocks = dot_block_shapes(n=n, delta=delta, K=K, block_b=block_b)
     return pl.pallas_call(
         kern,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((n + delta,), lambda i: (0,)),          # schedule
-            pl.BlockSpec((block_b, K, n), lambda i: (i, 0, 0)),  # x digits
-            pl.BlockSpec((block_b, K, n), lambda i: (i, 0, 0)),  # y digits
+            pl.BlockSpec(blocks["sched"][0], lambda i: (0,)),    # schedule
+            pl.BlockSpec(blocks["x_digits"][0], lambda i: (i, 0, 0)),
+            pl.BlockSpec(blocks["y_digits"][0], lambda i: (i, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((block_b, m_out), lambda i: (i, 0)),
+        out_specs=pl.BlockSpec(blocks["z_stream"][0], lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((B, m_out), jnp.int32),
         interpret=interpret,
     )(sched, x_digits.astype(jnp.int32), y_digits.astype(jnp.int32))

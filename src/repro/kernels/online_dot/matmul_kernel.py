@@ -76,20 +76,26 @@ from repro.kernels.common import (checked_schedule, decode_policy,
 from .kernel import lane_tree
 from .ref import tree_levels
 
-__all__ = ["olm_matmul_pallas", "olm_matmul_fused_pallas"]
+__all__ = ["olm_matmul_pallas", "olm_matmul_fused_pallas",
+           "tile_update", "fused_tile_update",
+           "matmul_block_shapes", "fused_matmul_block_shapes"]
 
 
-def _accumulate_tile(xd, sx, wd, sw, sched, out_ref,
-                     *, n, delta, t, S, L, wide):
+def tile_update(xd, sx, wd, sw, sched, *, n, delta, t, S, L, wide):
     """Shared tile body: fan the per-row / per-column digit grids out to
-    the (bm * bn) PE lane batch inside VMEM, run lane_tree, decode, fold
-    the exact 2^L tree scale and the pow2 quantization scales, and
-    accumulate into the resident float32 output block. Both operand
-    formats (pre-quantized grids, raw float tiles) end up here, so their
-    arithmetic is identical instruction for instruction. `wide` (static,
-    from kernels/common.decode_policy on the n + 2L stream length)
-    selects the two-limb wide stream decode for the n = 24/32 modes —
-    bit-identical to the host oracle's int64-or-two-limb decode."""
+    the (bm * bn) PE lane batch inside VMEM, run lane_tree, decode, and
+    fold the exact 2^L tree scale and the pow2 quantization scales.
+    Returns the (bm, bn) float32 increment for the resident output block.
+    Both operand formats (pre-quantized grids, raw float tiles) end up
+    here, so their arithmetic is identical instruction for instruction.
+    `wide` (static, from kernels/common.decode_policy on the n + 2L
+    stream length) selects the two-limb wide stream decode for the
+    n = 24/32 modes — bit-identical to the host oracle's
+    int64-or-two-limb decode.
+
+    Pure jnp function (no Refs): olmlint's jaxpr contract checker traces
+    it in isolation per (mode, tiling) and the kernels below call it.
+    """
     bm, kt, _ = xd.shape
     bn = wd.shape[0]
     # Operand reuse happens here: each row/column grid was loaded (or,
@@ -101,7 +107,20 @@ def _accumulate_tile(xd, sx, wd, sw, sched, out_ref,
     decode = decode_stream_wide_inkernel if wide else decode_stream_inkernel
     val = decode(z) * jnp.float32(1 << L)                   # exact 2^L fold
     scale = sx.reshape(bm, 1) * sw.reshape(1, bn)           # (bm, bn), pow2
-    out_ref[...] += val.reshape(bm, bn) * scale
+    return val.reshape(bm, bn) * scale
+
+
+def fused_tile_update(xt, wt, sched, *, n, delta, t, S, L, wide):
+    """Quantize-in-kernel tile body: signed-digit recoding prologue on
+    the raw float32 tiles, then the same tile_update datapath. Returns
+    the (bm, bn) float32 increment. Pure jnp function for the same
+    reason as tile_update."""
+    # The prologue IS the host quantizer (same function, same backend):
+    # digits and pow2 scales are bit-identical to sd_quantize on host.
+    xd, sx = sd_quantize_inkernel(xt, n=n)   # (bm, kt, n), (bm, 1)
+    wd, sw = sd_quantize_inkernel(wt, n=n)
+    return tile_update(xd, sx, wd, sw, sched,
+                       n=n, delta=delta, t=t, S=S, L=L, wide=wide)
 
 
 def _kernel(sched_ref, xd_ref, sx_ref, wd_ref, sw_ref, out_ref,
@@ -115,8 +134,9 @@ def _kernel(sched_ref, xd_ref, sx_ref, wd_ref, sw_ref, out_ref,
 
     xd = xd_ref[...][:, 0]     # (block_m, kt, n) int32 digits in {-1,0,1}
     wd = wd_ref[...][:, 0]     # (block_n, kt, n)
-    _accumulate_tile(xd, sx_ref[...], wd, sw_ref[...], sched_ref[...],
-                     out_ref, n=n, delta=delta, t=t, S=S, L=L, wide=wide)
+    out_ref[...] += tile_update(xd, sx_ref[...], wd, sw_ref[...],
+                                sched_ref[...], n=n, delta=delta, t=t,
+                                S=S, L=L, wide=wide)
 
 
 def _fused_kernel(sched_ref, x_ref, w_ref, out_ref,
@@ -132,12 +152,40 @@ def _fused_kernel(sched_ref, x_ref, w_ref, out_ref,
 
     xt = x_ref[...][:, 0]      # (block_m, kt) raw float32 row tile
     wt = w_ref[...][:, 0]      # (block_n, kt) raw float32 column tile
-    # The prologue IS the host quantizer (same function, same backend):
-    # digits and pow2 scales are bit-identical to sd_quantize on host.
-    xd, sx = sd_quantize_inkernel(xt, n=n)   # (bm, kt, n), (bm, 1)
-    wd, sw = sd_quantize_inkernel(wt, n=n)
-    _accumulate_tile(xd, sx, wd, sw, sched_ref[...], out_ref,
-                     n=n, delta=delta, t=t, S=S, L=L, wide=wide)
+    out_ref[...] += fused_tile_update(xt, wt, sched_ref[...],
+                                      n=n, delta=delta, t=t, S=S, L=L,
+                                      wide=wide)
+
+
+def matmul_block_shapes(*, n: int, delta: int, kt: int,
+                        bm: int, bn: int) -> dict:
+    """Per-grid-step VMEM block table for the host-quantize matmul path:
+    name -> (block shape, dtype). Single source for the layout — the
+    pallas_call below builds its BlockSpecs from it and the olmlint VMEM
+    footprint model (repro.analysis.vmem) sums it against the
+    width-aware lane budget, so kernel and analyzer cannot disagree."""
+    return {
+        "sched": ((n + delta,), jnp.int32),
+        "x_digits": ((bm, 1, kt, n), jnp.int32),
+        "x_scales": ((bm, 1), jnp.float32),
+        "w_digits": ((bn, 1, kt, n), jnp.int32),
+        "w_scales": ((bn, 1), jnp.float32),
+        "out": ((bm, bn), jnp.float32),
+    }
+
+
+def fused_matmul_block_shapes(*, n: int, delta: int, kt: int,
+                              bm: int, bn: int) -> dict:
+    """Per-grid-step VMEM block table for the quantize-in-kernel path:
+    raw float tiles cross HBM, n x fewer elements than the digit grids
+    (plus the in-VMEM digit grids the prologue materializes, which the
+    analyzer accounts separately as lane-batch working set)."""
+    return {
+        "sched": ((n + delta,), jnp.int32),
+        "x_tiles": ((bm, 1, kt), jnp.float32),
+        "w_tiles": ((bn, 1, kt), jnp.float32),
+        "out": ((bm, bn), jnp.float32),
+    }
 
 
 @functools.partial(
@@ -193,19 +241,20 @@ def olm_matmul_pallas(
     grid = (Mp // bm, Np // bn, T)   # K innermost: accumulator stays live
     kern = functools.partial(_kernel, n=n, delta=delta, t=t, S=S, L=L,
                              wide=wide)
+    blocks = matmul_block_shapes(n=n, delta=delta, kt=kt, bm=bm, bn=bn)
     out = pl.pallas_call(
         kern,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((n + delta,), lambda i, j, k: (0,)),     # schedule
-            pl.BlockSpec((bm, 1, kt, n),
+            pl.BlockSpec(blocks["sched"][0], lambda i, j, k: (0,)),
+            pl.BlockSpec(blocks["x_digits"][0],
                          lambda i, j, k: (i, k, 0, 0)),  # x rows: j-blind
-            pl.BlockSpec((bm, 1), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bn, 1, kt, n),
+            pl.BlockSpec(blocks["x_scales"][0], lambda i, j, k: (i, k)),
+            pl.BlockSpec(blocks["w_digits"][0],
                          lambda i, j, k: (j, k, 0, 0)),  # w cols: i-blind
-            pl.BlockSpec((bn, 1), lambda i, j, k: (j, k)),
+            pl.BlockSpec(blocks["w_scales"][0], lambda i, j, k: (j, k)),
         ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_specs=pl.BlockSpec(blocks["out"][0], lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
         interpret=interpret,
     )(jnp.asarray(sched_np), xd, sx, wd, sw)
@@ -263,17 +312,18 @@ def olm_matmul_fused_pallas(
     grid = (Mp // bm, Np // bn, T)   # K innermost: accumulator stays live
     kern = functools.partial(_fused_kernel, n=n, delta=delta, t=t, S=S, L=L,
                              wide=wide)
+    blocks = fused_matmul_block_shapes(n=n, delta=delta, kt=kt, bm=bm, bn=bn)
     out = pl.pallas_call(
         kern,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((n + delta,), lambda i, j, k: (0,)),     # schedule
-            pl.BlockSpec((bm, 1, kt),
+            pl.BlockSpec(blocks["sched"][0], lambda i, j, k: (0,)),
+            pl.BlockSpec(blocks["x_tiles"][0],
                          lambda i, j, k: (i, k, 0)),   # x float rows: j-blind
-            pl.BlockSpec((bn, 1, kt),
+            pl.BlockSpec(blocks["w_tiles"][0],
                          lambda i, j, k: (j, k, 0)),   # w float cols: i-blind
         ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_specs=pl.BlockSpec(blocks["out"][0], lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
         interpret=interpret,
     )(jnp.asarray(sched_np), xt, wt)

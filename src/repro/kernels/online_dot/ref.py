@@ -83,10 +83,14 @@ def adder_tree(streams: jax.Array) -> tuple[jax.Array, int]:
              pairs[:, :, 0, :] + pairs[:, :, 1, :],
              jnp.zeros((B, K // 2, 2), dt)], axis=-1)
         ek, en = e[..., :-1], e[..., 1:]
+        # dt-typed literals: bare Python ints in where branches trace as
+        # weak int64 under x64 (kernel-no-int64 — lane_tree runs this
+        # loop inside the Pallas dot kernel body).
+        one, zero = jnp.asarray(1, dt), jnp.asarray(0, dt)
         t = jnp.where(
-            (ek >= 2) | ((ek == 1) & (en >= 0)), 1,
-            jnp.where((ek <= -2) | ((ek == -1) & (en < 0)), -1, 0),
-        ).astype(dt)
+            (ek >= 2) | ((ek == 1) & (en >= 0)), one,
+            jnp.where((ek <= -2) | ((ek == -1) & (en < 0)), -one, zero),
+        )
         w = ek - 2 * t
         out = w[..., :-1] + t[..., 1:]
         streams = jnp.concatenate(

@@ -56,14 +56,31 @@ from repro.kernels.common import DECODE_WINDOW_F32, DECODE_WINDOW_WIDE
 from .ref import tree_levels
 
 __all__ = ["Tiling", "TuningCache", "bucket", "bucket_key",
-           "decode_window", "max_k_tile", "pinned_k_tile",
+           "decode_window", "lane_budget", "max_k_tile", "pinned_k_tile",
            "heuristic_tiling", "get_tiling", "tune", "default_cache"]
 
 # In-kernel lane batch budget (block_m * block_n * k_tile): the fused
 # kernel materializes this many multiplier lanes in VMEM per grid step.
 # 2048 keeps the digit matrices ((lanes, kt, n) int32) comfortably
-# inside a ~16 MB VMEM at n = 16 while leaving room to grow blocks.
+# inside a ~16 MB VMEM at the reference width n = 16 while leaving room
+# to grow blocks. Width-aware consumers use `lane_budget(n_bits)`.
 LANE_BUDGET = 2048
+LANE_BUDGET_REF_BITS = 16
+
+
+def lane_budget(n_bits: int) -> int:
+    """Width-aware VMEM lane batch budget: the per-lane digit matrices
+    are (kt, n) int32, so VMEM cost per lane is linear in n_bits and the
+    lane count the same VMEM affords shrinks as 1/n_bits. Scaled off the
+    n = 16 reference (lane_budget(16) == LANE_BUDGET, the historical
+    width-blind constant) and floored to a power of two so the
+    heuristic's block splits stay power-of-two shaped.
+
+    This is the ONE budget function: `heuristic_tiling`/`_candidates`
+    spend it and the olmlint static analyzer's VMEM footprint check
+    (repro.analysis.vmem) enforces it, so tuner and lint can't disagree
+    about what fits."""
+    return _pow2_floor(max(1, (LANE_BUDGET * LANE_BUDGET_REF_BITS) // n_bits))
 
 
 def decode_window(n_bits: int) -> int:
@@ -143,15 +160,17 @@ def heuristic_tiling(M: int, N: int, K: int, n_bits: int) -> Tiling:
     clamped to K exactly like the kernel's own kt = min(k_tile, K)) —
     it sets the quantization slice width and adder-tree depth, so
     letting the tuner move it would change results; see the module
-    docstring. The LANE_BUDGET residual is then split between block_m
-    and block_n near-square, each capped at its output dim — so a GEMV
-    (M=1) spends the whole budget on block_n instead of wasting 7/8 of
-    an 8x8 tile on nonexistent rows.
+    docstring. The width-aware `lane_budget(n_bits)` residual is then
+    split between block_m and block_n near-square, each capped at its
+    output dim — so a GEMV (M=1) spends the whole budget on block_n
+    instead of wasting 7/8 of an 8x8 tile on nonexistent rows, and the
+    wide modes (n = 24/32, whose digit grids cost 1.5-2x the VMEM per
+    lane) get proportionally smaller blocks.
     """
     # pinned_k_tile keeps the decode-window guarantee structural even if
     # DEFAULT_K_TILE is ever raised past what a given n_bits allows
     kt = pinned_k_tile(K, n_bits)
-    per_out = max(1, LANE_BUDGET // kt)          # block_m * block_n budget
+    per_out = max(1, lane_budget(n_bits) // kt)  # block_m * block_n budget
     bm = min(_pow2_ceil(M), _pow2_floor(max(1, int(per_out ** 0.5))))
     bn = min(_pow2_ceil(N), max(1, per_out // bm))
     bm = min(_pow2_ceil(M), max(1, per_out // bn))   # regrow if N was small
@@ -260,7 +279,7 @@ def _candidates(M: int, N: int, K: int, n_bits: int) -> list[Tiling]:
                min(_pow2_ceil(M), base.block_m * 2)}:
         for bn in {base.block_n, max(1, base.block_n // 2),
                    min(_pow2_ceil(N), base.block_n * 2)}:
-            if bm * bn * kt <= LANE_BUDGET:
+            if bm * bn * kt <= lane_budget(n_bits):
                 cands.add(Tiling(kt, bm, bn))
     return sorted(cands, key=lambda t: (t.k_tile, t.block_m, t.block_n))
 

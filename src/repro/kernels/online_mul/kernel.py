@@ -30,7 +30,23 @@ from jax.experimental import pallas as pl
 from repro.core.precision import OnlinePrecision
 from repro.kernels.common import checked_schedule
 
-__all__ = ["online_mul_pallas", "mul_digit_loop"]
+__all__ = ["online_mul_pallas", "mul_digit_loop", "mul_block_shapes"]
+
+
+def mul_block_shapes(*, n: int, delta: int, block_b: int) -> dict:
+    """Per-grid-step VMEM block table: name -> (block shape, dtype).
+
+    The single source for what one grid step of online_mul_pallas keeps
+    resident in VMEM — the pallas_call below builds its BlockSpecs from
+    it and the olmlint VMEM footprint model (repro.analysis.vmem) sums
+    it, so kernel and analyzer cannot disagree about the layout.
+    """
+    return {
+        "sched": ((n + delta,), jnp.int32),
+        "x_digits": ((block_b, n), jnp.int32),
+        "y_digits": ((block_b, n), jnp.int32),
+        "z_digits": ((block_b, n), jnp.int32),
+    }
 
 
 def mul_digit_loop(xd, yd, sched, *, n, delta, t, S):
@@ -60,16 +76,21 @@ def mul_digit_loop(xd, yd, sched, *, n, delta, t, S):
         T = sched[s].astype(jnp.int32)
         q = j + 1 + delta                      # arriving digit position
         in_range = jnp.logical_and(q >= 1, q <= n)
-        col = jnp.clip(q - 1, 0, n - 1)
         zero = jnp.int32(0)
+        # int32-typed literals throughout: a bare Python int in a where/
+        # clip branch traces as a weak int64 aval under x64, breaking the
+        # kernel-no-int64 contract even though it folds to the same bits.
+        col = jnp.clip(q - 1, zero, jnp.int32(n - 1))
         xn = jnp.where(in_range,
-                       jax.lax.dynamic_slice(xd, (zero, col), (B, 1))[:, 0], 0)
+                       jax.lax.dynamic_slice(xd, (zero, col), (B, 1))[:, 0],
+                       zero)
         yn = jnp.where(in_range,
-                       jax.lax.dynamic_slice(yd, (zero, col), (B, 1))[:, 0], 0)
+                       jax.lax.dynamic_slice(yd, (zero, col), (B, 1))[:, 0],
+                       zero)
         # digit weight 2^(S-q); gated to zero once the slice is dead
         wexp = jnp.maximum(jnp.int32(S) - q, 0).astype(jnp.int32)
         wq = jnp.where(q <= jnp.minimum(T, jnp.int32(S)),
-                       jax.lax.shift_left(jnp.int32(1), wexp), 0)
+                       jax.lax.shift_left(jnp.int32(1), wexp), zero)
         Yf = Y + yn * wq
         term = X * yn + Yf * xn                # SELECTOR mux contributions
         append = floor_at(
@@ -78,11 +99,12 @@ def mul_digit_loop(xd, yd, sched, *, n, delta, t, S):
         Yn = floor_at(Yf, T)
         V = 2 * W + append
         vq = jax.lax.shift_right_arithmetic(V, jnp.int32(S - t))  # quarters
-        zj = jnp.where(vq >= 2, 1, jnp.where(vq >= -2, 0, -1)).astype(jnp.int32)
+        zj = jnp.where(vq >= 2, jnp.int32(1),
+                       jnp.where(vq >= -2, zero, jnp.int32(-1)))
         is_out = j >= 0
-        zj = jnp.where(is_out, zj, 0)
+        zj = jnp.where(is_out, zj, zero)
         Wn = floor_at(jnp.where(is_out, V - jax.lax.shift_left(zj, jnp.int32(S)), V), T)
-        zcol = jnp.clip(j, 0, n - 1)
+        zcol = jnp.clip(j, zero, jnp.int32(n - 1))
         upd = jax.lax.dynamic_update_slice(zout, zj[:, None], (zero, zcol))
         zout = jnp.where(is_out, upd, zout)
         return Xn, Yn, Wn, zout
@@ -91,7 +113,10 @@ def mul_digit_loop(xd, yd, sched, *, n, delta, t, S):
     init = (zeros, zeros, zeros, jnp.zeros((B, n), jnp.int32))
     # The multiplier's architectural output IS the MSDF digit stream; the
     # integer decode (OTFC in hardware) happens outside the kernel.
-    _, _, _, zout = jax.lax.fori_loop(0, n + delta, body, init)
+    # int32 loop bounds: Python-int bounds would canonicalize the loop
+    # index to int64 under x64, breaking the kernel-no-int64 contract.
+    _, _, _, zout = jax.lax.fori_loop(jnp.int32(0), jnp.int32(n + delta),
+                                      body, init)
     return zout
 
 
@@ -134,15 +159,16 @@ def online_mul_pallas(
     sched = jnp.asarray(sched_np)
     grid = (B // block_b,)
     kern = functools.partial(_kernel, n=n, delta=delta, t=t, S=S)
+    blocks = mul_block_shapes(n=n, delta=delta, block_b=block_b)
     z = pl.pallas_call(
         kern,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((n + delta,), lambda i: (0,)),       # schedule (bcast)
-            pl.BlockSpec((block_b, n), lambda i: (i, 0)),     # x digits
-            pl.BlockSpec((block_b, n), lambda i: (i, 0)),     # y digits
+            pl.BlockSpec(blocks["sched"][0], lambda i: (0,)),  # sched (bcast)
+            pl.BlockSpec(blocks["x_digits"][0], lambda i: (i, 0)),
+            pl.BlockSpec(blocks["y_digits"][0], lambda i: (i, 0)),
         ],
-        out_specs=pl.BlockSpec((block_b, n), lambda i: (i, 0)),  # z digits
+        out_specs=pl.BlockSpec(blocks["z_digits"][0], lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((B, n), jnp.int32),
         interpret=interpret,
     )(sched, x_digits.astype(jnp.int32), y_digits.astype(jnp.int32))

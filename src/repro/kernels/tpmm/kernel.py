@@ -27,7 +27,44 @@ from jax.experimental.pallas import tpu as pltpu
 
 from .ref import kept_levels
 
-__all__ = ["tpmm_pallas"]
+__all__ = ["tpmm_pallas", "plane_accumulate", "tpmm_block_shapes"]
+
+
+def plane_accumulate(a_block, b_block, acc, *, n_planes, plane_bits, lmax):
+    """MSD-first truncated plane-pair accumulation for one (bm, bn) tile.
+
+    Pure jnp function (no Refs): olmlint's jaxpr contract checker traces
+    it in isolation and the kernel below calls it. The dot_general here
+    is the one grandfathered MXU baseline site (AST-lint suppression
+    baseline): plane-pair products are the paper's bit-slice partial
+    products mapped onto the MXU, not a bypass of DotEngine routing.
+
+    Args:
+      a_block: (D, bm, bk) int8 digit planes; b_block: (D, bk, bn).
+      acc: (bm, bn) float32 running accumulator.
+    Returns the updated (bm, bn) float32 accumulator.
+    """
+    # Truncated at significance lmax: acc holds
+    # sum_L 2^(-b(L+2)) * intacc_L in float32; integer pair accumulation
+    # within one (da, db) dot stays int32-exact.
+    for L in range(lmax):
+        lacc = None
+        for da in range(min(L + 1, n_planes)):
+            db = L - da
+            if db < 0 or db >= n_planes:
+                continue
+            prod = jax.lax.dot_general(
+                a_block[da, :, :].astype(jnp.int32),
+                b_block[db, :, :].astype(jnp.int32),
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32,
+            )
+            lacc = prod if lacc is None else lacc + prod
+        if lacc is None:
+            continue
+        w = jnp.float32(2.0 ** (-plane_bits * (L + 2)))
+        acc = acc + lacc.astype(jnp.float32) * w
+    return acc
 
 
 def _kernel(a_ref, b_ref, sa_ref, sb_ref, o_ref, acc_ref, *,
@@ -39,32 +76,29 @@ def _kernel(a_ref, b_ref, sa_ref, sb_ref, o_ref, acc_ref, *,
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # MSD-first static plane-pair loop, truncated at significance lmax.
-    # acc holds sum_L 2^(-b(L+2)) * intacc_L in float32; integer pair
-    # accumulation within one (da, db) dot stays int32-exact.
-    acc = acc_ref[...]
-    for L in range(lmax):
-        lacc = None
-        for da in range(min(L + 1, n_planes)):
-            db = L - da
-            if db < 0 or db >= n_planes:
-                continue
-            prod = jax.lax.dot_general(
-                a_ref[da, :, :].astype(jnp.int32),
-                b_ref[db, :, :].astype(jnp.int32),
-                (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.int32,
-            )
-            lacc = prod if lacc is None else lacc + prod
-        if lacc is None:
-            continue
-        w = jnp.float32(2.0 ** (-plane_bits * (L + 2)))
-        acc = acc + lacc.astype(jnp.float32) * w
-    acc_ref[...] = acc
+    acc_ref[...] = plane_accumulate(
+        a_ref[...], b_ref[...], acc_ref[...],
+        n_planes=n_planes, plane_bits=plane_bits, lmax=lmax)
 
     @pl.when(k == k_steps - 1)
     def _finish():
         o_ref[...] = acc_ref[...] * sa_ref[...] * sb_ref[...]
+
+
+def tpmm_block_shapes(*, n_planes: int, block_m: int, block_n: int,
+                      block_k: int) -> dict:
+    """Per-grid-step VMEM block table: name -> (block shape, dtype),
+    including the float32 scratch accumulator. Single source for the
+    layout — the pallas_call below builds its BlockSpecs/scratch from it
+    and the olmlint VMEM footprint model (repro.analysis.vmem) sums it."""
+    return {
+        "a_planes": ((n_planes, block_m, block_k), jnp.int8),
+        "b_planes": ((n_planes, block_k, block_n), jnp.int8),
+        "a_scale": ((block_m, 1), jnp.float32),
+        "b_scale": ((1, block_n), jnp.float32),
+        "out": ((block_m, block_n), jnp.float32),
+        "acc_scratch": ((block_m, block_n), jnp.float32),
+    }
 
 
 @functools.partial(
@@ -99,18 +133,20 @@ def tpmm_pallas(
     kern = functools.partial(
         _kernel, n_planes=D, plane_bits=plane_bits, lmax=lmax,
         k_steps=grid[2])
+    blocks = tpmm_block_shapes(n_planes=D, block_m=block_m,
+                               block_n=block_n, block_k=block_k)
     return pl.pallas_call(
         kern,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((D, block_m, block_k), lambda i, j, k: (0, i, k)),
-            pl.BlockSpec((D, block_k, block_n), lambda i, j, k: (0, k, j)),
-            pl.BlockSpec((block_m, 1), lambda i, j, k: (i, 0)),
-            pl.BlockSpec((1, block_n), lambda i, j, k: (0, j)),
+            pl.BlockSpec(blocks["a_planes"][0], lambda i, j, k: (0, i, k)),
+            pl.BlockSpec(blocks["b_planes"][0], lambda i, j, k: (0, k, j)),
+            pl.BlockSpec(blocks["a_scale"][0], lambda i, j, k: (i, 0)),
+            pl.BlockSpec(blocks["b_scale"][0], lambda i, j, k: (0, j)),
         ],
-        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_specs=pl.BlockSpec(blocks["out"][0], lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
         # float32 accumulator tile, persistent across the sequential K axis
-        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM(*blocks["acc_scratch"])],
         interpret=interpret,
     )(a_planes, b_planes, a_scale, b_scale)

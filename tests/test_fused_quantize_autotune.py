@@ -214,8 +214,8 @@ class TestAutotunerChoices:
         # per-dtype decode window: the kernel would refuse anything wider
         assert n_bits + 2 * tree_levels(t.k_tile) <= \
             tuning.decode_window(n_bits)
-        # VMEM lane budget
-        assert t.block_m * t.block_n * t.k_tile <= tuning.LANE_BUDGET
+        # VMEM lane budget — width-aware: wide modes get fewer lanes
+        assert t.block_m * t.block_n * t.k_tile <= tuning.lane_budget(n_bits)
         assert t.block_m >= 1 and t.block_n >= 1 and t.k_tile >= 1
 
     def test_max_k_tile_decode_window(self):

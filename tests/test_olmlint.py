@@ -1,0 +1,259 @@
+"""olmlint analyzer tests (Issue 6): every contract fails on a fixture
+violation with its named contract id, and the shipped kernels pass
+clean at all four registered widths under both x64 settings."""
+import functools
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import ast_lint, overflow, run_ast_lint, vmem
+from repro.analysis.jaxpr_lint import check_case, check_jaxpr
+from repro.analysis.registry import KernelCase, iter_cases
+from repro.configs.olm_array import MATMUL_MODES
+from repro.core.precision import OnlinePrecision
+from repro.kernels.online_dot import tuning
+
+WIDTHS = tuple(sorted(MATMUL_MODES))
+
+
+def _case(name, fn, shape=(4,), dtype=jnp.int32, out_dtypes=("int32",)):
+    return KernelCase(
+        name=name, n_bits=8,
+        trace=functools.partial(jax.make_jaxpr(fn),
+                                jax.ShapeDtypeStruct(shape, dtype)),
+        out_dtypes=out_dtypes, tiling=None)
+
+
+def _contracts(violations):
+    return {v.contract for v in violations}
+
+
+# ---------------------------------------------------------------- fixtures
+
+
+def test_fixture_int64_eqn_fails_named_contract():
+    case = _case("fixture-int64",
+                 lambda x: (x.astype(jnp.int64) + 1).astype(jnp.int32))
+    assert "kernel-no-int64" in _contracts(check_case(case))
+
+
+def test_fixture_transcendental_fails_named_contract():
+    case = _case("fixture-exp2", jnp.exp2, dtype=jnp.float32,
+                 out_dtypes=("float32",))
+    assert "kernel-no-transcendental" in _contracts(check_case(case))
+
+
+def test_fixture_1d_iota_fails_named_contract():
+    case = _case("fixture-iota",
+                 lambda x: x + jax.lax.iota(jnp.int32, 4))
+    assert "kernel-no-1d-iota" in _contracts(check_case(case))
+
+
+def test_fixture_accum_dtype_mismatch_fails_named_contract():
+    # body genuinely returns float32; the case declares int32
+    case = _case("fixture-accum", lambda x: x.astype(jnp.float32),
+                 out_dtypes=("int32",))
+    assert "kernel-accum-dtype" in _contracts(check_case(case))
+
+
+def test_fixture_weak_literal_int64_fails_named_contract():
+    # the exact leak class the kernels were scrubbed of: a bare Python
+    # int in a where branch traces as a weak int64 aval under x64
+    case = _case("fixture-weak-literal",
+                 lambda x: jnp.where(x > 0, 1, jnp.where(x < 0, -1, 0))
+                 .astype(jnp.int32))
+    assert "kernel-no-int64" in _contracts(check_case(case))
+
+
+def test_fixture_overflowing_schedule_fails_named_contract():
+    # untruncated n=32: S = 35, first live register write is 2^34
+    cfg = OnlinePrecision(n=32, truncated=False)
+    vs = overflow.check_schedule(cfg, where="fixture")
+    assert _contracts(vs) == {"int32-overflow"}
+    bits, _ = overflow.prove_schedule(cfg)
+    assert bits > 31
+
+
+def test_fixture_over_budget_tiling_fails_named_contract():
+    # 8*8*256 = 16384 lanes >> lane_budget(32) = 1024
+    vs = vmem.check_matmul_tiling(32, 256, 8, 8, where="fixture")
+    assert "vmem-budget" in _contracts(vs)
+
+
+def test_fixture_oversized_k_tile_fails_decode_window():
+    kt = 2 * tuning.max_k_tile(16)
+    vs = vmem.check_matmul_tiling(16, kt, 1, 1, where="fixture")
+    assert "decode-window" in _contracts(vs)
+
+
+def test_fixture_poisoned_tuning_cache_fails(tmp_path):
+    key = tuning.bucket_key(64, 64, 64, 16)
+    cache = {"entries": {key: {
+        "k_tile": 2 * tuning.max_k_tile(16), "block_m": 1, "block_n": 1,
+        "source": "heuristic", "shape": [64, 64, 64], "n_bits": 16}}}
+    path = tmp_path / "tuning.json"
+    path.write_text(json.dumps(cache))
+    vs = vmem.check_tuning_cache(str(path))
+    assert "decode-window" in _contracts(vs)
+
+
+# --------------------------------------------------- shipped kernels clean
+
+
+def test_shipped_kernels_pass_all_widths_both_x64():
+    # check_case internally traces each case under x64 off AND on
+    cases = iter_cases(WIDTHS)
+    assert len(cases) >= 4 * len(WIDTHS)
+    violations = [v for c in cases for v in check_case(c)]
+    assert violations == [], "\n".join(str(v) for v in violations)
+
+
+@pytest.mark.parametrize("n", WIDTHS)
+def test_shipped_schedules_prove_int32(n):
+    bits, detail = overflow.prove_schedule(OnlinePrecision(n=n))
+    assert bits <= 31, detail
+
+
+@pytest.mark.parametrize("n", WIDTHS)
+def test_decode_window_covers_legal_k_tiles(n):
+    assert overflow.check_decode_windows(n, where=f"olm{n}") == []
+
+
+def test_adder_tree_digit_bound_is_one():
+    assert overflow.adder_tree_digit_bound() == 1
+
+
+@pytest.mark.parametrize("n", WIDTHS)
+def test_registered_tilings_fit_vmem(n):
+    for label, (kt, bm, bn) in vmem.representative_tilings(n).items():
+        assert vmem.check_matmul_tiling(n, kt, bm, bn, where=label) == []
+
+
+def test_committed_tuning_cache_clean():
+    assert vmem.check_tuning_cache() == []
+
+
+# ----------------------------------------------------- width-aware budget
+
+
+def test_lane_budget_width_aware():
+    assert tuning.lane_budget(16) == tuning.LANE_BUDGET
+    budgets = [tuning.lane_budget(n) for n in WIDTHS]
+    assert budgets == sorted(budgets, reverse=True)  # shrinks with width
+    for n in WIDTHS:
+        b = tuning.lane_budget(n)
+        assert b & (b - 1) == 0  # power of two
+
+
+@pytest.mark.parametrize("n", WIDTHS)
+def test_heuristic_tiling_respects_lane_budget(n):
+    t = tuning.heuristic_tiling(512, 512, 512, n)
+    assert t.block_m * t.block_n * t.k_tile <= tuning.lane_budget(n)
+
+
+# --------------------------------------------------------------- AST lint
+
+
+def _lint_src(tmp_path, relpath, source):
+    p = tmp_path / relpath
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(source)
+    return ast_lint.lint_file(str(p), str(tmp_path))
+
+
+def test_ast_raw_dot_flagged(tmp_path):
+    found = _lint_src(tmp_path, "src/repro/models/new_layer.py",
+                      "import jax.numpy as jnp\n"
+                      "def f(a, b):\n    return jnp.dot(a, b)\n")
+    assert [(r, q) for r, _, _, q in found] == [("ast-raw-dot", "f")]
+
+
+def test_ast_raw_dot_alias_cannot_dodge(tmp_path):
+    found = _lint_src(tmp_path, "src/repro/models/new_layer.py",
+                      "from jax.lax import dot_general as dg\n"
+                      "def f(a, b, dims):\n    return dg(a, b, dims)\n")
+    assert [r for r, _, _, _ in found] == ["ast-raw-dot"]
+
+
+def test_ast_raw_dot_allowed_in_numerics(tmp_path):
+    found = _lint_src(tmp_path, "src/repro/core/numerics.py",
+                      "import jax.numpy as jnp\n"
+                      "def f(a, b):\n    return jnp.dot(a, b)\n")
+    assert found == []
+
+
+def test_ast_x64_config_flagged(tmp_path):
+    found = _lint_src(tmp_path, "src/repro/models/new_layer.py",
+                      "import jax\n"
+                      'jax.config.update("jax_enable_x64", True)\n')
+    assert [r for r, _, _, _ in found] == ["ast-x64-config"]
+
+
+def test_ast_transcendental_scale_flagged(tmp_path):
+    found = _lint_src(tmp_path, "src/repro/kernels/common.py",
+                      "import math\n"
+                      "def f(x):\n    return math.log2(x)\n")
+    assert [r for r, _, _, _ in found] == ["ast-transcendental-scale"]
+
+
+def test_ast_repo_clean_under_committed_baseline():
+    violations, _, unused = run_ast_lint()
+    assert violations == [], "\n".join(str(v) for v in violations)
+    assert unused == set(), f"stale baseline suppressions: {sorted(unused)}"
+
+
+def test_baseline_key_invalidated_by_move():
+    a = ast_lint.baseline_key("ast-raw-dot", "src/a.py", "f")
+    assert a != ast_lint.baseline_key("ast-raw-dot", "src/b.py", "f")
+    assert a != ast_lint.baseline_key("ast-raw-dot", "src/a.py", "g")
+
+
+# -------------------------------------------------------- CLI + check_bench
+
+
+def test_cli_ast_engine_exits_zero():
+    r = subprocess.run([sys.executable, "tools/olmlint.py", "--engine", "ast"],
+                       capture_output=True, text=True,
+                       cwd=str(ast_lint._REPO_ROOT))
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "olmlint: OK" in r.stdout
+
+
+def test_cli_rejects_unregistered_width():
+    r = subprocess.run([sys.executable, "tools/olmlint.py",
+                        "--engine", "kernels", "--widths", "12"],
+                       capture_output=True, text=True,
+                       cwd=str(ast_lint._REPO_ROOT))
+    assert r.returncode == 2
+
+
+def test_check_bench_rejects_oversized_k_tile(tmp_path):
+    tools_dir = os.path.join(ast_lint._REPO_ROOT, "tools")
+    if tools_dir not in sys.path:
+        sys.path.insert(0, tools_dir)
+    import check_bench
+    key = tuning.bucket_key(64, 64, 64, 16)
+    cache = {"entries": {key: {
+        "k_tile": 2 * tuning.max_k_tile(16), "block_m": 1, "block_n": 1,
+        "source": "heuristic", "shape": [64, 64, 64], "n_bits": 16}}}
+    path = tmp_path / "tuning.json"
+    path.write_text(json.dumps(cache))
+    with pytest.raises(check_bench.CheckFailure, match="decode window"):
+        check_bench.check_tuning(str(path))
+
+
+def test_violation_message_names_contract():
+    vs = vmem.check_matmul_tiling(32, 256, 8, 8, where="fixture")
+    msg = str(vs[0])
+    assert "[vmem-budget]" in msg and "contract:" in msg
+
+
+def test_jaxpr_violation_points_at_eqn():
+    closed = jax.make_jaxpr(jnp.exp2)(jax.ShapeDtypeStruct((4,), jnp.float32))
+    vs = check_jaxpr(closed, where="fixture")
+    assert any("exp2" in v.detail for v in vs)

@@ -46,7 +46,8 @@ sys.path.insert(0, os.path.join(_REPO_ROOT, "src"))
 
 from repro.configs.olm_array import MATMUL_MODES                  # noqa: E402
 from repro.kernels.online_dot.tuning import (TuningCache,         # noqa: E402
-                                             get_tiling, pinned_k_tile)
+                                             get_tiling, max_k_tile,
+                                             pinned_k_tile)
 
 _BUCKET_KEY = re.compile(r"^m\d+n\d+k\d+b\d+$")
 _TUNING_REQUIRED = {"k_tile": int, "block_m": int, "block_n": int,
@@ -157,6 +158,15 @@ def check_tuning(tuning_path: str) -> None:
                 f"got {e['shape']}")
         if min(e["block_m"], e["block_n"], e["k_tile"]) < 1:
             raise CheckFailure(f"{tuning_path} {key}: non-positive tiling")
+        # Cached k_tile must stay inside this width's exact decode
+        # window (n_bits + 2*ceil(log2 k_tile) <= the per-dtype window):
+        # a hand-edited or stale entry past max_k_tile would decode an
+        # over-long digit stream and silently lose bit-exactness.
+        if e["k_tile"] > max_k_tile(e["n_bits"]):
+            raise CheckFailure(
+                f"{tuning_path} {key}: k_tile {e['k_tile']} exceeds "
+                f"max_k_tile({e['n_bits']}) = {max_k_tile(e['n_bits'])} — "
+                "the stream would leave the exact decode window")
         # The invariant: whatever k_tile the entry stores, what
         # tiling="auto" serves for this entry's shape must be the
         # kernel numerics default (tuning.pinned_k_tile — the same

@@ -1,0 +1,101 @@
+#!/usr/bin/env python
+"""olmlint — static kernel-contract & numerics analyzer CLI.
+
+Two engines (src/repro/analysis/):
+
+  kernels  abstract-jaxpr contract checks on every registered Pallas
+           kernel body at every MATMUL_MODES width x representative
+           tiling bucket, under both x64 settings; the symbolic int32
+           non-overflow proof of the Fig. 7 / Eq. 8 truncation
+           schedule; decode-window coverage of the autotuner's legal
+           k_tile range; and the static VMEM footprint model (block-
+           shape tables + lane working set vs the width-aware budget),
+           including every committed results/tuning.json entry.
+  ast      repo architecture rules over src/ (raw-dot confinement,
+           scoped-x64-only, no transcendental calls in scale modules)
+           with a committed suppression baseline
+           (tools/olmlint_baseline.json).
+
+Exit codes: 0 clean, 1 violations found, 2 usage/internal error.
+Run via `make lint` (both engines) or `make lint-kernels`.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_REPO_ROOT, "src"))
+
+from repro.analysis import run_ast_lint, run_kernel_lint   # noqa: E402
+from repro.analysis.ast_lint import DEFAULT_BASELINE_PATH  # noqa: E402
+from repro.configs.olm_array import MATMUL_MODES           # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--engine", choices=("all", "kernels", "ast"),
+                    default="all")
+    ap.add_argument("--widths", default=None,
+                    help="comma-separated subset of MATMUL_MODES widths "
+                         "for the kernel engine (default: all registered)")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE_PATH,
+                    help="AST suppression baseline JSON")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="record current AST findings as the new baseline "
+                         "instead of failing on them")
+    args = ap.parse_args(argv)
+
+    widths = None
+    if args.widths:
+        try:
+            widths = tuple(int(w) for w in args.widths.split(","))
+        except ValueError:
+            ap.error(f"--widths must be comma-separated ints: {args.widths!r}")
+        bad = sorted(set(widths) - set(MATMUL_MODES))
+        if bad:
+            ap.error(f"unregistered widths {bad}; registered: "
+                     f"{sorted(MATMUL_MODES)}")
+
+    violations = []
+    if args.engine in ("all", "kernels"):
+        kv = run_kernel_lint(widths)
+        violations.extend(kv)
+        print(f"olmlint kernels: {len(kv)} violation(s) "
+              f"[widths={','.join(str(w) for w in sorted(widths or MATMUL_MODES))}]")
+    if args.engine in ("all", "ast"):
+        if args.write_baseline:
+            _, raw_keys, _ = run_ast_lint(baseline=set())
+            payload = {"comment": "olmlint AST suppressions — grandfathered "
+                                  "sites only; keys are rule::relpath::"
+                                  "qualname, so moving or adding a call "
+                                  "invalidates its entry",
+                       "suppressions": sorted(set(raw_keys))}
+            with open(args.baseline, "w") as f:
+                json.dump(payload, f, indent=2)
+                f.write("\n")
+            print(f"olmlint ast: wrote {len(payload['suppressions'])} "
+                  f"suppression(s) to {args.baseline}")
+        else:
+            av, _, unused = run_ast_lint(baseline=args.baseline)
+            violations.extend(av)
+            print(f"olmlint ast: {len(av)} violation(s)")
+            for key in sorted(unused):
+                print(f"  note: stale baseline suppression {key!r} "
+                      "(site gone — prune it)")
+
+    if violations:
+        print(f"\nolmlint: FAIL — {len(violations)} violation(s):\n",
+              file=sys.stderr)
+        for v in violations:
+            print(str(v), file=sys.stderr)
+            print(file=sys.stderr)
+        return 1
+    print("olmlint: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
