@@ -358,6 +358,92 @@ def olm_matmul_fused_bench():
     return rows
 
 
+def serve_replay_bench():
+    """Traffic replay through the serving engine: a seeded arrival
+    process (serving.replay) drives the paged-KV engine and the
+    contiguous-cache oracle through the identical workload. Latency
+    rows are in scheduler steps — a pure function of the workload and
+    scheduler logic (eos_id=None, so steps never depend on sampled
+    token values) — which is what lets tools/check_bench.py diff them
+    against the committed baseline on any host; wall time is recorded
+    in `us` for the trajectory but never gated. KV rows account bytes
+    actually resident for attention K/V under each layout: the paged
+    pool must sit strictly below the contiguous slots*max_len figure.
+    The two runs must also be token-identical (asserted here and
+    re-tested per dot_mode in tests/test_serving_engine.py)."""
+    import jax
+    from repro.configs import smoke_config
+    from repro.models.model import Model
+    from repro.serving import (ReplayConfig, ServeEngine, build_workload,
+                               run_replay)
+    cfg = smoke_config("internlm2_1_8b")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rc = ReplayConfig(seed=0, n_requests=24, mean_interarrival_steps=2.0,
+                      prompt_len_range=(4, 24), max_new_range=(4, 10),
+                      vocab=cfg.vocab_size)
+    workload = build_workload(rc)
+    slots, max_len = 4, 64
+    # 20 usable blocks = every lane at its workload-peak depth at once
+    # (ceil((24+10)/8) = 5 blocks x 4 lanes), so no cache_full at 65% of
+    # the contiguous residency; +1 for the trash block
+    layouts = (
+        ("paged", dict(kv_layout="paged", kv_block_size=8, kv_blocks=21)),
+        ("contig", dict(kv_layout="contiguous")),
+    )
+    print("\n== serve_replay: seeded traffic through the serving engine "
+          "(paged KV vs contiguous oracle) ==")
+    engines, reports, outputs = {}, {}, {}
+    for label, kw in layouts:
+        eng = ServeEngine(model, params, slots=slots, max_len=max_len,
+                          dot_tiling="auto", **kw)
+        done, rep = run_replay(eng, workload)
+        assert rep["n"] == rc.n_requests, "replay must complete the workload"
+        engines[label], reports[label] = eng, rep
+        outputs[label] = {r.rid: tuple(r.output) for r in done}
+        print(f"{label:>7}: ttft p50/p99 = {rep['ttft_steps_p50']:.1f}/"
+              f"{rep['ttft_steps_p99']:.1f} steps, e2e p50/p99 = "
+              f"{rep['e2e_steps_p50']:.1f}/{rep['e2e_steps_p99']:.1f}, "
+              f"{rep['tokens_per_step']:.3f} tok/step, "
+              f"wall {rep['wall_s']:.2f}s")
+    assert outputs["paged"] == outputs["contig"], \
+        "paged decode must be token-identical to the contiguous oracle"
+    kvp = engines["paged"].kv_report()
+    kvc = engines["contig"].kv_report()
+    assert kvp["kv_bytes_resident"] < kvc["kv_bytes_resident"], \
+        "paged KV residency must sit strictly below contiguous"
+    rep = reports["paged"]
+    wall_us = rep["wall_s"] * 1e6
+    ratio = kvp["kv_bytes_resident"] / kvc["kv_bytes_resident"]
+    print(f"kv resident: paged {kvp['kv_bytes_resident']} B vs contiguous "
+          f"{kvc['kv_bytes_resident']} B ({100 * ratio:.1f}%), peak blocks "
+          f"{kvp['kv_blocks_peak_used']}/{kvp['kv_blocks_usable']}, "
+          f"prefill compiles {engines['paged'].prefill_traces}")
+    rows = [
+        _row("serve_replay/ttft_p50", derived=rep["ttft_steps_p50"]),
+        _row("serve_replay/ttft_p99", derived=rep["ttft_steps_p99"]),
+        _row("serve_replay/e2e_p50", derived=rep["e2e_steps_p50"]),
+        _row("serve_replay/e2e_p99", derived=rep["e2e_steps_p99"]),
+        _row("serve_replay/tokens_per_step", us=wall_us,
+             derived=rep["tokens_per_step"]),
+        _row("serve_replay/completed", derived=rep["n"]),
+        _row("serve_replay/cache_full", derived=rep["n_cache_full"]),
+        _row("serve_replay/prefill_compiles",
+             derived=engines["paged"].prefill_traces),
+        _row("serve_replay/blocks_peak",
+             derived=kvp["kv_blocks_peak_used"]),
+        _row("serve_replay/kv_paged",
+             bytes_moved=kvp["kv_bytes_resident"],
+             bytes_float=kvp["kv_bytes_contiguous"],
+             derived=round(ratio, 4)),
+        _row("serve_replay/kv_contig",
+             bytes_moved=kvc["kv_bytes_resident"]),
+    ]
+    for r in rows:
+        print(f"{r['op']},{r['us']:.1f},{r['derived']}")
+    return rows
+
+
 def pipeline_activity():
     """Fig. 7 reproduction: per-cycle live slices + measured switching."""
     from repro.core.pipeline import run_pipeline
@@ -417,6 +503,7 @@ BENCHES = {
     "online_dot": online_dot_bench,
     "olm_matmul": olm_matmul_bench,
     "olm_matmul_fused": olm_matmul_fused_bench,
+    "serve_replay": serve_replay_bench,
     "fig7": pipeline_activity,
     "roofline": roofline_report,
 }

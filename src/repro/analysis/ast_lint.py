@@ -1,6 +1,6 @@
 """Engine 2: fast AST lint enforcing repo architecture rules over src/.
 
-Three repo-specific rules (style is ruff's job — see ruff.toml):
+Four repo-specific rules (style is ruff's job — see ruff.toml):
 
   ast-raw-dot              no jnp.dot / lax.dot_general calls outside
                            core/numerics.py: contractions route through
@@ -13,6 +13,14 @@ Three repo-specific rules (style is ruff's job — see ruff.toml):
                            scale-computation modules: pow2 scales are
                            exponent-field bitcasts, exact on every
                            backend.
+  ast-serving-contraction  no contraction calls (einsum / matmul /
+                           tensordot, on top of the raw-dot set) inside
+                           src/repro/serving/: the serving engine is a
+                           scheduler — every GEMM/GEMV must go through
+                           the model so the per-deployment dot_mode /
+                           dot_tiling override actually governs all
+                           serving math (raw lax.dot_general stays
+                           confined to core/numerics.py repo-wide).
 
 Import aliases are resolved per module (import jax.numpy as jnp,
 from jax import lax, from jax.lax import dot_general, ...) so renaming
@@ -31,6 +39,7 @@ from typing import Iterable
 from .contracts import Violation
 
 __all__ = ["RAW_DOT_CALLS", "TRANSCENDENTAL_CALLS", "SCALE_MODULES",
+           "SERVING_CONTRACTION_CALLS", "SERVING_MODULES_PREFIX",
            "DEFAULT_BASELINE_PATH", "lint_file", "load_baseline",
            "baseline_key", "run"]
 
@@ -50,8 +59,18 @@ TRANSCENDENTAL_CALLS = frozenset({
     "jax.lax.exp2", "jax.lax.exp", "jax.lax.log", "jax.lax.pow",
 })
 
+# The serving module is a scheduler, not a compute layer: any tensor
+# contraction there would bypass the per-deployment dot_mode/dot_tiling
+# override (ServeEngine rebuilds the model's DotEngine), so the rule
+# bans the wider einsum/matmul family on top of the raw-dot set.
+SERVING_CONTRACTION_CALLS = RAW_DOT_CALLS | frozenset({
+    "jax.numpy.einsum", "jax.numpy.matmul", "jax.numpy.tensordot",
+    "jax.numpy.inner", "jax.numpy.vdot",
+})
+
 # repo-relative allowlists / scopes (posix-style paths)
 RAW_DOT_ALLOWED = ("src/repro/core/numerics.py",)
+SERVING_MODULES_PREFIX = "src/repro/serving/"
 X64_ALLOWED = ("src/repro/compat.py",)
 # modules that compute or apply pow2 scales — the bit-exactness surface
 SCALE_MODULES = (
@@ -123,6 +142,10 @@ class _Visitor(ast.NodeVisitor):
             if (name in TRANSCENDENTAL_CALLS
                     and self.relpath in SCALE_MODULES):
                 self.findings.append(("ast-transcendental-scale",
+                                      node.lineno, self._qual()))
+            if (name in SERVING_CONTRACTION_CALLS
+                    and self.relpath.startswith(SERVING_MODULES_PREFIX)):
+                self.findings.append(("ast-serving-contraction",
                                       node.lineno, self._qual()))
             if (name.endswith("config.update")
                     and self.relpath not in X64_ALLOWED

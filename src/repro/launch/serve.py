@@ -1,5 +1,10 @@
 """End-to-end serving driver: continuous batching over a request stream.
 
+Defaults to the paged KV cache (block-table layout, kv_layout="paged");
+pass --kv-layout contiguous for the dense-oracle layout, --kv-blocks /
+--kv-block-size to size the paged pool, and --prefill-chunk to split
+long prompts into decode-interleaved chunks.
+
 Usage (CPU smoke — deliverable (b) example):
   PYTHONPATH=src python -m repro.launch.serve --arch internlm2_1_8b --smoke \
       --requests 12 --slots 4 --max-new 24
@@ -26,6 +31,16 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--kv-layout", choices=("paged", "contiguous"),
+                    default="paged")
+    ap.add_argument("--kv-block-size", type=int, default=16)
+    ap.add_argument("--kv-blocks", type=int, default=None,
+                    help="usable pool size + 1 (block 0 is the trash "
+                         "block); default sizes the pool to ~half of "
+                         "slots*max_len worth of tokens")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="split long prompts into chunks of this many "
+                         "tokens, interleaved with decode steps")
     args = ap.parse_args(argv)
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -35,7 +50,11 @@ def main(argv=None):
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
     engine = ServeEngine(model, params, slots=args.slots,
-                         max_len=args.max_len)
+                         max_len=args.max_len,
+                         kv_layout=args.kv_layout,
+                         kv_block_size=args.kv_block_size,
+                         kv_blocks=args.kv_blocks,
+                         prefill_chunk=args.prefill_chunk)
 
     rng = np.random.default_rng(args.seed)
     for rid in range(args.requests):
@@ -46,9 +65,12 @@ def main(argv=None):
     done = engine.run()
     rep = engine.latency_report(done)
     for r in done[:4]:
-        print(f"req {r.rid}: prompt {len(r.prompt)} toks -> {len(r.output)} new")
+        print(f"req {r.rid}: prompt {len(r.prompt)} toks -> {len(r.output)} "
+              f"new ({r.finish_reason})")
     print(json.dumps(rep))
+    print(json.dumps(engine.kv_report()))
     assert len(done) == args.requests, "engine dropped requests"
+    rep["kv"] = engine.kv_report()
     return rep
 
 

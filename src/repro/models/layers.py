@@ -13,6 +13,7 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.numerics import DotEngine
 from repro.distributed.constraints import constrain, dp_axes
@@ -75,6 +76,95 @@ def apply_rope(x: jax.Array, positions: jax.Array, *, style: str, theta: float) 
     if rot < Dh:
         out = jnp.concatenate([out, x[..., rot:].astype(jnp.float32)], axis=-1)
     return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# paged KV cache plumbing (block pools + per-lane block tables)
+# --------------------------------------------------------------------------
+#
+# A paged attention cache replaces the contiguous per-lane (B, T, H, D)
+# ring with a per-layer block pool (num_blocks, block_size, H, D) plus a
+# per-lane block table (B, max_blocks_per_lane) of pool indices, so KV
+# memory scales with the pool size (live tokens) instead of B * max_len.
+# Block id 0 is the permanently-reserved TRASH block: unowned table
+# entries point at it, so padding rows and idle decode lanes write their
+# garbage there instead of corrupting live lanes. View slot t of a lane
+# holds absolute position t (block j covers positions [j*bs, (j+1)*bs)),
+# exactly the contiguous layout, so causal masking makes the paged read
+# bit-identical to the contiguous one. All pool reads/writes below are
+# sequential dynamic_slice / dynamic_update_slice walks (no gather).
+
+TRASH_BLOCK = 0
+
+
+def paged_pool_write(pool, table, lane_pos, vals):
+    """Write one decode step's k or v into the block pool.
+
+    pool (NB, bs, H, D); table (B, MBL) int32; lane_pos (B,) absolute
+    position each lane writes; vals (B, 1, H, D). Lanes whose table row
+    is unowned (all TRASH_BLOCK) land in the trash block.
+    """
+    bs = pool.shape[1]
+    blk = lane_pos // bs
+    off = lane_pos - blk * bs
+
+    def step(pl, x):
+        row, b, o, val = x            # val (H, D) -> update (1, 1, H, D)
+        bid = jax.lax.dynamic_slice(row, (b,), (1,))[0]
+        z = jnp.zeros((), bid.dtype)
+        return jax.lax.dynamic_update_slice(
+            pl, val[None, None].astype(pl.dtype),
+            (bid, o.astype(bid.dtype), z, z)), None
+
+    pl, _ = jax.lax.scan(step, pool, (table, blk, off, vals[:, 0]))
+    return pl
+
+
+def paged_pool_view(pool, table):
+    """Materialize each lane's owned blocks as a contiguous (B, T, H, D)
+    view, T = MBL * block_size, via a sequential dynamic_slice walk over
+    the block table (unowned slots read the trash block — garbage, but
+    always causally masked because they sit past the lane's position)."""
+    NB, bs, H, D = pool.shape
+    B, MBL = table.shape
+    out = jnp.zeros((B, MBL * bs, H, D), pool.dtype)
+    lanes = jnp.asarray(np.repeat(np.arange(B, dtype=np.int32), MBL))
+    slots = jnp.asarray(np.tile(np.arange(MBL, dtype=np.int32), B))
+
+    def step(o, x):
+        lane, j, bid = x
+        z = jnp.zeros((), bid.dtype)
+        blkv = jax.lax.dynamic_slice(pool, (bid, z, z, z), (1, bs, H, D))
+        return jax.lax.dynamic_update_slice(
+            o, blkv, (lane.astype(bid.dtype), (j * bs).astype(bid.dtype),
+                      z, z)), None
+
+    out, _ = jax.lax.scan(step, out, (lanes, slots, table.reshape(-1)))
+    return out
+
+
+def paged_scatter_rows(pool, rows, scatter_table):
+    """Scatter contiguous prefill rows into the block pool.
+
+    rows (Bp, S, H, D) from a fresh contiguous row cache; scatter_table
+    (Bp, ceil(S/bs)) int32 block ids — entries past a row's owned blocks
+    (and whole padding rows) point at TRASH_BLOCK, which absorbs them.
+    """
+    NB, bs, H, D = pool.shape
+    Bp, S = rows.shape[:2]
+    pad = (-S) % bs
+    if pad:
+        rows = jnp.pad(rows, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nb = rows.shape[1] // bs
+    blocks = rows.reshape(Bp * nb, bs, H, D).astype(pool.dtype)
+
+    def step(pl, x):
+        bid, blkv = x
+        z = jnp.zeros((), bid.dtype)
+        return jax.lax.dynamic_update_slice(pl, blkv[None], (bid, z, z, z)), None
+
+    pl, _ = jax.lax.scan(step, pool, (scatter_table.reshape(-1), blocks))
+    return pl
 
 
 # --------------------------------------------------------------------------
@@ -236,8 +326,16 @@ def attention_apply(
     kv_cache: Optional[Dict[str, jax.Array]] = None,  # {"k","v" (B,T,Hkv,D), "len" ()}
     memory: Optional[jax.Array] = None,               # cross-attn memory (B,M,d)
     causal: bool = True,
+    chunked: bool = False,
 ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
     """Self- or cross-attention with optional KV cache (decode) and SWA.
+
+    The cache dict selects the layout: {"k","v","len"} is the contiguous
+    per-lane layout; {"kpool","vpool","table","len"} is the paged layout
+    (see the block-pool helpers above). `chunked=True` treats an S>1 call
+    like a decode step that writes S entries at each lane's position and
+    attends over the whole cache (chunked prefill); the default S>1 path
+    is fresh whole-prompt prefill.
 
     Returns (output (B,S,d), updated kv_cache or None).
     """
@@ -260,13 +358,42 @@ def attention_apply(
 
     window = cfg.sliding_window if memory is None else None
     new_cache = None
+    if kv_cache is not None and memory is None and "kpool" in kv_cache:
+        # paged decode: write this step through the block table, then
+        # attend over the gather-free contiguous view of owned blocks.
+        if S != 1:
+            raise ValueError(
+                "paged KV cache supports decode steps only (S == 1); "
+                "prefill goes through a contiguous row cache that the "
+                "serving engine scatters into the pool")
+        from repro.distributed.constraints import mesh_axes
+        msize = mesh_axes().get("model", 1)
+        t_sharded = msize > 1 and cfg.n_kv_heads % msize != 0
+        table = kv_cache["table"]
+        lane_pos = positions[:, 0]
+        kpool = paged_pool_write(kv_cache["kpool"], table, lane_pos, k)
+        vpool = paged_pool_write(kv_cache["vpool"], table, lane_pos, v)
+        new_cache = {"kpool": kpool, "vpool": vpool, "table": table,
+                     "len": jnp.maximum(kv_cache["len"], lane_pos.max() + 1)}
+        ck = paged_pool_view(kpool, table)
+        cv = paged_pool_view(vpool, table)
+        # view slot index == absolute position, exactly the contiguous
+        # layout; unowned slots hold trash but sit past lane_pos, so the
+        # causal mask zeroes them (exp underflows to exact 0.0) and the
+        # softmax is bit-identical to the contiguous path.
+        kpos = jnp.arange(ck.shape[1])
+        out = _attn_core(q, ck, cv, positions, kpos,
+                         causal=causal, window=window, t_sharded=t_sharded)
+        out = eng.dot(out.reshape(B, S, cfg.d_head_total), p["wo"])
+        return out, new_cache
     if kv_cache is not None and memory is None:
         T = kv_cache["k"].shape[1]
         cur = kv_cache["len"]
         ring = window is not None and T == window
-        if S == 1:
-            # decode: per-lane write at each lane's own position (lanes in
-            # a serving pool are at heterogeneous depths), then attend
+        if S == 1 or chunked:
+            # decode / chunked prefill: per-lane write of S entries at each
+            # lane's own position (lanes in a serving pool are at
+            # heterogeneous depths), then attend over the whole cache
             from repro.distributed.constraints import mesh_axes
             msize = mesh_axes().get("model", 1)
             # cache is LENGTH-sharded when kv heads don't divide the model
@@ -275,7 +402,15 @@ def attention_apply(
             # (measured: 172 GB/step on qwen1.5-110b decode_32k).
             t_sharded = msize > 1 and cfg.n_kv_heads % msize != 0
             lane_pos = positions[:, 0]
-            idx_b = jnp.mod(lane_pos, T) if ring else jnp.minimum(lane_pos, T - 1)
+            if ring:
+                if S != 1:
+                    raise ValueError(
+                        "chunked prefill does not support sliding-window "
+                        "ring caches; disable prefill chunking for SWA "
+                        "models")
+                idx_b = jnp.mod(lane_pos, T)
+            else:
+                idx_b = jnp.minimum(lane_pos, T - S)
             # zero indices take i's dtype: mixing traced int32 lane
             # indices with bare Python 0s type-errors under x64
             _upd = lambda c, kk, i: jax.lax.dynamic_update_slice(
@@ -284,7 +419,7 @@ def attention_apply(
                                 k.astype(kv_cache["k"].dtype), idx_b)
             cv = jax.vmap(_upd)(kv_cache["v"],
                                 v.astype(kv_cache["v"].dtype), idx_b)
-            new_cache = {"k": ck, "v": cv, "len": jnp.maximum(cur, lane_pos.max() + 1)}
+            new_cache = {"k": ck, "v": cv, "len": jnp.maximum(cur, lane_pos.max() + S)}
             slots = jnp.arange(T)
             if ring:  # per-lane slot->absolute-position map
                 newest = lane_pos[:, None]

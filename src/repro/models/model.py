@@ -97,14 +97,37 @@ class Model:
         return logits.astype(jnp.float32), aux
 
     # ---------------- KV / recurrent caches ----------------
-    def init_cache(self, batch: int, max_len: int) -> Params:
+    def init_cache(self, batch: int, max_len: int,
+                   paged: Optional[Dict[str, int]] = None) -> Params:
+        """`paged={"num_blocks": NB, "block_size": bs}` gives full-attention
+        layers the block-pool KV layout (see transformer.block_cache_init);
+        default is the contiguous per-lane layout."""
         cfg = self.cfg
         return stack_cache_init(cfg, cfg.block_pattern, cfg.pattern_groups,
-                                cfg.remainder_blocks, batch, max_len)
+                                cfg.remainder_blocks, batch, max_len,
+                                paged=paged)
+
+    @staticmethod
+    def _take_last(x: jax.Array, last_index: Optional[jax.Array]) -> jax.Array:
+        """x (B, S, d) -> (B, 1, d) at per-lane `last_index` (or S-1)."""
+        if last_index is None:
+            return x[:, -1:]
+        B = x.shape[0]
+        idx = jnp.broadcast_to(
+            last_index.astype(jnp.int32)[:, None, None], (B, 1, x.shape[-1]))
+        return jnp.take_along_axis(x, idx, axis=1)
 
     def prefill(self, params: Params, batch: Dict[str, jax.Array],
-                cache: Params) -> Tuple[jax.Array, Params, Optional[jax.Array]]:
-        """Process the prompt; returns (last-position logits, cache, memory)."""
+                cache: Params, last_index: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, Params, Optional[jax.Array]]:
+        """Process the prompt; returns (last-position logits, cache, memory).
+
+        `last_index` (B,) int32 selects each lane's final-prompt position —
+        required when prompts are right-padded to a shared bucket length
+        (the padded tail writes cache entries past the real prompt, which
+        later decode steps overwrite position-for-position, so padding
+        never changes attention outputs for causal layers).
+        """
         cfg = self.cfg
         tokens = batch["tokens"]
         B, S = tokens.shape
@@ -114,10 +137,37 @@ class Model:
         x, cache, _ = stack_apply(params["blocks"], cfg, cfg.block_pattern,
                                   x, pos, self.eng, caches=cache,
                                   memory=memory)
-        x = rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+        x = rmsnorm(params["final_norm"], self._take_last(x, last_index),
+                    cfg.norm_eps)
         emb = params["embed"] if cfg.tie_embeddings else params["unembed"]
         logits = unembed(emb, x, cfg, self.eng)
         return logits[:, 0].astype(jnp.float32), cache, memory
+
+    def prefill_chunk(self, params: Params, batch: Dict[str, jax.Array],
+                      cache: Params, start: jax.Array,
+                      last_index: Optional[jax.Array] = None
+                      ) -> Tuple[jax.Array, Params]:
+        """Chunked prefill: run S prompt tokens starting at absolute
+        position `start` (scalar int32), attending over the cache's whole
+        view so earlier chunks stay visible. Supports full-attention
+        patterns only (the serving engine guards); sliding-window rings
+        are rejected in layers.attention_apply. Returns (logits at
+        `last_index` within the chunk, cache)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        start = jnp.asarray(start, jnp.int32)
+        pos = jnp.broadcast_to(start + jnp.arange(S, dtype=jnp.int32)[None],
+                               (B, S))
+        x = embed(params["embed"], tokens, cfg)
+        x, cache, _ = stack_apply(params["blocks"], cfg, cfg.block_pattern,
+                                  x, pos, self.eng, caches=cache,
+                                  chunked=True)
+        x = rmsnorm(params["final_norm"], self._take_last(x, last_index),
+                    cfg.norm_eps)
+        emb = params["embed"] if cfg.tie_embeddings else params["unembed"]
+        logits = unembed(emb, x, cfg, self.eng)
+        return logits[:, 0].astype(jnp.float32), cache
 
     def decode_step(self, params: Params, token: jax.Array, pos: jax.Array,
                     cache: Params, memory: Optional[jax.Array] = None

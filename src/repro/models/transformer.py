@@ -63,11 +63,30 @@ def block_init(key, cfg: ModelConfig, kind: str) -> Params:
 
 
 def block_cache_init(cfg: ModelConfig, kind: str, batch: int,
-                     max_len: int) -> Optional[Params]:
+                     max_len: int,
+                     paged: Optional[Dict[str, int]] = None
+                     ) -> Optional[Params]:
+    """Per-block decode cache. `paged={"num_blocks": NB, "block_size": bs}`
+    switches full-attention KV caches to the block-pool layout (pool +
+    per-lane block table; block 0 is the shared trash block, see
+    layers.paged_pool_write). Sliding-window layers keep the contiguous
+    ring — their residency is already bounded by the window — as do
+    recurrent/SSM states (O(1) per lane)."""
     if kind in ("attn", "xdec"):
         T = max_len
         if cfg.sliding_window is not None:
             T = min(T, cfg.sliding_window)
+        if paged is not None and cfg.sliding_window is None:
+            nb, bs = paged["num_blocks"], paged["block_size"]
+            mbl = -(-max_len // bs)
+            return {
+                "kpool": jnp.zeros((nb, bs, cfg.n_kv_heads, cfg.head_dim),
+                                   cfg.cdtype),
+                "vpool": jnp.zeros((nb, bs, cfg.n_kv_heads, cfg.head_dim),
+                                   cfg.cdtype),
+                "table": jnp.zeros((batch, mbl), jnp.int32),
+                "len": jnp.zeros((), jnp.int32),
+            }
         return {
             "k": jnp.zeros((batch, T, cfg.n_kv_heads, cfg.head_dim), cfg.cdtype),
             "v": jnp.zeros((batch, T, cfg.n_kv_heads, cfg.head_dim), cfg.cdtype),
@@ -93,6 +112,7 @@ def block_apply(
     cache: Optional[Params] = None,
     memory: Optional[jax.Array] = None,
     causal: bool = True,
+    chunked: bool = False,
 ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
     """Returns (x, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
@@ -100,7 +120,8 @@ def block_apply(
     new_cache = cache
     if kind == "attn":
         o, new_cache = attention_apply(p["attn"], cfg, h, positions, eng,
-                                       kv_cache=cache, causal=causal)
+                                       kv_cache=cache, causal=causal,
+                                       chunked=chunked)
     elif kind == "rec":
         o, new_cache = rglru_apply(p["rec"], cfg, h, eng, state=cache)
     elif kind == "ssm":
@@ -111,7 +132,8 @@ def block_apply(
                                memory=memory)
     elif kind == "xdec":
         o, new_cache = attention_apply(p["attn"], cfg, h, positions, eng,
-                                       kv_cache=cache, causal=causal)
+                                       kv_cache=cache, causal=causal,
+                                       chunked=chunked)
         x = x + o
         hx = rmsnorm(p["norm_x"], x, cfg.norm_eps)
         o, _ = attention_apply(p["cross"], cfg, hx, positions, eng,
@@ -148,14 +170,16 @@ def stack_init(key, cfg: ModelConfig, pattern: Tuple[str, ...],
 
 
 def stack_cache_init(cfg: ModelConfig, pattern, n_groups, remainder,
-                     batch: int, max_len: int) -> Params:
+                     batch: int, max_len: int,
+                     paged: Optional[Dict[str, int]] = None) -> Params:
     scan_caches = []
     for kind in pattern:
-        c = block_cache_init(cfg, kind, batch, max_len)
+        c = block_cache_init(cfg, kind, batch, max_len, paged=paged)
         scan_caches.append(
             jax.tree.map(lambda v: jnp.broadcast_to(v[None], (n_groups,) + v.shape), c)
             if c is not None else None)
-    rem = [block_cache_init(cfg, kind, batch, max_len) for kind in remainder]
+    rem = [block_cache_init(cfg, kind, batch, max_len, paged=paged)
+           for kind in remainder]
     return {"scan": tuple(scan_caches), "rem": rem}
 
 
@@ -170,6 +194,7 @@ def stack_apply(
     caches: Optional[Params] = None,
     memory: Optional[jax.Array] = None,
     causal: bool = True,
+    chunked: bool = False,
 ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
     """Run the scanned groups then the remainder blocks."""
 
@@ -181,7 +206,7 @@ def stack_apply(
             xg, nc, aux = block_apply(
                 gp[s], cfg, kind, xg, positions, eng,
                 cache=None if gc is None else gc[s],
-                memory=memory, causal=causal)
+                memory=memory, causal=causal, chunked=chunked)
             new_caches.append(nc)
         return (xg, aux_acc + aux), tuple(new_caches)
 
@@ -210,7 +235,8 @@ def stack_apply(
     for i, kind in enumerate(rem_kinds):
         c = None if caches is None else caches["rem"][i]
         x, nc, a = block_apply(params["rem"][i], cfg, kind, x, positions,
-                               eng, cache=c, memory=memory, causal=causal)
+                               eng, cache=c, memory=memory, causal=causal,
+                               chunked=chunked)
         new_rem.append(nc)
         aux = aux + a
     new_caches = None

@@ -1,1 +1,2 @@
 from .engine import Request, ServeEngine
+from .replay import ReplayConfig, build_workload, run_replay, step_report

@@ -1,31 +1,65 @@
-"""Continuous-batching serving engine.
+"""Continuous-batching serving engine with a paged KV cache and
+disaggregated prefill/decode dispatch.
 
 A fixed pool of `slots` decode lanes shares one jitted decode step; a
-request queue feeds empty lanes. Prefill runs per-request (padded to the
-pool's prompt bucket) and writes that lane's slice of the batched KV
-cache; decode steps advance every active lane together. Finished lanes
-(EOS or max_tokens) are recycled immediately — the decode batch never
-drains waiting for stragglers, which is the serving-side analogue of the
-paper's pipeline never idling between vector elements (Table III).
+request queue feeds empty lanes. The two phases are dispatched through
+separately-compiled entry points so the PR-4 shape-aware autotuner
+(`dot_tiling="auto"`) buckets them independently:
 
-This is deliberately the simple slot-based continuous batching (vLLM-style
-paged KV is out of scope); the KV cache is a contiguous (B, T, H, D) ring
-per layer managed by the model's cache pytree.
+  * **Prefill** is GEMM-shaped: waiting requests are batched together,
+    their prompts right-padded to a shared pow2 length bucket and the
+    batch row count padded to a pow2 bucket, so `model.prefill` compiles
+    once per (batch, length) bucket instead of once per prompt length.
+    Per-lane `last_index` picks each prompt's real final position out of
+    the padded rows. A `prefill_chunk` knob splits long prompts into
+    fixed-size chunks interleaved with decode steps, so one long prompt
+    never stalls the running decode lanes.
+  * **Decode** stays GEMV-shaped: one token per active lane per step.
+
+KV memory defaults to the **paged** layout (`kv_layout="paged"`): each
+full-attention layer holds a block pool `(num_blocks, block_size, H, D)`
+plus per-lane block tables, so residency scales with live tokens instead
+of `slots * max_len`, and finished lanes return their blocks to the free
+list immediately. Block 0 is the shared trash block — padding rows and
+idle lanes write there. Attention reads the pool through a gather-free
+`dynamic_slice` walk (models/layers.py), and the paged decode is
+bit-identical to the contiguous oracle (`kv_layout="contiguous"`), which
+is kept both as the correctness reference and for sliding-window /
+recurrent state (those layers always stay contiguous — their residency
+is already bounded).
+
+Finished lanes (EOS or max_tokens) are recycled immediately — the decode
+batch never drains waiting for stragglers, which is the serving-side
+analogue of the paper's pipeline never idling between vector elements
+(Table III).
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from collections import deque
-from typing import Callable, Deque, Dict, List, Optional, Union
+from typing import Any, Deque, Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models.layers import TRASH_BLOCK, paged_scatter_rows
 from repro.models.model import Model
 
 __all__ = ["Request", "ServeEngine"]
+
+# Block kinds whose prefill is safe to right-pad: causal attention masks
+# padded positions out, and later decode steps overwrite their cache
+# slots position-for-position. Recurrent/SSM state advances on every
+# token, so padded tails would corrupt it — those families fall back to
+# exact-length single-request prefill.
+_PAD_SAFE_KINDS = frozenset({"attn", "cross", "xdec"})
+
+
+def _pow2_bucket(n: int, lo: int = 1) -> int:
+    return max(lo, 1 << max(0, math.ceil(math.log2(max(1, n)))))
 
 
 @dataclasses.dataclass
@@ -39,13 +73,26 @@ class Request:
     t_submit: float = 0.0
     t_first: Optional[float] = None
     t_done: Optional[float] = None
+    t_queue: float = 0.0                # seconds waited before prefill
+    finish_reason: Optional[str] = None  # eos | length | max_len | cache_full
+    # scheduler-step stamps: deterministic virtual-time analogues of the
+    # wall-clock fields, used by the replay bench so its committed
+    # baseline doesn't depend on host speed.
+    s_submit: Optional[int] = None
+    s_first: Optional[int] = None
+    s_done: Optional[int] = None
 
 
 class ServeEngine:
     def __init__(self, model: Model, params, *, slots: int = 4,
                  max_len: int = 512, greedy: bool = True,
                  dot_mode: Optional[str] = None,
-                 dot_tiling: Union[str, Dict[str, object], None] = None):
+                 dot_tiling: Union[str, Dict[str, object], None] = None,
+                 kv_layout: str = "paged",
+                 kv_block_size: int = 16,
+                 kv_blocks: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None,
+                 prefill_bucket_min: int = 8):
         # Per-deployment numerics override: serve the same checkpoint under
         # any registered DotEngine mode — every configs/olm_array
         # ARRAY_PRECISIONS width ("olm8" .. "olm32") routes decode GEMMs
@@ -92,71 +139,416 @@ class ServeEngine:
         self.slots = slots
         self.max_len = max_len
         self.greedy = greedy
-        self.cache = model.init_cache(slots, max_len)
+
+        cfg = model.cfg
+        kinds = tuple(cfg.block_pattern) + tuple(cfg.remainder_blocks)
+        # pow2 prompt bucketing needs right-padding to be harmless; see
+        # _PAD_SAFE_KINDS. Sliding-window models are excluded too: a pad
+        # tail longer than the window would wrap the ring and overwrite
+        # still-in-window positions. Both degrade to exact-length
+        # per-request prefill (the pre-bucketing behavior).
+        self._bucketed = (all(k in _PAD_SAFE_KINDS for k in kinds)
+                          and cfg.sliding_window is None)
+        self.prefill_bucket_min = prefill_bucket_min
+
+        if prefill_chunk is not None:
+            if not self._bucketed:
+                raise ValueError(
+                    "prefill_chunk requires an attention-only block "
+                    "pattern (recurrent/SSM state can't be chunk-padded)")
+            if cfg.sliding_window is not None:
+                raise ValueError(
+                    "prefill_chunk is not supported with sliding_window "
+                    "(ring caches can't take chunked writes)")
+            if prefill_chunk < 1 or max_len % prefill_chunk != 0:
+                raise ValueError(
+                    f"prefill_chunk must divide max_len ({max_len}); "
+                    f"got {prefill_chunk}")
+        self.prefill_chunk = prefill_chunk
+
+        if kv_layout not in ("paged", "contiguous"):
+            raise ValueError(f"unknown kv_layout {kv_layout!r}")
+        self.kv_layout = kv_layout
+        self.kv_block_size = kv_block_size
+        self._table: Optional[np.ndarray] = None
+        self._table_dirty = False
+        if kv_layout == "paged":
+            bs = kv_block_size
+            if bs < 1:
+                raise ValueError("kv_block_size must be >= 1")
+            mbl = -(-max_len // bs)        # blocks per lane at max_len
+            self.blocks_per_lane = mbl
+            if kv_blocks is None:
+                # usable default: every lane can reach half depth at once,
+                # and any single lane can reach full max_len (so slots=1
+                # engines can never hit cache_full) — plus the trash block
+                kv_blocks = 1 + max(mbl, -(-slots * mbl // 2))
+            if kv_blocks < 2:
+                raise ValueError("kv_blocks must be >= 2 (trash + 1 usable)")
+            self.kv_blocks = kv_blocks
+            self.cache = model.init_cache(
+                slots, max_len,
+                paged={"num_blocks": kv_blocks, "block_size": bs})
+            # host-side allocator: block ids 1..kv_blocks-1 are usable
+            # (0 is the trash block); LIFO free list so tests can observe
+            # block reuse deterministically
+            self._free: List[int] = list(range(kv_blocks - 1, 0, -1))
+            self._owned: Dict[int, List[int]] = {s: [] for s in range(slots)}
+            self._table = np.full((slots, mbl), TRASH_BLOCK, np.int32)
+            self.blocks_peak_used = 0
+        else:
+            self.kv_blocks = 0
+            self.blocks_per_lane = 0
+            self.blocks_peak_used = 0
+            self.cache = model.init_cache(slots, max_len)
         self.active: Dict[int, Request] = {}       # slot -> request
         self.pos = np.zeros((slots,), np.int32)
         self.last_tok = np.zeros((slots,), np.int32)
         self.queue: Deque[Request] = deque()
         self.memory = None                          # encdec/vlm stub memory
+        self.step_count = 0
+        self.pending_chunk: Optional[Dict[str, Any]] = None
 
-        self._decode = jax.jit(
-            lambda p, t, ps, c, m: model.decode_step(p, t, ps, c, m))
+        # Compile counters: the wrapped bodies bump the counter at trace
+        # time, i.e. exactly once per compiled input signature — this is
+        # what the prefill-bucket compile-count test observes.
+        self.prefill_traces = 0
+        self.decode_traces = 0
+
+        def _decode_fn(p, t, ps, c, m):
+            self.decode_traces += 1
+            return model.decode_step(p, t, ps, c, m)
+
+        def _prefill_fn(p, b, c, li):
+            self.prefill_traces += 1
+            return model.prefill(p, b, c, last_index=li)
+
+        def _chunk_fn(p, b, c, st, li):
+            self.prefill_traces += 1
+            return model.prefill_chunk(p, b, c, st, last_index=li)
+
+        self._decode = jax.jit(_decode_fn)
+        self._prefill = jax.jit(_prefill_fn)
+        self._prefill_chunk = jax.jit(_chunk_fn)
+        self._scatter = jax.jit(self._scatter_fn)
 
     # ------------- client API -------------
     def submit(self, req: Request):
+        P = len(req.prompt)
+        if P < 1 or P > self.max_len - 1:
+            raise ValueError(
+                f"prompt length {P} outside [1, max_len-1={self.max_len - 1}]")
         req.t_submit = time.monotonic()
+        req.s_submit = self.step_count
         self.queue.append(req)
 
     def run(self, *, max_steps: int = 10_000) -> List[Request]:
         done: List[Request] = []
         steps = 0
-        while (self.queue or self.active) and steps < max_steps:
-            self._fill_slots()
-            if not self.active:
-                break
-            self._decode_step(done)
+        while (self.queue or self.active or self.pending_chunk) \
+                and steps < max_steps:
+            self.step(done)
             steps += 1
         return done
 
-    # ------------- internals -------------
-    def _fill_slots(self):
-        for slot in range(self.slots):
-            if slot in self.active or not self.queue:
-                continue
-            req = self.queue.popleft()
-            self._prefill_into(slot, req)
-            self.active[slot] = req
+    def step(self, done: List[Request]):
+        """One scheduler iteration: advance/admit prefill work, then one
+        batched decode step for every active lane. Exposed so drivers
+        (the traffic-replay bench) can interleave submissions."""
+        self._schedule_prefill(done)
+        if self.active:
+            self._decode_step(done)
+        self.step_count += 1
 
-    def _prefill_into(self, slot: int, req: Request):
-        """Single-request prefill into one lane: run the prompt through a
-        fresh single-row cache, then scatter it into the pool."""
-        P = len(req.prompt)
-        row_cache = self.model.init_cache(1, self.max_len)
-        batch = {"tokens": jnp.asarray(req.prompt[None, :], jnp.int32)}
-        logits, row_cache, _mem = self.model.prefill(
-            self.params, batch, row_cache)
-        tok = int(jnp.argmax(logits[0]))
-        req.output.append(tok)
-        req.t_first = time.monotonic()
-        self.last_tok[slot] = tok
+    # ------------- block allocator (paged layout) -------------
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free) if self.kv_layout == "paged" else 0
+
+    def owned_blocks(self, slot: int) -> List[int]:
+        return list(self._owned[slot]) if self.kv_layout == "paged" else []
+
+    def _note_usage(self):
+        used = (self.kv_blocks - 1) - len(self._free)
+        self.blocks_peak_used = max(self.blocks_peak_used, used)
+
+    def _alloc_blocks(self, slot: int, n: int) -> bool:
+        """Give `slot` its next n blocks; all-or-nothing."""
+        if len(self._free) < n:
+            return False
+        for _ in range(n):
+            bid = self._free.pop()
+            j = len(self._owned[slot])
+            self._owned[slot].append(bid)
+            self._table[slot, j] = bid
+        self._table_dirty = True
+        self._note_usage()
+        return True
+
+    def _free_slot_blocks(self, slot: int):
+        owned = self._owned[slot]
+        if owned:
+            self._free.extend(reversed(owned))
+            self._owned[slot] = []
+            self._table[slot, :] = TRASH_BLOCK
+            self._table_dirty = True
+
+    def _flush_tables(self):
+        """Push the host-side block tables into the device cache pytree.
+        Must run before any decode step that follows an alloc/free: a
+        freed lane's stale table row would route its idle-lane writes
+        into blocks now owned by someone else."""
+        if not self._table_dirty:
+            return
+        t = jnp.asarray(self._table)
+
+        def walk(node):
+            if isinstance(node, dict):
+                if "kpool" in node:
+                    tt = t if node["table"].ndim == 2 else \
+                        jnp.broadcast_to(t[None], node["table"].shape)
+                    return {**node, "table": tt}
+                return {k: walk(v) for k, v in node.items()}
+            if isinstance(node, tuple):
+                return tuple(walk(v) for v in node)
+            if isinstance(node, list):
+                return [walk(v) for v in node]
+            return node
+
+        self.cache = walk(self.cache)
+        self._table_dirty = False
+
+    # ------------- prefill scheduling -------------
+    def _schedule_prefill(self, done: List[Request]):
+        if self.pending_chunk is not None:
+            self._advance_chunk(done)
+            return
+        free = [s for s in range(self.slots) if s not in self.active]
+        if not free or not self.queue:
+            return
+        head = self.queue[0]
+        if self.prefill_chunk and len(head.prompt) > self.prefill_chunk:
+            self._start_chunk(free[0], done)
+            return
+        batch: List[Tuple[int, Request]] = []
+        for slot in free:
+            if not self.queue:
+                break
+            req = self.queue[0]
+            if self.prefill_chunk and len(req.prompt) > self.prefill_chunk:
+                break  # long prompt: chunked on a later step, alone
+            if self.kv_layout == "paged":
+                need = -(-len(req.prompt) // self.kv_block_size)
+                if not self._alloc_blocks(slot, need):
+                    if not batch and not self.active:
+                        # nothing running and the whole free pool still
+                        # can't hold this prompt: it can never be served
+                        self.queue.popleft()
+                        self._finish(None, req, "cache_full", done)
+                        continue
+                    break  # wait for running lanes to free blocks
+            self.queue.popleft()
+            batch.append((slot, req))
+            if not self._bucketed:
+                break  # exact-length prefill: one request per call
+        if batch:
+            self._prefill_batch(batch, done)
+
+    def _prefill_batch(self, batch: List[Tuple[int, Request]],
+                       done: List[Request]):
+        """One batched GEMM-shaped prefill over up to len(free-slots)
+        waiting requests, padded to pow2 (rows, length) buckets."""
+        t_start = time.monotonic()
+        lens = [len(r.prompt) for _, r in batch]
+        n = len(batch)
+        if self._bucketed:
+            Sb = min(_pow2_bucket(max(lens), self.prefill_bucket_min),
+                     self.max_len)
+            Bp = _pow2_bucket(n)
+        else:
+            Sb, Bp = max(lens), n
+        tokens = np.zeros((Bp, Sb), np.int32)
+        last_idx = np.zeros((Bp,), np.int32)
+        slot_ids = np.zeros((Bp,), np.int32)
+        valid = np.zeros((Bp,), bool)
+        for i, (slot, req) in enumerate(batch):
+            tokens[i, :lens[i]] = req.prompt
+            last_idx[i] = lens[i] - 1
+            slot_ids[i] = slot
+            valid[i] = True
+        row_cache = self.model.init_cache(Bp, Sb)
+        logits, row_cache, _mem = self._prefill(
+            self.params, {"tokens": jnp.asarray(tokens)}, row_cache,
+            jnp.asarray(last_idx))
+        toks = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        self._scatter_rows(row_cache, slot_ids, valid, Sb)
+        now = time.monotonic()
+        for i, (slot, req) in enumerate(batch):
+            req.t_queue = t_start - req.t_submit
+            self._activate(slot, req, int(toks[i]), lens[i], now, done)
+
+    def _activate(self, slot: int, req: Request, first_tok: int, P: int,
+                  now: float, done: List[Request]):
+        req.output.append(first_tok)
+        req.t_first = now
+        req.s_first = self.step_count
+        self.last_tok[slot] = first_tok
         self.pos[slot] = P
+        self.active[slot] = req
+        reason = self._finish_reason(req, first_tok, P)
+        if reason:
+            self._finish(slot, req, reason, done)
 
-        def put_row(pool, row):
-            # "len" scalars: decode masks by per-lane pos, keep the max
-            if pool.ndim == 0:
-                return jnp.maximum(pool, row)
-            # the batch axis is the unique axis where shapes differ
-            # (slots vs 1); scatter the row into that lane
-            diff = [i for i in range(pool.ndim)
-                    if pool.shape[i] != row.shape[i]]
-            ax = diff[0] if diff else (1 if pool.ndim > 1 else 0)
-            idx = [0] * pool.ndim
-            idx[ax] = slot
-            return jax.lax.dynamic_update_slice(
-                pool, row.astype(pool.dtype), tuple(idx))
-        self.cache = jax.tree.map(put_row, self.cache, row_cache)
+    def _scatter_rows(self, row_cache, slot_ids, valid, Sb):
+        """Scatter a fresh (Bp, Sb) row cache into the lane pool. Paged
+        attention layers take the block route (padding and dummy rows land
+        in the trash block); everything else (contiguous k/v, SWA rings,
+        recurrent state) is written per-lane with a validity guard."""
+        blk_tables = None
+        if self.kv_layout == "paged":
+            bs = self.kv_block_size
+            nb = -(-Sb // bs)
+            bt = np.full((len(slot_ids), nb), TRASH_BLOCK, np.int32)
+            for i, slot in enumerate(slot_ids):
+                if valid[i]:
+                    owned = self._owned[int(slot)]
+                    take = min(len(owned), nb)
+                    bt[i, :take] = owned[:take]
+            blk_tables = jnp.asarray(bt)
+        self.cache = self._scatter(
+            self.cache, row_cache, jnp.asarray(slot_ids),
+            jnp.asarray(valid), blk_tables)
+        if self.kv_layout == "paged":
+            self._flush_tables()
+
+    def _scatter_fn(self, pool_cache, row_cache, slot_ids, valid,
+                    blk_tables):
+        """Jitted structural scatter of row_cache rows into pool_cache
+        lanes. Leaves under {"scan"} carry a leading pattern-group axis
+        (batch axis 1), {"rem"} leaves don't (batch axis 0); "len"
+        scalars max-combine; paged layers get the block-pool scatter."""
+        Bp = slot_ids.shape[0]
+
+        def put(pool, row, axis):
+            zero = jnp.zeros((), slot_ids.dtype)
+            for i in range(Bp):
+                ri = jax.lax.dynamic_slice_in_dim(row, i, 1, axis)
+                start = [zero] * pool.ndim
+                start[axis] = slot_ids[i]
+                cur = jax.lax.dynamic_slice(pool, tuple(start), ri.shape)
+                upd = jnp.where(valid[i], ri.astype(pool.dtype), cur)
+                pool = jax.lax.dynamic_update_slice(pool, upd, tuple(start))
+            return pool
+
+        def walk(pn, rn, stacked):
+            if pn is None:
+                return None
+            if isinstance(pn, dict):
+                if "kpool" in pn:
+                    f = paged_scatter_rows
+                    if stacked:
+                        f = jax.vmap(f, in_axes=(0, 0, None))
+                    return {"kpool": f(pn["kpool"], rn["k"], blk_tables),
+                            "vpool": f(pn["vpool"], rn["v"], blk_tables),
+                            "table": pn["table"],
+                            "len": jnp.maximum(pn["len"], rn["len"])}
+                return {k: (jnp.maximum(pn[k], rn[k]) if k == "len"
+                            else walk(pn[k], rn[k], stacked)) for k in pn}
+            return put(pn, rn, 1 if stacked else 0)
+
+        return {
+            "scan": tuple(walk(a, b, True) for a, b in
+                          zip(pool_cache["scan"], row_cache["scan"])),
+            "rem": [walk(a, b, False) for a, b in
+                    zip(pool_cache["rem"], row_cache["rem"])],
+        }
+
+    # ------------- chunked prefill -------------
+    def _start_chunk(self, slot: int, done: List[Request]):
+        req = self.queue[0]
+        P = len(req.prompt)
+        chunk = self.prefill_chunk
+        nchunks = -(-P // chunk)
+        total = nchunks * chunk            # <= max_len: chunk | max_len
+        if self.kv_layout == "paged":
+            need = -(-P // self.kv_block_size)
+            if not self._alloc_blocks(slot, need):
+                if not self.active:
+                    self.queue.popleft()
+                    self._finish(None, req, "cache_full", done)
+                return
+        self.queue.popleft()
+        req.t_queue = time.monotonic() - req.t_submit
+        self.pending_chunk = {
+            "req": req, "slot": slot, "next": 0, "nchunks": nchunks,
+            "row_cache": self.model.init_cache(1, total),
+        }
+
+    def _advance_chunk(self, done: List[Request]):
+        """Run one prompt chunk; decode lanes keep stepping in between."""
+        c = self.pending_chunk
+        req, slot, chunk = c["req"], c["slot"], self.prefill_chunk
+        P = len(req.prompt)
+        s0 = c["next"] * chunk
+        piece = np.zeros((1, chunk), np.int32)
+        real = req.prompt[s0:s0 + chunk]
+        piece[0, :len(real)] = real
+        is_last = c["next"] == c["nchunks"] - 1
+        li = np.asarray([(P - 1 - s0) if is_last else chunk - 1], np.int32)
+        logits, c["row_cache"] = self._prefill_chunk(
+            self.params, {"tokens": jnp.asarray(piece)}, c["row_cache"],
+            jnp.asarray(s0, jnp.int32), jnp.asarray(li))
+        c["next"] += 1
+        if not is_last:
+            return
+        self.pending_chunk = None
+        self._scatter_rows(c["row_cache"], np.asarray([slot], np.int32),
+                           np.asarray([True]), c["nchunks"] * chunk)
+        tok = int(np.asarray(jnp.argmax(logits[0])))
+        self._activate(slot, req, tok, P, time.monotonic(), done)
+
+    # ------------- decode -------------
+    def _finish_reason(self, req: Request, tok: int, pos: int
+                       ) -> Optional[str]:
+        if req.eos_id is not None and tok == req.eos_id:
+            return "eos"
+        if len(req.output) >= req.max_new_tokens:
+            return "length"
+        if pos >= self.max_len - 1:
+            return "max_len"
+        return None
+
+    def _finish(self, slot: Optional[int], req: Request, reason: str,
+                done: List[Request]):
+        req.finish_reason = reason
+        req.t_done = time.monotonic()
+        req.s_done = self.step_count
+        done.append(req)
+        if slot is not None:
+            self.active.pop(slot, None)
+            self.pos[slot] = 0
+            self.last_tok[slot] = 0
+            if self.kv_layout == "paged":
+                self._free_slot_blocks(slot)
+
+    def _ensure_decode_blocks(self, done: List[Request]):
+        """Pre-step block allocation: a lane about to write position p
+        needs block p // bs; grant it or terminate the request with
+        finish_reason="cache_full"."""
+        bs = self.kv_block_size
+        for slot, req in list(self.active.items()):
+            j = int(self.pos[slot]) // bs
+            if j < len(self._owned[slot]):
+                continue
+            if not self._alloc_blocks(slot, 1):
+                self._finish(slot, req, "cache_full", done)
 
     def _decode_step(self, done: List[Request]):
+        if self.kv_layout == "paged":
+            self._ensure_decode_blocks(done)
+            self._flush_tables()
+            if not self.active:
+                return
         toks = jnp.asarray(self.last_tok)
         pos = jnp.asarray(self.pos)
         logits, self.cache = self._decode(
@@ -167,23 +559,82 @@ class ServeEngine:
             req.output.append(t)
             self.pos[slot] += 1
             self.last_tok[slot] = t
-            finished = (len(req.output) >= req.max_new_tokens or
-                        (req.eos_id is not None and t == req.eos_id) or
-                        int(self.pos[slot]) >= self.max_len - 1)
-            if finished:
-                req.t_done = time.monotonic()
-                done.append(req)
-                del self.active[slot]
+            reason = self._finish_reason(req, t, int(self.pos[slot]))
+            if reason:
+                self._finish(slot, req, reason, done)
 
     # ------------- metrics -------------
     @staticmethod
     def latency_report(done: List[Request]) -> Dict[str, float]:
+        """Wall-clock latency summary: mean/p50/p99 TTFT and end-to-end,
+        queue wait, and aggregate tokens/s over the span of the batch."""
         if not done:
             return {}
+
+        def pcts(vals):
+            if not vals:
+                nan = float("nan")
+                return nan, nan, nan
+            return (float(np.mean(vals)),
+                    float(np.percentile(vals, 50)),
+                    float(np.percentile(vals, 99)))
+
         ttft = [r.t_first - r.t_submit for r in done if r.t_first]
         e2e = [r.t_done - r.t_submit for r in done if r.t_done]
+        queue = [r.t_queue for r in done]
+        ttft_mean, ttft_p50, ttft_p99 = pcts(ttft)
+        e2e_mean, e2e_p50, e2e_p99 = pcts(e2e)
+        new_tokens = sum(len(r.output) for r in done)
+        t0 = min(r.t_submit for r in done)
+        t1 = max((r.t_done for r in done if r.t_done), default=t0)
+        span = max(t1 - t0, 1e-9)
         return {
             "n": len(done),
-            "ttft_mean_s": float(np.mean(ttft)) if ttft else float("nan"),
-            "e2e_mean_s": float(np.mean(e2e)) if e2e else float("nan"),
+            "ttft_mean_s": ttft_mean,
+            "ttft_p50_s": ttft_p50,
+            "ttft_p99_s": ttft_p99,
+            "e2e_mean_s": e2e_mean,
+            "e2e_p50_s": e2e_p50,
+            "e2e_p99_s": e2e_p99,
+            "queue_wait_mean_s": float(np.mean(queue)),
+            "new_tokens": new_tokens,
+            "tokens_per_s": new_tokens / span,
+        }
+
+    def kv_report(self) -> Dict[str, int]:
+        """KV residency accounting: bytes actually resident for attention
+        K/V storage under the current layout vs what the contiguous
+        `slots * max_len` layout would pin. Deterministic (pure shape
+        math), so the replay bench baselines it exactly."""
+        kv_keys = {"k", "v", "kpool", "vpool"}
+
+        def nbytes(tree) -> int:
+            total = 0
+
+            def walk(node):
+                nonlocal total
+                if isinstance(node, dict):
+                    for key, val in node.items():
+                        if key in kv_keys:
+                            total += int(np.prod(val.shape)) * val.dtype.itemsize
+                        else:
+                            walk(val)
+                elif isinstance(node, (tuple, list)):
+                    for val in node:
+                        walk(val)
+
+            walk(tree)
+            return total
+
+        resident = nbytes(self.cache)
+        contiguous = nbytes(jax.eval_shape(
+            lambda: self.model.init_cache(self.slots, self.max_len)))
+        return {
+            "kv_layout": self.kv_layout,
+            "kv_bytes_resident": resident,
+            "kv_bytes_contiguous": contiguous,
+            "kv_block_size": self.kv_block_size if self.kv_layout == "paged" else 0,
+            "kv_blocks_usable": max(self.kv_blocks - 1, 0),
+            "kv_blocks_free": self.free_blocks,
+            "kv_blocks_peak_used": self.blocks_peak_used,
         }

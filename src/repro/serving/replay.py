@@ -1,0 +1,117 @@
+"""Deterministic traffic-replay harness for the serving engine.
+
+A seeded arrival process generates a fixed workload (arrival step, prompt,
+max_new_tokens per request); `run_replay` drives a ServeEngine one
+scheduler step at a time, submitting requests when their arrival step
+comes up, and reports latency percentiles in **scheduler steps** — the
+engine's virtual clock — rather than wall time. Step metrics are a pure
+function of the workload and the scheduler logic (requests use
+eos_id=None, so termination never depends on sampled token values),
+which makes them stable across hosts and JAX versions: the replay bench
+commits them to `results/baseline/` and `tools/check_bench.py` diffs
+every run against that seed. Wall-clock figures are reported alongside
+for humans but never gated.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .engine import Request, ServeEngine
+
+__all__ = ["ReplayConfig", "build_workload", "run_replay", "step_report"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplayConfig:
+    seed: int = 0
+    n_requests: int = 24
+    mean_interarrival_steps: float = 2.0
+    prompt_len_range: Tuple[int, int] = (4, 24)   # inclusive
+    max_new_range: Tuple[int, int] = (4, 10)      # inclusive
+    vocab: int = 512
+
+
+def build_workload(cfg: ReplayConfig) -> List[Dict[str, object]]:
+    """Seeded arrival schedule: [{arrival_step, prompt, max_new}, ...],
+    sorted by arrival. numpy Generator bit streams are stable across
+    numpy versions, so the same seed is the same workload everywhere."""
+    rng = np.random.default_rng(cfg.seed)
+    gaps = rng.geometric(1.0 / max(cfg.mean_interarrival_steps, 1.0),
+                         cfg.n_requests) - 1
+    arrivals = np.cumsum(gaps)
+    lo, hi = cfg.prompt_len_range
+    lens = rng.integers(lo, hi + 1, cfg.n_requests)
+    nlo, nhi = cfg.max_new_range
+    max_new = rng.integers(nlo, nhi + 1, cfg.n_requests)
+    return [
+        {
+            "arrival_step": int(arrivals[i]),
+            "prompt": rng.integers(1, cfg.vocab, int(lens[i])).astype(np.int32),
+            "max_new": int(max_new[i]),
+        }
+        for i in range(cfg.n_requests)
+    ]
+
+
+def run_replay(engine: ServeEngine, workload: List[Dict[str, object]],
+               *, max_steps: int = 100_000
+               ) -> Tuple[List[Request], Dict[str, float]]:
+    """Drive the engine through the workload; returns (done, step_report).
+
+    Requests are submitted when the engine's step counter reaches their
+    arrival step, so queueing pressure replays identically every run.
+    """
+    pending = sorted(workload, key=lambda w: w["arrival_step"])
+    reqs = [Request(rid=i, prompt=w["prompt"], max_new_tokens=w["max_new"],
+                    eos_id=None)
+            for i, w in enumerate(pending)]
+    done: List[Request] = []
+    i = 0
+    t0 = time.monotonic()
+    for _ in range(max_steps):
+        while i < len(pending) and \
+                pending[i]["arrival_step"] <= engine.step_count:
+            engine.submit(reqs[i])
+            i += 1
+        if i == len(pending) and not engine.queue and not engine.active \
+                and engine.pending_chunk is None:
+            break
+        engine.step(done)
+    wall_s = time.monotonic() - t0
+    report = step_report(done)
+    report["wall_s"] = wall_s
+    return done, report
+
+
+def step_report(done: List[Request]) -> Dict[str, float]:
+    """Latency percentiles in scheduler steps (deterministic; see module
+    docstring). p50/p99 use numpy's default linear interpolation."""
+    if not done:
+        return {}
+
+    def pcts(vals):
+        return (round(float(np.percentile(vals, 50)), 4),
+                round(float(np.percentile(vals, 99)), 4))
+
+    ttft = [r.s_first - r.s_submit for r in done if r.s_first is not None]
+    e2e = [r.s_done - r.s_submit for r in done if r.s_done is not None]
+    ttft_p50, ttft_p99 = pcts(ttft) if ttft else (float("nan"),) * 2
+    e2e_p50, e2e_p99 = pcts(e2e) if e2e else (float("nan"),) * 2
+    new_tokens = sum(len(r.output) for r in done)
+    steps = max(max((r.s_done for r in done if r.s_done is not None),
+                    default=1), 1)
+    return {
+        "n": len(done),
+        "ttft_steps_p50": ttft_p50,
+        "ttft_steps_p99": ttft_p99,
+        "e2e_steps_p50": e2e_p50,
+        "e2e_steps_p99": e2e_p99,
+        "new_tokens": new_tokens,
+        "steps_total": steps,
+        "tokens_per_step": round(new_tokens / steps, 4),
+        "n_cache_full": sum(r.finish_reason == "cache_full" for r in done),
+    }

@@ -201,6 +201,31 @@ def test_ast_transcendental_scale_flagged(tmp_path):
     assert [r for r, _, _, _ in found] == ["ast-transcendental-scale"]
 
 
+def test_ast_serving_contraction_flagged(tmp_path):
+    found = _lint_src(tmp_path, "src/repro/serving/sched.py",
+                      "import jax.numpy as jnp\n"
+                      "def f(a, b):\n    return jnp.einsum('ij,jk', a, b)\n")
+    assert [(r, q) for r, _, _, q in found] == \
+        [("ast-serving-contraction", "f")]
+
+
+def test_ast_serving_raw_dot_double_flagged(tmp_path):
+    # lax.dot_general in serving trips both the repo-wide raw-dot rule
+    # and the serving-scheduler rule.
+    found = _lint_src(tmp_path, "src/repro/serving/sched.py",
+                      "from jax import lax\n"
+                      "def f(a, b, d):\n    return lax.dot_general(a, b, d)\n")
+    assert sorted(r for r, _, _, _ in found) == \
+        ["ast-raw-dot", "ast-serving-contraction"]
+
+
+def test_ast_einsum_fine_outside_serving(tmp_path):
+    found = _lint_src(tmp_path, "src/repro/models/new_layer.py",
+                      "import jax.numpy as jnp\n"
+                      "def f(a, b):\n    return jnp.einsum('ij,jk', a, b)\n")
+    assert found == []
+
+
 def test_ast_repo_clean_under_committed_baseline():
     violations, _, unused = run_ast_lint()
     assert violations == [], "\n".join(str(v) for v in violations)

@@ -1,0 +1,296 @@
+"""Serving-engine tests: paged KV cache vs the contiguous oracle,
+block-table accounting, prefill bucketing/compile counts, chunked
+prefill, termination reasons, and the deterministic replay harness.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.numerics import DotEngine
+from repro.models.config import ModelConfig
+from repro.models.model import Model
+from repro.serving.engine import Request, ServeEngine
+from repro.serving.replay import ReplayConfig, build_workload, run_replay
+
+VOCAB = 512
+
+
+def _tiny_cfg(**over):
+    base = dict(name="t", family="dense", n_layers=2, d_model=16,
+                n_heads=2, n_kv_heads=2, d_ff=32, vocab_size=VOCAB,
+                param_dtype="float32", compute_dtype="float32")
+    base.update(over)
+    return ModelConfig(**base)
+
+
+def _tiny_model(mode="native", **eng_over):
+    model = Model(_tiny_cfg(), DotEngine(mode=mode, **eng_over))
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _prompts(lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, VOCAB, n).astype(np.int32) for n in lens]
+
+
+def _serve(model, params, prompts, *, max_new=4, eos_id=None, **kw):
+    eng = ServeEngine(model, params, **kw)
+    for rid, p in enumerate(prompts):
+        eng.submit(Request(rid=rid, prompt=p, max_new_tokens=max_new,
+                           eos_id=eos_id))
+    done = eng.run()
+    return eng, sorted(done, key=lambda r: r.rid)
+
+
+class TestTermination:
+    def test_length_and_slot_recycling(self):
+        model, params = _tiny_model()
+        eng, done = _serve(model, params, _prompts([3, 5, 4, 6, 3, 7]),
+                           max_new=4, slots=2, max_len=16,
+                           kv_block_size=4, kv_blocks=9)
+        assert len(done) == 6               # 6 requests through 2 slots
+        assert all(r.finish_reason == "length" for r in done)
+        assert all(len(r.output) == 4 for r in done)
+        # every lane drained and returned its blocks
+        assert not eng.active
+        assert eng.free_blocks == eng.kv_blocks - 1
+        assert all(eng.owned_blocks(s) == [] for s in range(eng.slots))
+
+    def test_eos(self):
+        model, params = _tiny_model()
+        _, base = _serve(model, params, _prompts([5]), max_new=6,
+                         slots=1, max_len=16)
+        eos = base[0].output[1]             # greedy decode is deterministic
+        _, done = _serve(model, params, _prompts([5]), max_new=6,
+                         eos_id=eos, slots=1, max_len=16)
+        assert done[0].finish_reason == "eos"
+        assert done[0].output == base[0].output[:2]
+
+    def test_max_len(self):
+        model, params = _tiny_model()
+        _, done = _serve(model, params, _prompts([12]), max_new=20,
+                         slots=1, max_len=16)
+        assert done[0].finish_reason == "max_len"
+        # positions 12..15 get written: 4 new tokens fit before the wall
+        assert len(done[0].output) == 4
+
+    def test_cache_full_admission_deadlock(self):
+        model, params = _tiny_model()
+        # 9-token prompt needs 3 blocks; pool has 2 usable and nothing
+        # running to wait for -> immediate cache_full, never activated
+        _, done = _serve(model, params, _prompts([9]), max_new=4,
+                         slots=1, max_len=16, kv_block_size=4, kv_blocks=3)
+        assert done[0].finish_reason == "cache_full"
+        assert done[0].output == []
+        assert done[0].s_done is not None
+
+    def test_cache_full_mid_decode(self):
+        model, params = _tiny_model()
+        # prompt fills both usable blocks; the first decode write needs a
+        # third -> terminate with what we have
+        _, done = _serve(model, params, _prompts([4]), max_new=6,
+                         slots=1, max_len=16, kv_block_size=2, kv_blocks=3)
+        assert done[0].finish_reason == "cache_full"
+        assert len(done[0].output) == 1     # prefill token only
+
+    def test_prompt_length_validated(self):
+        model, params = _tiny_model()
+        eng = ServeEngine(model, params, slots=1, max_len=8)
+        with pytest.raises(ValueError, match="prompt length"):
+            eng.submit(Request(rid=0, prompt=np.zeros(8, np.int32)))
+        with pytest.raises(ValueError, match="prompt length"):
+            eng.submit(Request(rid=1, prompt=np.zeros(0, np.int32)))
+
+
+class TestBlockAccounting:
+    def test_lifo_reuse(self):
+        model, params = _tiny_model()
+        eng = ServeEngine(model, params, slots=1, max_len=16,
+                          kv_block_size=4)
+        done = []
+        # 7-token prompt: 2 blocks, and the first decode write (pos 7)
+        # still lands in block 1 — owned stays [1, 2] across the step
+        eng.submit(Request(rid=0, prompt=_prompts([7])[0],
+                           max_new_tokens=4))
+        eng.step(done)
+        first = eng.owned_blocks(0)
+        assert first == [1, 2]              # free list pops low ids first
+        eng.run()
+        assert eng.owned_blocks(0) == []
+        eng.submit(Request(rid=1, prompt=_prompts([7], seed=1)[0],
+                           max_new_tokens=4))
+        eng.step(done)
+        assert eng.owned_blocks(0) == first  # freed blocks reused LIFO
+        eng.run()
+
+    def test_peak_usage_tracked_within_pool(self):
+        model, params = _tiny_model()
+        eng, _ = _serve(model, params, _prompts([6, 7, 5, 6]), max_new=4,
+                        slots=2, max_len=16, kv_block_size=4)
+        usable = eng.kv_blocks - 1
+        assert 0 < eng.blocks_peak_used <= usable
+        assert eng.kv_report()["kv_blocks_peak_used"] == eng.blocks_peak_used
+
+    def test_kv_report_resident_below_contiguous(self):
+        model, params = _tiny_model()
+        eng, _ = _serve(model, params, _prompts([5, 6]), max_new=3,
+                        slots=4, max_len=64, kv_block_size=8, kv_blocks=9)
+        rep = eng.kv_report()
+        assert rep["kv_layout"] == "paged"
+        assert 0 < rep["kv_bytes_resident"] < rep["kv_bytes_contiguous"]
+        assert rep["kv_blocks_free"] == rep["kv_blocks_usable"] == 8
+        ceng, _ = _serve(model, params, _prompts([5, 6]), max_new=3,
+                         slots=4, max_len=64, kv_layout="contiguous")
+        crep = ceng.kv_report()
+        assert crep["kv_bytes_resident"] == crep["kv_bytes_contiguous"]
+        assert crep["kv_bytes_contiguous"] == rep["kv_bytes_contiguous"]
+
+
+class TestPagedIdentity:
+    @pytest.mark.parametrize("mode", sorted(DotEngine.modes()))
+    def test_paged_matches_contiguous_every_dot_mode(self, mode):
+        # olm32's broadcast oracle refuses inside an outer jit without
+        # ambient x64; the Pallas interpret path never needs x64, so the
+        # wide modes take it — same dispatch a real deployment uses.
+        use_pallas = mode in ("olm24", "olm32")
+        model, params = _tiny_model(mode, use_pallas=use_pallas)
+        prompts = _prompts([3, 6, 5])
+        kw = dict(max_new=4, slots=2, max_len=16)
+        _, paged = _serve(model, params, prompts, kv_layout="paged",
+                          kv_block_size=4, kv_blocks=9, **kw)
+        _, contig = _serve(model, params, prompts, kv_layout="contiguous",
+                           **kw)
+        for p, c in zip(paged, contig):
+            assert p.output == c.output, mode
+
+    def test_engine_matches_offline_decode_paged(self):
+        model, params = _tiny_model()
+        prompt = _prompts([5])[0]
+        _, done = _serve(model, params, [prompt], max_new=4, slots=2,
+                         max_len=32, kv_block_size=8)
+        cache = model.init_cache(1, 32)
+        lg, cache, mem = model.prefill(
+            params, {"tokens": jnp.asarray(prompt[None])}, cache)
+        toks = [int(jnp.argmax(lg[0]))]
+        pos = len(prompt)
+        for _ in range(3):
+            lg, cache = model.decode_step(
+                params, jnp.asarray([toks[-1]]), jnp.asarray([pos]),
+                cache, mem)
+            toks.append(int(jnp.argmax(lg[0])))
+            pos += 1
+        assert done[0].output == toks
+
+
+class TestPrefillBuckets:
+    def test_compile_count_stays_at_bucket_count(self):
+        model, params = _tiny_model()
+        eng = ServeEngine(model, params, slots=4, max_len=32,
+                          prefill_bucket_min=8)
+        assert eng._bucketed
+        done = []
+        # 4 distinct prompt lengths, one shared (4, 8) bucket -> 1 trace
+        for rid, p in enumerate(_prompts([3, 4, 5, 6])):
+            eng.submit(Request(rid=rid, prompt=p, max_new_tokens=3))
+        eng.run()
+        assert eng.prefill_traces == 1
+        assert eng.decode_traces == 1
+        # new lengths, same buckets -> no new compiles
+        for rid, p in enumerate(_prompts([7, 8, 6, 5], seed=1), start=4):
+            eng.submit(Request(rid=rid, prompt=p, max_new_tokens=3))
+        eng.run()
+        assert eng.prefill_traces == 1
+        # longer prompts cross into the (1, 16) bucket -> exactly 1 more
+        eng.submit(Request(rid=8, prompt=_prompts([12])[0],
+                           max_new_tokens=3))
+        eng.run()
+        assert eng.prefill_traces == 2
+        assert eng.decode_traces == 1       # decode shape never changes
+
+    def test_bucketing_disabled_for_sliding_window(self):
+        model = Model(_tiny_cfg(sliding_window=8), DotEngine())
+        params = model.init(jax.random.PRNGKey(0))
+        eng = ServeEngine(model, params, slots=2, max_len=16,
+                          kv_layout="contiguous")
+        assert not eng._bucketed
+        with pytest.raises(ValueError, match="sliding_window|attention-only"):
+            ServeEngine(model, params, slots=2, max_len=16,
+                        kv_layout="contiguous", prefill_chunk=4)
+        # exact-length prefill still serves correctly
+        for rid, p in enumerate(_prompts([4, 6])):
+            eng.submit(Request(rid=rid, prompt=p, max_new_tokens=3))
+        done = eng.run()
+        assert sorted(r.rid for r in done) == [0, 1]
+        assert all(len(r.output) == 3 for r in done)
+
+
+class TestChunkedPrefill:
+    def test_chunked_identical_to_unchunked(self):
+        model, params = _tiny_model()
+        prompts = _prompts([10, 3, 7])
+        kw = dict(max_new=4, slots=2, max_len=16, kv_block_size=4,
+                  kv_blocks=11)
+        _, plain = _serve(model, params, prompts, **kw)
+        _, chunked = _serve(model, params, prompts, prefill_chunk=4, **kw)
+        for p, c in zip(plain, chunked):
+            assert p.output == c.output
+
+    def test_chunk_must_divide_max_len(self):
+        model, params = _tiny_model()
+        with pytest.raises(ValueError, match="divide max_len"):
+            ServeEngine(model, params, slots=1, max_len=16,
+                        prefill_chunk=5)
+
+
+class TestReplay:
+    def test_workload_deterministic(self):
+        cfg = ReplayConfig(seed=3, n_requests=6, vocab=VOCAB)
+        a, b = build_workload(cfg), build_workload(cfg)
+        assert [w["arrival_step"] for w in a] == \
+            [w["arrival_step"] for w in b]
+        for wa, wb in zip(a, b):
+            np.testing.assert_array_equal(wa["prompt"], wb["prompt"])
+            assert wa["max_new"] == wb["max_new"]
+
+    def test_replay_step_metrics_stable_across_runs(self):
+        model, params = _tiny_model()
+        cfg = ReplayConfig(seed=0, n_requests=6, prompt_len_range=(2, 6),
+                           max_new_range=(2, 4), vocab=VOCAB)
+        wl = build_workload(cfg)
+
+        def go():
+            eng = ServeEngine(model, params, slots=2, max_len=16,
+                              kv_block_size=4, kv_blocks=9)
+            done, rep = run_replay(eng, wl)
+            rep.pop("wall_s")
+            return rep, {r.rid: r.output for r in done}
+
+        rep_a, out_a = go()
+        rep_b, out_b = go()
+        assert rep_a == rep_b
+        assert out_a == out_b
+        assert rep_a["n"] == 6
+        assert rep_a["ttft_steps_p99"] >= rep_a["ttft_steps_p50"] >= 0
+        assert rep_a["e2e_steps_p99"] >= rep_a["e2e_steps_p50"] >= 0
+
+
+class TestLatencyReport:
+    def test_fields_present_and_ordered(self):
+        model, params = _tiny_model()
+        _, done = _serve(model, params, _prompts([3, 5, 4]), max_new=3,
+                         slots=2, max_len=16, kv_block_size=4)
+        rep = ServeEngine.latency_report(done)
+        for k in ("n", "ttft_mean_s", "ttft_p50_s", "ttft_p99_s",
+                  "e2e_mean_s", "e2e_p50_s", "e2e_p99_s",
+                  "queue_wait_mean_s", "new_tokens", "tokens_per_s"):
+            assert k in rep, k
+        assert rep["n"] == 3
+        assert rep["new_tokens"] == 9
+        assert rep["ttft_p99_s"] >= rep["ttft_p50_s"] >= 0
+        assert rep["e2e_p99_s"] >= rep["e2e_p50_s"] >= 0
+        assert rep["tokens_per_s"] > 0
+        assert ServeEngine.latency_report([]) == {}

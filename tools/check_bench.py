@@ -19,6 +19,18 @@ runnable tool. Three independent checks (all on by default):
               present in the seed may not disappear. Wall-clock (us) is
               never compared — too noisy for shared CI runners; the
               JSON artifacts track it.
+  serving   — from results/bench/BENCH_serve_replay.json: the traffic-
+              replay serving bench must cover its full row schema
+              (scheduler-step latency percentiles, completion counts,
+              KV residency for both layouts), every request must
+              complete, and the paged layout's resident KV bytes must
+              sit STRICTLY below the contiguous slots*max_len figure —
+              the whole point of the paged cache. Scheduler-step
+              latency rows are deterministic (eos-free replay on a
+              virtual clock), so the baseline check also diffs them;
+              serve_replay/* rows get `derived` compared within --tol
+              (percentile interpolation emits floats) while KV byte
+              columns stay exact.
   tuning    — results/tuning.json must parse against the TuningCache
               schema, and for every cached entry the value
               `tiling="auto"` would actually serve (get_tiling on the
@@ -116,8 +128,19 @@ def check_baseline(bench_dir: str, baseline_dir: str, tol: float) -> None:
         for key, w in sorted(want.items()):
             g = got[key]
             # exact: traffic columns and `derived` are analytic counts/
-            # ratios — a single byte or ratio tick is a real regression
+            # ratios — a single byte or ratio tick is a real regression.
+            # Exception: serve_replay latency rows carry percentile-
+            # interpolated floats in `derived`; those get the ulp-style
+            # relative tolerance (KV byte columns stay exact).
+            serving_row = str(key[0]).startswith("serve_replay/")
             for col in ("bytes_moved", "bytes_float", "derived"):
+                if serving_row and col == "derived":
+                    if not _close(w.get(col), g.get(col), tol):
+                        raise CheckFailure(
+                            f"{name} {key}: {col} {g.get(col)} vs baseline "
+                            f"{w.get(col)} exceeds rel tol {tol} "
+                            "(serving latency regression)")
+                    continue
                 if w.get(col) != g.get(col):
                     raise CheckFailure(
                         f"{name} {key}: {col} {g.get(col)} != baseline "
@@ -130,6 +153,58 @@ def check_baseline(bench_dir: str, baseline_dir: str, tol: float) -> None:
                     f"{w.get('ulp')} exceeds rel tol {tol}")
         print(f"  baseline {name}: {len(want)} rows match "
               f"(bytes/derived exact, ulp within {tol:.0%})")
+
+
+_SERVING_REQUIRED_OPS = (
+    "serve_replay/ttft_p50", "serve_replay/ttft_p99",
+    "serve_replay/e2e_p50", "serve_replay/e2e_p99",
+    "serve_replay/tokens_per_step", "serve_replay/completed",
+    "serve_replay/cache_full", "serve_replay/prefill_compiles",
+    "serve_replay/blocks_peak", "serve_replay/kv_paged",
+    "serve_replay/kv_contig",
+)
+
+
+def check_serving(bench_dir: str) -> None:
+    """Serving replay schema + the paged-residency invariant."""
+    rows = {r["op"]: r
+            for r in _load(os.path.join(bench_dir,
+                                        "BENCH_serve_replay.json"))["rows"]}
+    if missing := set(_SERVING_REQUIRED_OPS) - set(rows):
+        raise CheckFailure(
+            f"serve_replay bench is missing rows {sorted(missing)}: the "
+            "serving schema may not silently narrow")
+    for op in ("serve_replay/ttft_p50", "serve_replay/ttft_p99",
+               "serve_replay/e2e_p50", "serve_replay/e2e_p99",
+               "serve_replay/tokens_per_step"):
+        d = rows[op]["derived"]
+        if not isinstance(d, (int, float)) or not d >= 0:
+            raise CheckFailure(f"{op}: derived must be a number >= 0, "
+                               f"got {d!r}")
+    if rows["serve_replay/ttft_p99"]["derived"] < \
+            rows["serve_replay/ttft_p50"]["derived"]:
+        raise CheckFailure("ttft p99 below p50 — percentiles are broken")
+    n = rows["serve_replay/completed"]["derived"]
+    if not isinstance(n, int) or n < 1:
+        raise CheckFailure(f"completed must be a positive int, got {n!r}")
+    paged = rows["serve_replay/kv_paged"]
+    contig = rows["serve_replay/kv_contig"]
+    for r, cols in ((paged, ("bytes_moved", "bytes_float")),
+                    (contig, ("bytes_moved",))):
+        for col in cols:
+            if not isinstance(r.get(col), int) or r[col] <= 0:
+                raise CheckFailure(
+                    f"{r['op']}: {col} must be a positive int, "
+                    f"got {r.get(col)!r}")
+    if paged["bytes_moved"] >= contig["bytes_moved"]:
+        raise CheckFailure(
+            f"paged KV residency {paged['bytes_moved']} B is not strictly "
+            f"below the contiguous slots*max_len figure "
+            f"{contig['bytes_moved']} B — the paged cache saved nothing")
+    print(f"  serving: {len(_SERVING_REQUIRED_OPS)} schema rows ok, "
+          f"{n} requests completed, paged KV {paged['bytes_moved']} B < "
+          f"contiguous {contig['bytes_moved']} B "
+          f"({100 * paged['bytes_moved'] / contig['bytes_moved']:.1f}%)")
 
 
 def check_tuning(tuning_path: str) -> None:
@@ -193,13 +268,14 @@ def main(argv=None) -> int:
                                                      "tuning.json"))
     ap.add_argument("--tol", type=float, default=0.1,
                     help="relative tolerance for derived/ulp columns")
-    ap.add_argument("--only", default="traffic,baseline,tuning",
+    ap.add_argument("--only", default="traffic,baseline,serving,tuning",
                     help="comma-separated subset of checks to run")
     args = ap.parse_args(argv)
     checks = {
         "traffic": lambda: check_traffic(args.bench),
         "baseline": lambda: check_baseline(args.bench, args.baseline,
                                            args.tol),
+        "serving": lambda: check_serving(args.bench),
         "tuning": lambda: check_tuning(args.tuning),
     }
     failed = False

@@ -12,8 +12,9 @@ Two engines (src/repro/analysis/):
            shape tables + lane working set vs the width-aware budget),
            including every committed results/tuning.json entry.
   ast      repo architecture rules over src/ (raw-dot confinement,
-           scoped-x64-only, no transcendental calls in scale modules)
-           with a committed suppression baseline
+           scoped-x64-only, no transcendental calls in scale modules,
+           no contractions inside the serving scheduler) with a
+           committed suppression baseline
            (tools/olmlint_baseline.json).
 
 Exit codes: 0 clean, 1 violations found, 2 usage/internal error.
