@@ -358,6 +358,82 @@ def olm_matmul_fused_bench():
     return rows
 
 
+def olm_matmul_truncated_bench():
+    """Truncated working-precision tiers: every olm{n}t{p} mode vs its
+    same-width full mode at the default shape/tiling. Asserts the tier
+    is bit-identical to the p-digit array (working precision IS the
+    mode), that max |err| vs the f64 oracle stays inside the extended
+    olm_error_bound truncation term, and that the digit-grid operand
+    bytes drop by exactly p/n — the ledger tools/check_bench.py
+    re-gates from the committed JSON. Also prints the hwmodel
+    activity/area/latency delta per tier (paper Table I axis)."""
+    import jax.numpy as jnp
+    from repro.core.hwmodel import truncated_delta
+    from repro.core.numerics import TRUNCATED_SPECS
+    from repro.kernels.online_dot.matmul import (digit_traffic,
+                                                 olm_error_bound,
+                                                 olm_matmul)
+    rng = np.random.default_rng(13)
+    M, K, N = 64, 32, 64
+    a = rng.standard_normal((M, K)).astype(np.float32)
+    b = rng.standard_normal((K, N)).astype(np.float32)
+    oracle = a.astype(np.float64) @ b.astype(np.float64)
+    print("\n== olm_matmul_truncated: olm{n}t{p} tiers vs full modes ==")
+    print(f"{'mode':>10} {'us':>10} {'grid_bytes':>11} {'cut':>6} "
+          f"{'err/bound':>10}")
+    rows = []
+
+    def run_mode(nb, trunc=None):
+        fn = lambda: np.asarray(olm_matmul(
+            jnp.asarray(a), jnp.asarray(b), n_bits=nb, trunc=trunc,
+            use_pallas=True, quantize="kernel"))
+        fn()  # compile
+        us, got = _timeit(fn, repeat=2)
+        bound = np.asarray(olm_error_bound(
+            jnp.asarray(a), jnp.asarray(b), n_bits=nb, trunc=trunc))
+        frac = float(np.max(np.abs(got - oracle) / bound))
+        traffic = digit_traffic(M, N, K, n_bits=nb, trunc=trunc)
+        return us, got, frac, traffic["grid_bytes"]
+
+    full = {}
+    for nb in sorted({n for n, _ in TRUNCATED_SPECS}):
+        us, got, frac, gbytes = run_mode(nb)
+        full[nb] = (got, gbytes)
+        assert frac <= 1.0, f"olm{nb} exceeds its documented bound"
+        print(f"{f'olm{nb}':>10} {us:>10.1f} {gbytes:>11} {1.0:>6.2f} "
+              f"{frac:>10.3f}")
+        rows.append(_row("olm_matmul_truncated/full", n=nb, k=K, us=us,
+                         ulp=round(frac, 4), derived=1.0,
+                         bytes_moved=gbytes))
+    for nb, p in TRUNCATED_SPECS:
+        us, got, frac, gbytes = run_mode(nb, trunc=p)
+        # working precision IS the mode: bit-identical to the p-array
+        ident = np.asarray(olm_matmul(jnp.asarray(a), jnp.asarray(b),
+                                      n_bits=p, use_pallas=True,
+                                      quantize="kernel"))
+        np.testing.assert_array_equal(got, ident)
+        assert frac <= 1.0, \
+            f"olm{nb}t{p} exceeds the extended truncation bound"
+        # the acceptance gate: digit operand bytes cut by exactly p/n
+        assert gbytes * nb == full[nb][1] * p, \
+            f"olm{nb}t{p} grid bytes must be p/n of the full mode's"
+        cut = full[nb][1] / gbytes
+        print(f"{f'olm{nb}t{p}':>10} {us:>10.1f} {gbytes:>11} "
+              f"{cut:>6.2f} {frac:>10.3f}")
+        rows.append(_row(f"olm_matmul_truncated/t{p}", n=nb, k=K, us=us,
+                         ulp=round(frac, 4), derived=round(cut, 4),
+                         bytes_moved=gbytes))
+        d = truncated_delta(nb, p)
+        print(f"  hw delta olm{nb}t{p}: activity -{d['activity_save_pct']}% "
+              f"({d['full_activity']} -> {d['trunc_activity']} slices), "
+              f"area -{d['area_save_pct']}%, power -{d['power_save_pct']}%, "
+              f"latency {d['full_latency']} -> {d['trunc_latency']} cycles "
+              f"(-{d['latency_delta']})")
+        rows.append(_row(f"olm_matmul_truncated/hw_t{p}", n=nb,
+                         derived=d["activity_save_pct"]))
+    return rows
+
+
 def serve_replay_bench():
     """Traffic replay through the serving engine: a seeded arrival
     process (serving.replay) drives the paged-KV engine and the
@@ -503,6 +579,7 @@ BENCHES = {
     "online_dot": online_dot_bench,
     "olm_matmul": olm_matmul_bench,
     "olm_matmul_fused": olm_matmul_fused_bench,
+    "olm_matmul_truncated": olm_matmul_truncated_bench,
     "serve_replay": serve_replay_bench,
     "fig7": pipeline_activity,
     "roofline": roofline_report,

@@ -203,12 +203,21 @@ def check_decode_windows(n_bits: int, *, where: str) -> list[Violation]:
 
 
 def run(widths: Iterable[int] | None = None) -> list[Violation]:
-    """Prove the overflow/decode contracts for every registered width."""
-    from repro.configs.olm_array import MATMUL_MODES
+    """Prove the overflow/decode contracts for every registered width,
+    including each width's truncated olm{n}t{p} tiers (their schedules
+    are the p-digit arrays; the proofs run at p under the family
+    label)."""
+    from repro.configs.olm_array import MATMUL_MODES, TRUNCATED_SPECS
     widths = tuple(sorted(widths if widths is not None else MATMUL_MODES))
     out: list[Violation] = []
     for n in widths:
         cfg = OnlinePrecision(n=n)
         out.extend(check_schedule(cfg, where=f"schedule/olm{n}"))
         out.extend(check_decode_windows(n, where=f"decode/olm{n}"))
+        for nn, p in TRUNCATED_SPECS:
+            if nn != n:
+                continue
+            out.extend(check_schedule(OnlinePrecision(n=p),
+                                      where=f"schedule/olm{n}t{p}"))
+            out.extend(check_decode_windows(p, where=f"decode/olm{n}t{p}"))
     return out

@@ -24,7 +24,8 @@ from typing import Callable, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.configs.olm_array import MATMUL_MODES, MATMUL_TILING
+from repro.configs.olm_array import (MATMUL_MODES, MATMUL_TILING,
+                                     TRUNCATED_SPECS)
 from repro.core.precision import OnlinePrecision
 from repro.kernels.common import checked_schedule, decode_policy
 from repro.kernels.online_dot.kernel import lane_tree
@@ -149,6 +150,51 @@ def iter_cases(widths: Tuple[int, ...] | None = None) -> list[KernelCase]:
                         functools.partial(fused_tile_update, **statics)),
                     xt, wt, sched),
                 out_dtypes=("float32",), tiling=(kt, bm, bn)))
+
+        # truncated tiers olm{n}t{p}: the same kernel bodies instanced
+        # at p work digits. The schedule, buckets, and statics are the
+        # p-digit ones (that IS the mode), but the cases register under
+        # the family name so `make lint` proves every servable mode by
+        # its own label.
+        for nn, p in TRUNCATED_SPECS:
+            if nn != n:
+                continue
+            tcfg = OnlinePrecision(n=p)
+            tsched = _sched_aval(tcfg)
+            tmul_kw = dict(n=p, delta=tcfg.delta, t=tcfg.t,
+                           S=checked_schedule(tcfg)[1])
+            tdig2 = jax.ShapeDtypeStruct((_BLOCK_B, p), i32)
+            cases.append(KernelCase(
+                name=f"mul_digit_loop/olm{n}t{p}", n_bits=p,
+                trace=functools.partial(
+                    jax.make_jaxpr(
+                        functools.partial(mul_digit_loop, **tmul_kw)),
+                    tdig2, tdig2, tsched),
+                out_dtypes=("int32",)))
+            for label, (kt, bm, bn) in representative_tilings(p).items():
+                statics = _matmul_statics(p, kt)
+                xd = jax.ShapeDtypeStruct((bm, kt, p), i32)
+                wd = jax.ShapeDtypeStruct((bn, kt, p), i32)
+                sx = jax.ShapeDtypeStruct((bm, 1), f32)
+                sw = jax.ShapeDtypeStruct((bn, 1), f32)
+                cases.append(KernelCase(
+                    name=f"matmul-host/olm{n}t{p}/{label}-k{kt}m{bm}n{bn}",
+                    n_bits=p,
+                    trace=functools.partial(
+                        jax.make_jaxpr(
+                            functools.partial(tile_update, **statics)),
+                        xd, sx, wd, sw, tsched),
+                    out_dtypes=("float32",), tiling=(kt, bm, bn)))
+                xt = jax.ShapeDtypeStruct((bm, kt), f32)
+                wt = jax.ShapeDtypeStruct((bn, kt), f32)
+                cases.append(KernelCase(
+                    name=f"matmul-fused/olm{n}t{p}/{label}-k{kt}m{bm}n{bn}",
+                    n_bits=p,
+                    trace=functools.partial(
+                        jax.make_jaxpr(
+                            functools.partial(fused_tile_update, **statics)),
+                        xt, wt, tsched),
+                    out_dtypes=("float32",), tiling=(kt, bm, bn)))
 
         # tpmm: digit-plane matmul body at its supported widths (planes
         # are 4-bit; D = n/4 must be integral and <= 8).

@@ -136,8 +136,11 @@ def check_tuning_cache(path: str | None = None) -> list[Violation]:
     out: list[Violation] = []
     for key in sorted(entries):
         e = entries[key]
+        # Truncated-mode entries carry "trunc": the work digits the
+        # kernel (and therefore the budget) actually runs at.
+        work = int(e.get("trunc") or e["n_bits"])
         out.extend(check_matmul_tiling(
-            int(e["n_bits"]), int(e["k_tile"]), int(e["block_m"]),
+            work, int(e["k_tile"]), int(e["block_m"]),
             int(e["block_n"]),
             where=f"tuning-cache {os.path.basename(path)}::{key}"))
     return out
@@ -147,7 +150,7 @@ def run(widths: Iterable[int] | None = None,
         tuning_path: str | None = None) -> list[Violation]:
     """VMEM-lint every registered width's representative tilings, the
     fixed-layout kernels, and the committed tuning cache."""
-    from repro.configs.olm_array import MATMUL_MODES
+    from repro.configs.olm_array import MATMUL_MODES, TRUNCATED_SPECS
     widths = tuple(sorted(widths if widths is not None else MATMUL_MODES))
     out: list[Violation] = []
     for n in widths:
@@ -155,5 +158,11 @@ def run(widths: Iterable[int] | None = None,
         for label, (kt, bm, bn) in representative_tilings(n).items():
             out.extend(check_matmul_tiling(
                 n, kt, bm, bn, where=f"matmul/olm{n}/{label}"))
+        for nn, p in TRUNCATED_SPECS:
+            if nn != n:
+                continue
+            for label, (kt, bm, bn) in representative_tilings(p).items():
+                out.extend(check_matmul_tiling(
+                    p, kt, bm, bn, where=f"matmul/olm{n}t{p}/{label}"))
     out.extend(check_tuning_cache(tuning_path))
     return out

@@ -2,8 +2,8 @@
 arrays at n = 8/16/24/32 bits (delta=3, t=2, Eq.8 truncation, G=2 tail),
 plus the DotEngine wiring that lets a model select those arrays as its
 matmul numerics (modes "olm8" / "olm16" / "olm24" / "olm32")."""
-from repro.core.numerics import DotEngine
-from repro.core.precision import OnlinePrecision
+from repro.core.numerics import TRUNCATED_SPECS, DotEngine
+from repro.core.precision import OnlinePrecision, truncation_schedule
 
 ARRAY_PRECISIONS = {n: OnlinePrecision(n=n) for n in (8, 16, 24, 32)}
 FULL_PRECISIONS = {
@@ -18,6 +18,16 @@ FULL_PRECISIONS = {
 # kernels/common.decode_policy and the olm24/olm32 registry entries.
 MATMUL_MODES = {8: "olm8", 16: "olm16", 24: "olm24", 32: "olm32"}
 
+# Truncated working-precision tiers (the paper's headline lever): the
+# n-digit family run at p < n working digits. Keyed (n, p); the schedule
+# each mode actually runs is truncation_schedule(n, p) — the olm{p}
+# array — so the quantizer, kernel recurrence, and decode all shrink to
+# p digits (a p/n cut in digit operand bytes on the grid path).
+TRUNCATED_MODES = {(n, p): f"olm{n}t{p}" for n, p in TRUNCATED_SPECS}
+TRUNCATED_PRECISIONS = {
+    (n, p): truncation_schedule(n, p) for n, p in TRUNCATED_SPECS
+}
+
 # Static grid-kernel tiling for the matmul lowering: k_tile lanes per
 # adder tree (the array width; n + 2*ceil(log2 k_tile) must stay inside
 # the per-dtype exact decode window — 24 digits plain f32 for n <= 16,
@@ -30,10 +40,16 @@ MATMUL_MODES = {8: "olm8", 16: "olm16", 24: "olm24", 32: "olm32"}
 MATMUL_TILING = {"k_tile": 16, "block_m": 8, "block_n": 8}
 
 
-def engine_for(n_bits: int, *, tiling: str | None = "auto",
-               **overrides) -> DotEngine:
+def engine_for(n_bits: int, *, trunc: int | None = None,
+               tiling: str | None = "auto", **overrides) -> DotEngine:
     """DotEngine running every model GEMM through the n_bits-digit fused
     inner-product array (kernels/online_dot/matmul).
+
+    trunc=p selects the truncated working-precision tier olm{n}t{p}
+    (must be a registered TRUNCATED_MODES pair): the same array family
+    run at p working digits, trading bounded extra error (the
+    olm_error_bound truncation term) for a p/n cut in digit operand
+    bytes and recurrence iterations.
 
     tiling="auto" (default) resolves (block_m, block_n) per GEMM shape
     through the tiling autotuner — a decode GEMV and a training GEMM
@@ -43,11 +59,19 @@ def engine_for(n_bits: int, *, tiling: str | None = "auto",
     MATMUL_TILING. Any DotEngine field (k_tile, block_m, block_n,
     use_pallas, interpret) may be overridden and wins over the
     autotuner."""
-    if n_bits not in MATMUL_MODES:
+    if trunc is not None:
+        if (n_bits, trunc) not in TRUNCATED_MODES:
+            raise ValueError(
+                f"no truncated olm mode at n_bits={n_bits} trunc={trunc}; "
+                f"available: {sorted(TRUNCATED_MODES)}")
+        mode = TRUNCATED_MODES[(n_bits, trunc)]
+    elif n_bits in MATMUL_MODES:
+        mode = MATMUL_MODES[n_bits]
+    else:
         raise ValueError(
             f"no olm matmul mode at n_bits={n_bits}; "
             f"available: {sorted(MATMUL_MODES)}")
     if tiling not in (None, "auto"):
         raise ValueError(f"tiling must be 'auto' or None, got {tiling!r}")
     base = {"tiling": "auto"} if tiling == "auto" else dict(MATMUL_TILING)
-    return DotEngine(mode=MATMUL_MODES[n_bits], **{**base, **overrides})
+    return DotEngine(mode=mode, **{**base, **overrides})

@@ -35,6 +35,7 @@ __all__ = [
     "serial_parallel_cost",
     "array_multiplier_cost",
     "nonpipelined_online_cost",
+    "truncated_delta",
     "PAPER_TABLE1",
     "PAPER_TABLE2",
 ]
@@ -138,6 +139,46 @@ def online_multiplier_cost(
     power = area * activity * POWER_PER_AREA_ACTIVITY
     label = name or ("olm-pipelined-reduced" if cfg.truncated else "olm-pipelined-full")
     return MultiplierCost(label, cfg.n, latches, area, power, stages)
+
+
+def truncated_delta(n: int, p: int) -> Dict[str, float]:
+    """Activity / area / latency delta of the truncated olm{n}t{p} tier
+    vs the same-width full mode, mirroring the paper's Table I
+    comparison axis: both sides are Eq. 8 / Fig. 7 schedules, the tier
+    simply instanced at p output digits.
+
+    The activity proxy is total live slices across the unrolled stages
+    (sum of T(j) — the registers that can flip each cycle); latency is
+    pipeline cycles to first result (n + delta + 1 vs p + delta + 1).
+    Returned dict keys: full_/trunc_ {area, latches, power, activity,
+    latency} plus {area, power, activity}_save_pct and latency_delta.
+    """
+    full = online_multiplier_cost(OnlinePrecision(n=n))
+    trunc = online_multiplier_cost(OnlinePrecision(n=p),
+                                   name=f"olm{n}t{p}")
+    act_full = sum(st.slices for st in full.stages)
+    act_trunc = sum(st.slices for st in trunc.stages)
+
+    def pct(a: float, b: float) -> float:
+        return round(100.0 * (1.0 - b / a), 2) if a else 0.0
+
+    return {
+        "full_area": round(full.area, 2),
+        "trunc_area": round(trunc.area, 2),
+        "area_save_pct": pct(full.area, trunc.area),
+        "full_latches": full.latches,
+        "trunc_latches": trunc.latches,
+        "full_power": round(full.power, 1),
+        "trunc_power": round(trunc.power, 1),
+        "power_save_pct": pct(full.power, trunc.power),
+        "full_activity": act_full,
+        "trunc_activity": act_trunc,
+        "activity_save_pct": pct(act_full, act_trunc),
+        "full_latency": OnlinePrecision(n=n).pipeline_latency,
+        "trunc_latency": OnlinePrecision(n=p).pipeline_latency,
+        "latency_delta": (OnlinePrecision(n=n).pipeline_latency
+                          - OnlinePrecision(n=p).pipeline_latency),
+    }
 
 
 def nonpipelined_online_cost(n: int) -> MultiplierCost:

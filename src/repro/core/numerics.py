@@ -20,6 +20,14 @@ Registered modes:
     under x64, two-limb f32 otherwise — kernels/common.decode_policy).
     Every fused kernel path is bit-identical to the pure-jnp oracle and
     bounded by kernels/online_dot/matmul.olm_error_bound.
+  olm{n}t{p} — the truncated working-precision family (TRUNCATED_SPECS;
+    the paper's headline reduced-activities trick as a throughput/
+    quality tier): the n-digit mode run at p < n working digits —
+    p-digit operand grids (p/n of the full mode's digit operand bytes),
+    p + delta recurrence iterations, a (k, p) live digit buffer — with
+    the bounded extra error documented by olm_error_bound's truncation
+    term. Serving exposes these as per-request quality tiers
+    (serving/engine.py) and per-layer assignments (DotEngine.layer_modes).
 
 The engine is threaded through every dense, attention and MoE matmul, so
 the paper's technique is a first-class numerics choice per model config,
@@ -35,12 +43,27 @@ digit/plane decomposition instead of being rounded through bf16 first.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional, Tuple
+import functools
+from typing import Callable, Dict, Mapping, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["DotEngine", "DotMode", "register_mode"]
+__all__ = ["DotEngine", "DotMode", "register_mode", "TRUNCATED_SPECS"]
+
+# The registered truncated working-precision modes, as (n, p) pairs:
+# mode `olm{n}t{p}` is the n-digit array run at p working digits
+# (core.precision.truncation_schedule; p must satisfy delta+1 <= p < n).
+# This tuple is the single source the mode registration below,
+# configs/olm_array.TRUNCATED_MODES, the olmlint analyzer sweep
+# (repro/analysis), and the truncated bench/check_bench gate all derive
+# from — adding a pair here registers the mode AND brings it under the
+# static int32-overflow / decode-window / VMEM proofs automatically.
+# olm32t16 is the throughput pick: its 16-digit work stream fits the
+# plain-f32 decode window again, dropping the wide two-limb decode the
+# full olm32 mode needs.
+TRUNCATED_SPECS: Tuple[Tuple[int, int], ...] = (
+    (16, 12), (16, 10), (32, 24), (32, 20), (32, 16))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -116,7 +139,7 @@ def _tpmm8(eng, x, w):
 
 
 def _olm_dot(eng: "DotEngine", x: jax.Array, w: jax.Array,
-             n_bits: int) -> jax.Array:
+             n_bits: int, trunc: Optional[int] = None) -> jax.Array:
     import functools
     import math
 
@@ -134,11 +157,14 @@ def _olm_dot(eng: "DotEngine", x: jax.Array, w: jax.Array,
         # use_pallas=False the engine is certain to take the broadcast
         # oracle, which ignores block shapes (and auto's k_tile is the
         # pinned default anyway) — skip the lookup rather than pretend
-        # it does something.
+        # it does something. Truncated modes key their own cache bucket
+        # (b{n}t{p}) so they never share entries with the full mode.
         from repro.kernels.online_dot.tuning import get_tiling
         auto = get_tiling(math.prod(x.shape[:-1]), w.shape[-1],
-                          x.shape[-1], n_bits)
+                          x.shape[-1], n_bits, trunc=trunc)
         tiling = {**auto, **tiling}
+    if trunc is not None:
+        tiling["trunc"] = trunc
     fn = functools.partial(olm_matmul, **tiling) if tiling else olm_matmul
     return _lowered_dot(eng, x, w, fn, n_bits)
 
@@ -187,6 +213,34 @@ def _olm32(eng, x, w):
     return _olm_dot(eng, x, w, 32)
 
 
+def _register_truncated_modes() -> None:
+    """Register every TRUNCATED_SPECS pair as mode `olm{n}t{p}`: the
+    n-digit array run at p working digits (truncation_schedule). The
+    p-digit kernel path is bit-identical to the olm{p} oracle by
+    construction; what the family adds over "just use olm{p}" is the
+    quality-tier contract — a documented error bound relative to the
+    n-digit parent (olm_error_bound's truncation term), its own tuning
+    bucket, and the serving engine's per-request tier selection."""
+    for n, p in TRUNCATED_SPECS:
+        wide = "wide two-limb/int64" if p > 16 else "exact plain-f32"
+        error = (f"<= k_tile * 3.1 * (2^-{n} + 2^-{p}) per K-tile "
+                 "(olm_error_bound truncation term)")
+        if p > 16:
+            error = error[:-1] + " + wide term)"
+        register_mode(
+            f"olm{n}t{p}",
+            summary=f"truncated olm{n}: {p} working digits "
+                    f"({wide} stream decode)",
+            error=error,
+            cost=f"p/n = {p}/{n} of olm{n}'s digit operand bytes and "
+                 f"recurrence iterations; pipeline latency {p + 4} vs "
+                 f"{n + 4} cycles (hwmodel.truncated_delta)")(
+            functools.partial(_olm_dot, n_bits=n, trunc=p))
+
+
+_register_truncated_modes()
+
+
 @dataclasses.dataclass(frozen=True)
 class DotEngine:
     mode: str = "native"          # any registered mode, see DotEngine.modes()
@@ -206,6 +260,18 @@ class DotEngine:
     # numerics parameter) to the kernel default — only an explicit
     # k_tile= here changes it.
     tiling: Optional[str] = None
+    # Per-layer precision assignment: {"attn" | "mlp" | "head": mode}
+    # overrides for the weight-bearing GEMM roles. The model stack calls
+    # for_role() at each site, so e.g. layer_modes={"head": "olm32",
+    # "mlp": "olm32t20"} keeps the lm_head at full precision while the
+    # MLPs take the truncated throughput tier (ROADMAP: attention vs MLP
+    # vs lm_head assignment). A dict is accepted at construction and
+    # normalized to a sorted tuple of pairs so the engine stays hashable
+    # (jit static args). None / missing role = this engine's base mode.
+    layer_modes: Union[Mapping[str, str],
+                       Tuple[Tuple[str, str], ...], None] = None
+
+    _ROLES = frozenset({"attn", "mlp", "head"})
 
     def __post_init__(self):
         if self.mode not in _MODES:
@@ -216,6 +282,33 @@ class DotEngine:
             raise ValueError(
                 f"unknown DotEngine tiling {self.tiling!r}; expected "
                 "None (static knobs / kernel defaults) or 'auto'")
+        if self.layer_modes is not None:
+            pairs = tuple(sorted(dict(self.layer_modes).items()))
+            if bad := {r for r, _ in pairs} - self._ROLES:
+                raise ValueError(
+                    f"unknown layer_modes roles {sorted(bad)}; expected "
+                    f"a subset of {sorted(self._ROLES)}")
+            if bad := {m for _, m in pairs if m not in _MODES}:
+                raise ValueError(
+                    f"layer_modes names unregistered modes {sorted(bad)}; "
+                    f"registered: {', '.join(sorted(_MODES))}")
+            object.__setattr__(self, "layer_modes", pairs or None)
+
+    def for_role(self, role: str) -> "DotEngine":
+        """The engine a GEMM of the given role ("attn" / "mlp" / "head")
+        should run under: self unless layer_modes overrides that role,
+        in which case an engine with the override as its base mode (all
+        deployment/tiling knobs carried over; layer_modes cleared so the
+        resolved engine is a plain single-mode engine)."""
+        if role not in self._ROLES:
+            raise ValueError(f"unknown GEMM role {role!r}; expected one "
+                             f"of {sorted(self._ROLES)}")
+        if not self.layer_modes:
+            return self
+        mode = dict(self.layer_modes).get(role)
+        if mode is None or mode == self.mode:
+            return self
+        return dataclasses.replace(self, mode=mode, layer_modes=None)
 
     @staticmethod
     def modes() -> Tuple[str, ...]:

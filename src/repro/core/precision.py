@@ -13,7 +13,7 @@ from __future__ import annotations
 import dataclasses
 import math
 
-__all__ = ["reduced_precision", "OnlinePrecision"]
+__all__ = ["reduced_precision", "truncation_schedule", "OnlinePrecision"]
 
 
 def reduced_precision(n: int, delta: int = 3, t: int = 2) -> int:
@@ -21,6 +21,34 @@ def reduced_precision(n: int, delta: int = 3, t: int = 2) -> int:
     if n < 1:
         raise ValueError(f"n must be >= 1, got {n}")
     return math.ceil((2 * n + delta + t) / 3)
+
+
+def truncation_schedule(n: int, p: int, delta: int = 3,
+                        t: int = 2) -> "OnlinePrecision":
+    """Working-precision schedule of the truncated `olm{n}t{p}` mode
+    family: the n-digit array run with only p < n working digits.
+
+    The paper's error profile (Fig. 7) says the per-slice live width
+    ramps up along the schedule and back down — so an array asked for p
+    output digits of quality simply *is* the Eq. 8 schedule instanced at
+    p: fewer digit-recurrence iterations (p + delta instead of n +
+    delta), a (k, p) live digit buffer instead of (k, n), and p-digit
+    operand grids (a p/n cut in digit operand bytes on the grid matmul
+    path; the fused quantize-in-kernel path recodes raw f32 tiles to p
+    digits inside the prologue). The returned OnlinePrecision is the
+    exact config `olm_matmul(..., n_bits=n, trunc=p)` runs, and the one
+    the olmlint analyzer re-proves int32 non-overflow / decode-window
+    fit for (repro/analysis — schedule/olm{n}t{p} contract labels).
+
+    Validates delta + 1 <= p < n: p >= delta + 1 is the OnlinePrecision
+    floor (the online delay must fit), and p >= n is not a truncation —
+    ask for the full mode instead.
+    """
+    if not delta + 1 <= p < n:
+        raise ValueError(
+            f"truncated working precision must satisfy delta+1={delta + 1} "
+            f"<= p < n; got p={p}, n={n}")
+    return OnlinePrecision(n=p, delta=delta, t=t)
 
 
 @dataclasses.dataclass(frozen=True)

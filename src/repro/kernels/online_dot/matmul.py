@@ -51,7 +51,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.precision import OnlinePrecision
+from repro.core.precision import OnlinePrecision, truncation_schedule
 from repro.kernels.common import (decode_policy, decode_stream_jnp,
                                   decode_stream_wide_jnp, int64_enabled,
                                   pad_to_multiple, pow2_scale,
@@ -217,6 +217,7 @@ def olm_matmul(
     *,
     n_bits: int = 16,
     k_tile: int = DEFAULT_K_TILE,
+    trunc: int | None = None,
     use_pallas: bool | None = None,
     block_m: int = DEFAULT_BLOCK_M,
     block_n: int = DEFAULT_BLOCK_N,
@@ -224,6 +225,15 @@ def olm_matmul(
     interpret: bool = True,
 ) -> jax.Array:
     """Matmul through the fused online inner-product array; (M, N) float32.
+
+    trunc=p selects the truncated working-precision family `olm{n}t{p}`
+    (core.precision.truncation_schedule): the whole array runs at p < n
+    working digits — operands quantized to p-digit grids, p + delta
+    recurrence iterations, a (k, p) live digit buffer, and a p/n cut in
+    digit operand bytes on the grid path — trading a bounded accuracy
+    loss (olm_error_bound's truncation term) for throughput. trunc=None
+    (default) is the full-precision mode, bit-for-bit the historical
+    behavior.
 
     use_pallas: True = grid-tiled Pallas kernel, False = int64 jnp
     broadcast oracle, None = Pallas iff the config fits the int32
@@ -256,6 +266,11 @@ def olm_matmul(
     if quantize not in ("kernel", "host"):
         raise ValueError(f"quantize must be 'kernel' or 'host', "
                          f"got {quantize!r}")
+    if trunc is not None:
+        # Everything downstream — quantizer, kernel, decode, error
+        # behavior — is the p-digit array; n_bits only names the family.
+        truncation_schedule(n_bits, trunc)     # validates delta+1 <= p < n
+        n_bits = trunc
     cfg = _olm_cfg(n_bits)
     use = resolve_use_pallas(cfg, use_pallas)
     _decode_plan(n_bits, min(k_tile, K))     # refuse unservable streams early
@@ -283,30 +298,44 @@ def olm_matmul(
 
 
 def olm_matmul_ref(x: jax.Array, w: jax.Array, *, n_bits: int = 16,
-                   k_tile: int = DEFAULT_K_TILE) -> jax.Array:
+                   k_tile: int = DEFAULT_K_TILE,
+                   trunc: int | None = None) -> jax.Array:
     """Pure-jnp oracle for `olm_matmul`: the same tiling, quantization and
     stream-decode plumbing around the int64 reference recurrence, with
     the full (M*N, kt, n) operand broadcast. The Pallas grid kernel must
     match this bit-for-bit (tests/test_dot_engine.py,
     tests/test_olm_matmul_grid.py)."""
-    return olm_matmul(x, w, n_bits=n_bits, k_tile=k_tile, use_pallas=False)
+    return olm_matmul(x, w, n_bits=n_bits, k_tile=k_tile, trunc=trunc,
+                      use_pallas=False)
 
 
 def olm_error_bound(x: jax.Array, w: jax.Array, *, n_bits: int = 16,
-                    k_tile: int = DEFAULT_K_TILE) -> jax.Array:
+                    k_tile: int = DEFAULT_K_TILE,
+                    trunc: int | None = None) -> jax.Array:
     """Documented per-element bound on |olm_matmul(x, w) - x @ w|, (M, N)
     float32: per K-tile, k lanes each contribute <= ULP_PER_LANE output
     ulp at 2^-n times the tile's power-of-two scale product. On the wide
     decode path (stream > 24 digits — the n = 24/32 modes) the bound
     adds (T + 1) * WIDE_DECODE_ULP per lane: one exact-value-to-f32
     decode rounding per K tile plus T accumulator roundings, each
-    <= kt * 2^-26 at the tile scale product (see WIDE_DECODE_ULP)."""
+    <= kt * 2^-26 at the tile scale product (see WIDE_DECODE_ULP).
+
+    trunc=p (the `olm{n}t{p}` family) adds the truncation term: the
+    per-lane ledger becomes ULP_PER_LANE * (2^-n + 2^-p). The array
+    actually runs at p working digits, so its true error is within
+    ULP_PER_LANE * 2^-p per lane — strictly inside this sum — and the
+    wide-decode term is decided on the p-digit stream (olm32t16's
+    16 + 2L <= 24 stream comes back onto the exact plain-f32 path,
+    dropping the wide term entirely)."""
     kt, n_tiles, xp, wpT = _tile_plan(x, w, k_tile)
     M, N = xp.shape[0], wpT.shape[0]
     sx = pow2_scale(xp.reshape(M, n_tiles, kt), 2)[..., 0]    # (M, T)
     sw = pow2_scale(wpT.reshape(N, n_tiles, kt), 2)[..., 0]   # (N, T)
-    _, wide = _decode_plan(n_bits, kt)
+    work = n_bits if trunc is None else trunc
+    _, wide = _decode_plan(work, kt)
     per_lane = ULP_PER_LANE * 2.0 ** -n_bits
+    if trunc is not None:
+        per_lane += ULP_PER_LANE * 2.0 ** -trunc
     if wide:
         per_lane += (n_tiles + 1) * WIDE_DECODE_ULP
     return kt * jnp.float32(per_lane) * jnp.einsum("mt,nt->mn", sx, sw)
@@ -314,6 +343,7 @@ def olm_error_bound(x: jax.Array, w: jax.Array, *, n_bits: int = 16,
 
 def digit_traffic(M: int, N: int, K: int, *, n_bits: int = 16,
                   k_tile: int = DEFAULT_K_TILE,
+                  trunc: int | None = None,
                   block_m: int = DEFAULT_BLOCK_M,
                   block_n: int = DEFAULT_BLOCK_N) -> dict:
     """Operand traffic ledger for one (M, K) @ (K, N) matmul, in
@@ -342,14 +372,23 @@ def digit_traffic(M: int, N: int, K: int, *, n_bits: int = 16,
     each; summed over tiles that is M*N_tiles + N*M_tiles — linear in
     M + N only when the block covers the whole output, O(M*N / reuse)
     under fixed blocks (tests assert both regimes).
+
+    trunc=p (the `olm{n}t{p}` family): operand grids are p digits deep
+    instead of n, so every digit-grid column shrinks by exactly p/n —
+    the operand-byte floor tools/check_bench.py gates — while the fused
+    path's raw float tiles are width-independent (fused_vs_grid == p).
     """
+    if trunc is not None and not 0 < trunc < n_bits:
+        raise ValueError(f"trunc must satisfy 0 < trunc < n_bits={n_bits}; "
+                         f"got {trunc}")
+    work = n_bits if trunc is None else trunc   # digits actually streamed
     kt = min(k_tile, K)
     n_tiles = -(-K // kt)
     bm = max(1, min(block_m, M))
     bn = max(1, min(block_n, N))
     m_tiles = -(-M // bm)
     n_out_tiles = -(-N // bn)
-    per_grid = kt * n_bits                      # one row/column digit grid
+    per_grid = kt * work                        # one row/column digit grid
     per_tile = kt                               # one raw float row/column
     loads = m_tiles * bm * n_out_tiles + n_out_tiles * bn * m_tiles
     broadcast = 2 * M * N * per_grid * n_tiles
@@ -364,5 +403,5 @@ def digit_traffic(M: int, N: int, K: int, *, n_bits: int = 16,
         "fused_bytes": 4 * fused,
         "reuse": broadcast / grid,
         "fused_reuse": broadcast / fused,
-        "fused_vs_grid": grid / fused,          # == n_bits
+        "fused_vs_grid": grid / fused,          # == work digits (p or n)
     }

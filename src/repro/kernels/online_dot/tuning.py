@@ -128,8 +128,16 @@ def bucket(v: int) -> int:
     return _pow2_ceil(max(1, v))
 
 
-def bucket_key(M: int, N: int, K: int, n_bits: int) -> str:
-    return f"m{bucket(M)}n{bucket(N)}k{bucket(K)}b{n_bits}"
+def bucket_key(M: int, N: int, K: int, n_bits: int,
+               trunc: Optional[int] = None) -> str:
+    """Cache key for one (shape bucket, numerics) pair. The truncated
+    `olm{n}t{p}` modes carry a `t{p}` suffix: they run the kernel at p
+    working digits, so their VMEM budget, decode window and measured
+    timings all differ from the full-precision mode of the same n — a
+    shared entry would let one mode's tuning silently steer the other's
+    (and a p-digit k_tile could exceed the n-digit decode window)."""
+    suffix = "" if trunc is None else f"t{trunc}"
+    return f"m{bucket(M)}n{bucket(N)}k{bucket(K)}b{n_bits}{suffix}"
 
 
 def max_k_tile(n_bits: int) -> int:
@@ -153,7 +161,8 @@ def pinned_k_tile(K: int, n_bits: int) -> int:
     return min(DEFAULT_K_TILE, _pow2_ceil(K), max_k_tile(n_bits))
 
 
-def heuristic_tiling(M: int, N: int, K: int, n_bits: int) -> Tiling:
+def heuristic_tiling(M: int, N: int, K: int, n_bits: int,
+                     trunc: Optional[int] = None) -> Tiling:
     """Shape-aware default when nothing has been measured for a bucket.
 
     k_tile is pinned to the kernel's numerics default (DEFAULT_K_TILE,
@@ -166,11 +175,17 @@ def heuristic_tiling(M: int, N: int, K: int, n_bits: int) -> Tiling:
     instead of wasting 7/8 of an 8x8 tile on nonexistent rows, and the
     wide modes (n = 24/32, whose digit grids cost 1.5-2x the VMEM per
     lane) get proportionally smaller blocks.
+
+    Truncated modes (trunc=p) spend the budget at their *working*
+    digits: the kernel they run is the p-digit array, so VMEM cost and
+    decode window are p's — a p/n-cheaper lane lets the truncated mode
+    afford proportionally larger blocks than its full-width parent.
     """
+    work = n_bits if trunc is None else trunc
     # pinned_k_tile keeps the decode-window guarantee structural even if
     # DEFAULT_K_TILE is ever raised past what a given n_bits allows
-    kt = pinned_k_tile(K, n_bits)
-    per_out = max(1, lane_budget(n_bits) // kt)  # block_m * block_n budget
+    kt = pinned_k_tile(K, work)
+    per_out = max(1, lane_budget(work) // kt)  # block_m * block_n budget
     bm = min(_pow2_ceil(M), _pow2_floor(max(1, int(per_out ** 0.5))))
     bn = min(_pow2_ceil(N), max(1, per_out // bm))
     bm = min(_pow2_ceil(M), max(1, per_out // bn))   # regrow if N was small
@@ -183,7 +198,9 @@ class TuningCache:
 
       {"k_tile": .., "block_m": .., "block_n": ..,
        "source": "measured" | "heuristic",
-       "shape": [M, N, K], "n_bits": .., "us": .. (measured only)}
+       "shape": [M, N, K], "n_bits": ..,
+       "trunc": .. (truncated olm{n}t{p} entries only),
+       "us": .. (measured only)}
 
     Disk writes only happen via `save()` (the `tune` path); heuristic
     memoization stays in memory so tracing a model never writes files.
@@ -213,8 +230,9 @@ class TuningCache:
             json.dump({"entries": entries}, f, indent=1, sort_keys=True)
 
     # -- lookup API --
-    def lookup(self, M: int, N: int, K: int, n_bits: int) -> Optional[Tiling]:
-        e = self._load().get(bucket_key(M, N, K, n_bits))
+    def lookup(self, M: int, N: int, K: int, n_bits: int,
+               trunc: Optional[int] = None) -> Optional[Tiling]:
+        e = self._load().get(bucket_key(M, N, K, n_bits, trunc))
         if e is None:
             self.misses += 1
             return None
@@ -222,12 +240,15 @@ class TuningCache:
         return Tiling(e["k_tile"], e["block_m"], e["block_n"])
 
     def store(self, M: int, N: int, K: int, n_bits: int, tiling: Tiling,
-              *, source: str, us: Optional[float] = None) -> None:
+              *, source: str, trunc: Optional[int] = None,
+              us: Optional[float] = None) -> None:
         entry = {**tiling.as_dict(), "source": source,
                  "shape": [M, N, K], "n_bits": n_bits}
+        if trunc is not None:
+            entry["trunc"] = trunc
         if us is not None:
             entry["us"] = round(us, 2)
-        self._load()[bucket_key(M, N, K, n_bits)] = entry
+        self._load()[bucket_key(M, N, K, n_bits, trunc)] = entry
 
 
 _DEFAULT_CACHE: Optional[TuningCache] = None
@@ -243,7 +264,8 @@ def default_cache() -> TuningCache:
 
 
 def get_tiling(M: int, N: int, K: int, n_bits: int,
-               cache: Optional[TuningCache] = None) -> Dict[str, int]:
+               cache: Optional[TuningCache] = None,
+               trunc: Optional[int] = None) -> Dict[str, int]:
     """Measured-or-heuristic tiling for one GEMM shape (the
     `tiling="auto"` entry point; shapes are static at trace time so
     this runs on the host during tracing). Cache miss falls back to
@@ -254,24 +276,30 @@ def get_tiling(M: int, N: int, K: int, n_bits: int,
     just at write time — so the never-changes-numerics guarantee is
     structural: a cache file written by an older version, a different
     DEFAULT_K_TILE, or a hand edit can adjust blocks (pure perf) but
-    can never alter what `tiling="auto"` computes."""
+    can never alter what `tiling="auto"` computes.
+
+    Truncated modes pass trunc=p: the bucket key grows a `t{p}` suffix
+    (no sharing with the same-n full mode) and k_tile re-pins against
+    the p-digit decode window — the width the kernel actually runs."""
     cache = cache or default_cache()
-    pinned = pinned_k_tile(K, n_bits)
-    hit = cache.lookup(M, N, K, n_bits)
+    pinned = pinned_k_tile(K, n_bits if trunc is None else trunc)
+    hit = cache.lookup(M, N, K, n_bits, trunc)
     if hit is not None:
         return {**hit.as_dict(), "k_tile": pinned}
-    t = heuristic_tiling(M, N, K, n_bits)
-    cache.store(M, N, K, n_bits, t, source="heuristic")
+    t = heuristic_tiling(M, N, K, n_bits, trunc)
+    cache.store(M, N, K, n_bits, t, source="heuristic", trunc=trunc)
     return {**t.as_dict(), "k_tile": pinned}
 
 
-def _candidates(M: int, N: int, K: int, n_bits: int) -> list[Tiling]:
+def _candidates(M: int, N: int, K: int, n_bits: int,
+                trunc: Optional[int] = None) -> list[Tiling]:
     """Small candidate grid around the heuristic: the heuristic itself,
     the static legacy block shape, and block halvings/doublings that
     stay inside the lane budget and output dims. k_tile is pinned to
     the heuristic's numerics-default value for every candidate (see
     module docstring) — the tuner only races bit-identical tilings."""
-    base = heuristic_tiling(M, N, K, n_bits)
+    work = n_bits if trunc is None else trunc
+    base = heuristic_tiling(M, N, K, n_bits, trunc)
     kt = base.k_tile
     cands = {base,
              Tiling(kt, min(8, _pow2_ceil(M)), min(8, _pow2_ceil(N)))}
@@ -279,14 +307,14 @@ def _candidates(M: int, N: int, K: int, n_bits: int) -> list[Tiling]:
                min(_pow2_ceil(M), base.block_m * 2)}:
         for bn in {base.block_n, max(1, base.block_n // 2),
                    min(_pow2_ceil(N), base.block_n * 2)}:
-            if bm * bn * kt <= lane_budget(n_bits):
+            if bm * bn * kt <= lane_budget(work):
                 cands.add(Tiling(kt, bm, bn))
     return sorted(cands, key=lambda t: (t.k_tile, t.block_m, t.block_n))
 
 
 def tune(M: int, N: int, K: int, n_bits: int,
-         cache: Optional[TuningCache] = None, *, cap: int = 48,
-         repeat: int = 2, save: bool = True) -> Tiling:
+         cache: Optional[TuningCache] = None, *, trunc: Optional[int] = None,
+         cap: int = 48, repeat: int = 2, save: bool = True) -> Tiling:
     """Measure the candidate grid for one GEMM bucket and persist the
     winner. Candidates come from the *real* shape; measurement shapes
     are capped (CPU interpret mode cannot time a million-row GEMM; the
@@ -302,7 +330,7 @@ def tune(M: int, N: int, K: int, n_bits: int,
 
     from .matmul import olm_matmul
 
-    cands = _candidates(M, N, K, n_bits)
+    cands = _candidates(M, N, K, n_bits, trunc)
     Mc = min(M, max(cap, 2 * max(c.block_m for c in cands)))
     Nc = min(N, max(cap, 2 * max(c.block_n for c in cands)))
     Kc = min(K, max(cap, max(c.k_tile for c in cands)))
@@ -312,8 +340,9 @@ def tune(M: int, N: int, K: int, n_bits: int,
     best, best_us = None, float("inf")
     for cand in cands:
         fn = lambda: np.asarray(olm_matmul(
-            x, w, n_bits=n_bits, use_pallas=True, quantize="kernel",
-            k_tile=cand.k_tile, block_m=cand.block_m, block_n=cand.block_n))
+            x, w, n_bits=n_bits, trunc=trunc, use_pallas=True,
+            quantize="kernel", k_tile=cand.k_tile, block_m=cand.block_m,
+            block_n=cand.block_n))
         fn()   # compile
         us = float("inf")
         for _ in range(repeat):
@@ -323,7 +352,8 @@ def tune(M: int, N: int, K: int, n_bits: int,
         if us < best_us:
             best, best_us = cand, us
     cache = cache or default_cache()
-    cache.store(M, N, K, n_bits, best, source="measured", us=best_us)
+    cache.store(M, N, K, n_bits, best, source="measured", trunc=trunc,
+                us=best_us)
     if save:
         cache.save()
     return best
@@ -362,24 +392,29 @@ def main(argv: Optional[list[str]] = None) -> None:
     ap.add_argument("--heuristic-only", action="store_true",
                     help="record heuristic tilings without measuring")
     ap.add_argument("--n-bits", default="8,16,24,32",
-                    help="comma-separated digit widths to tune")
+                    help="comma-separated digit widths to tune; truncated "
+                         "modes as n't'p tokens, e.g. 16t12,32t20")
     args = ap.parse_args(argv)
     cache = TuningCache(args.cache)
-    n_bits_list = [int(s) for s in args.n_bits.split(",")]
+    widths = []                       # (n_bits, trunc-or-None) pairs
+    for tok in args.n_bits.split(","):
+        nb, _, tp = tok.strip().partition("t")
+        widths.append((int(nb), int(tp) if tp else None))
     gemms = _launch_gemms()
     seen = set()
     for (M, N, K) in gemms:
-        for nb in n_bits_list:
-            key = bucket_key(M, N, K, nb)
+        for nb, tp in widths:
+            key = bucket_key(M, N, K, nb, tp)
             if key in seen:
                 continue
             seen.add(key)
             if args.heuristic_only:
-                t = heuristic_tiling(M, N, K, nb)
-                cache.store(M, N, K, nb, t, source="heuristic")
+                t = heuristic_tiling(M, N, K, nb, tp)
+                cache.store(M, N, K, nb, t, source="heuristic", trunc=tp)
                 print(f"{key}: heuristic {t.as_dict()}")
             else:
-                t = tune(M, N, K, nb, cache, cap=args.cap, save=False)
+                t = tune(M, N, K, nb, cache, trunc=tp, cap=args.cap,
+                         save=False)
                 print(f"{key}: measured {t.as_dict()}")
     cache.save()
     print(f"wrote {len(seen)} entries to {cache.path}")

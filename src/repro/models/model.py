@@ -93,7 +93,7 @@ class Model:
                                 x, pos, self.eng, memory=memory)
         x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
         emb = params["embed"] if cfg.tie_embeddings else params["unembed"]
-        logits = unembed(emb, x, cfg, self.eng)
+        logits = unembed(emb, x, cfg, self.eng.for_role("head"))
         return logits.astype(jnp.float32), aux
 
     # ---------------- KV / recurrent caches ----------------
@@ -140,7 +140,7 @@ class Model:
         x = rmsnorm(params["final_norm"], self._take_last(x, last_index),
                     cfg.norm_eps)
         emb = params["embed"] if cfg.tie_embeddings else params["unembed"]
-        logits = unembed(emb, x, cfg, self.eng)
+        logits = unembed(emb, x, cfg, self.eng.for_role("head"))
         return logits[:, 0].astype(jnp.float32), cache, memory
 
     def prefill_chunk(self, params: Params, batch: Dict[str, jax.Array],
@@ -166,7 +166,7 @@ class Model:
         x = rmsnorm(params["final_norm"], self._take_last(x, last_index),
                     cfg.norm_eps)
         emb = params["embed"] if cfg.tie_embeddings else params["unembed"]
-        logits = unembed(emb, x, cfg, self.eng)
+        logits = unembed(emb, x, cfg, self.eng.for_role("head"))
         return logits[:, 0].astype(jnp.float32), cache
 
     def decode_step(self, params: Params, token: jax.Array, pos: jax.Array,
@@ -180,7 +180,7 @@ class Model:
                                   memory=memory)
         x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
         emb = params["embed"] if cfg.tie_embeddings else params["unembed"]
-        logits = unembed(emb, x, cfg, self.eng)
+        logits = unembed(emb, x, cfg, self.eng.for_role("head"))
         return logits[:, 0].astype(jnp.float32), cache
 
 

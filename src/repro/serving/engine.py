@@ -68,6 +68,11 @@ class Request:
     prompt: np.ndarray                  # (P,) int32
     max_new_tokens: int = 32
     eos_id: Optional[int] = None
+    # Per-request quality tier: a key of the engine's `quality_tiers`
+    # mapping (None = the deployment's base numerics). The scheduler
+    # keeps decode batches tier-homogeneous, so a request asking for a
+    # truncated olm{n}t{p} tier decodes every token under that mode.
+    quality_tier: Optional[str] = None
     # filled by the engine:
     output: List[int] = dataclasses.field(default_factory=list)
     t_submit: float = 0.0
@@ -92,7 +97,8 @@ class ServeEngine:
                  kv_block_size: int = 16,
                  kv_blocks: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
-                 prefill_bucket_min: int = 8):
+                 prefill_bucket_min: int = 8,
+                 quality_tiers: Optional[Dict[str, str]] = None):
         # Per-deployment numerics override: serve the same checkpoint under
         # any registered DotEngine mode — every configs/olm_array
         # ARRAY_PRECISIONS width ("olm8" .. "olm32") routes decode GEMMs
@@ -139,6 +145,17 @@ class ServeEngine:
         self.slots = slots
         self.max_len = max_len
         self.greedy = greedy
+        # quality_tiers maps tier name -> DotEngine mode: one checkpoint
+        # served at several numerics levels (e.g. {"fast": "olm32t20"}
+        # as a truncated throughput tier next to the base olm32).
+        # Params are shared — digit modes quantize at use — so a tier is
+        # just a Model view with a replaced engine plus its own jitted
+        # prefill/decode entry points; the scheduler keeps batches
+        # tier-homogeneous (below). Tier None is the base deployment.
+        self.quality_tiers = dict(quality_tiers or {})
+        self._active_tier: Optional[str] = None
+        self._tier_models: Dict[Optional[str], Model] = {}
+        self._tier_fns: Dict[Optional[str], tuple] = {}
 
         cfg = model.cfg
         kinds = tuple(cfg.block_pattern) + tuple(cfg.remainder_blocks)
@@ -215,22 +232,48 @@ class ServeEngine:
         self.prefill_traces = 0
         self.decode_traces = 0
 
-        def _decode_fn(p, t, ps, c, m):
-            self.decode_traces += 1
-            return model.decode_step(p, t, ps, c, m)
+        def _make_fns(m: Model):
+            def _decode_fn(p, t, ps, c, mem):
+                self.decode_traces += 1
+                return m.decode_step(p, t, ps, c, mem)
 
-        def _prefill_fn(p, b, c, li):
-            self.prefill_traces += 1
-            return model.prefill(p, b, c, last_index=li)
+            def _prefill_fn(p, b, c, li):
+                self.prefill_traces += 1
+                return m.prefill(p, b, c, last_index=li)
 
-        def _chunk_fn(p, b, c, st, li):
-            self.prefill_traces += 1
-            return model.prefill_chunk(p, b, c, st, last_index=li)
+            def _chunk_fn(p, b, c, st, li):
+                self.prefill_traces += 1
+                return m.prefill_chunk(p, b, c, st, last_index=li)
 
-        self._decode = jax.jit(_decode_fn)
-        self._prefill = jax.jit(_prefill_fn)
-        self._prefill_chunk = jax.jit(_chunk_fn)
+            return (jax.jit(_decode_fn), jax.jit(_prefill_fn),
+                    jax.jit(_chunk_fn))
+
+        # Tiers naming the base mode share the base Model and its jitted
+        # entry points, so adding a redundant tier costs no compiles.
+        by_mode: Dict[str, tuple] = {}
+        for tier, mode in ([(None, model.eng.mode)]
+                           + sorted(self.quality_tiers.items())):
+            if mode not in by_mode:
+                m = model if mode == model.eng.mode else Model(
+                    model.cfg, dataclasses.replace(model.eng, mode=mode))
+                by_mode[mode] = (m, _make_fns(m))
+            self._tier_models[tier], self._tier_fns[tier] = by_mode[mode]
         self._scatter = jax.jit(self._scatter_fn)
+
+    # The jitted entry points of whichever tier currently owns the
+    # lanes; tier switches only happen in _schedule_prefill while the
+    # engine is idle, so every decode batch is tier-homogeneous.
+    @property
+    def _decode(self):
+        return self._tier_fns[self._active_tier][0]
+
+    @property
+    def _prefill(self):
+        return self._tier_fns[self._active_tier][1]
+
+    @property
+    def _prefill_chunk(self):
+        return self._tier_fns[self._active_tier][2]
 
     # ------------- client API -------------
     def submit(self, req: Request):
@@ -238,6 +281,11 @@ class ServeEngine:
         if P < 1 or P > self.max_len - 1:
             raise ValueError(
                 f"prompt length {P} outside [1, max_len-1={self.max_len - 1}]")
+        if req.quality_tier is not None \
+                and req.quality_tier not in self.quality_tiers:
+            raise ValueError(
+                f"unknown quality_tier {req.quality_tier!r}; configured "
+                f"tiers: {sorted(self.quality_tiers) or 'none'}")
         req.t_submit = time.monotonic()
         req.s_submit = self.step_count
         self.queue.append(req)
@@ -327,6 +375,15 @@ class ServeEngine:
         if not free or not self.queue:
             return
         head = self.queue[0]
+        # Tier-homogeneous batching: lanes decode under one tier's
+        # jitted step, so a head asking for a different tier waits for
+        # the running lanes to drain (strict FIFO — later same-tier
+        # requests don't jump it); an idle engine adopts the head's
+        # tier for the next wave.
+        if self.active and head.quality_tier != self._active_tier:
+            return
+        if not self.active:
+            self._active_tier = head.quality_tier
         if self.prefill_chunk and len(head.prompt) > self.prefill_chunk:
             self._start_chunk(free[0], done)
             return
@@ -335,6 +392,8 @@ class ServeEngine:
             if not self.queue:
                 break
             req = self.queue[0]
+            if req.quality_tier != self._active_tier:
+                break  # tier boundary: next wave, after lanes drain
             if self.prefill_chunk and len(req.prompt) > self.prefill_chunk:
                 break  # long prompt: chunked on a later step, alone
             if self.kv_layout == "paged":

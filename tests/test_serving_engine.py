@@ -3,6 +3,7 @@ block-table accounting, prefill bucketing/compile counts, chunked
 prefill, termination reasons, and the deterministic replay harness.
 """
 import dataclasses
+import re
 
 import jax
 import jax.numpy as jnp
@@ -153,10 +154,14 @@ class TestBlockAccounting:
 class TestPagedIdentity:
     @pytest.mark.parametrize("mode", sorted(DotEngine.modes()))
     def test_paged_matches_contiguous_every_dot_mode(self, mode):
-        # olm32's broadcast oracle refuses inside an outer jit without
-        # ambient x64; the Pallas interpret path never needs x64, so the
-        # wide modes take it — same dispatch a real deployment uses.
-        use_pallas = mode in ("olm24", "olm32")
+        # Modes whose WORKING precision exceeds 16 digits need the wide
+        # decode, and their broadcast oracle refuses inside an outer jit
+        # without ambient x64; the Pallas interpret path never needs
+        # x64, so those modes take it — same dispatch a real deployment
+        # uses. Truncated tiers run at p work digits (olm32t16 drops
+        # back inside the plain-f32 window).
+        m = re.fullmatch(r"olm(\d+)(?:t(\d+))?", mode)
+        use_pallas = bool(m) and int(m.group(2) or m.group(1)) > 16
         model, params = _tiny_model(mode, use_pallas=use_pallas)
         prompts = _prompts([3, 6, 5])
         kw = dict(max_new=4, slots=2, max_len=16)

@@ -1,0 +1,339 @@
+"""Truncated working-precision mode family olm{n}t{p}: the error-profile
+digit schedule (Fig. 7 shape at p output digits), bit-identity of the
+tier to the p-digit array, max error vs the f64 oracle inside the
+extended olm_error_bound over ragged + GEMV shapes, the p/n digit-byte
+cut, tuning-cache tier separation, per-layer precision assignment
+(DotEngine.layer_modes / for_role), the hwmodel truncated-vs-full delta,
+and serving quality_tier token-level behavior.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.olm_array import (MATMUL_MODES, TRUNCATED_MODES,
+                                     TRUNCATED_PRECISIONS, engine_for)
+from repro.core.hwmodel import truncated_delta
+from repro.core.numerics import TRUNCATED_SPECS, DotEngine
+from repro.core.online_mul import working_precision
+from repro.core.precision import (OnlinePrecision, reduced_precision,
+                                  truncation_schedule)
+from repro.kernels.online_dot.matmul import (digit_traffic, olm_error_bound,
+                                             olm_matmul)
+from repro.kernels.online_dot.tuning import (Tiling, TuningCache, bucket_key,
+                                             get_tiling, pinned_k_tile)
+from repro.models.config import ModelConfig
+from repro.models.model import Model
+from repro.serving.engine import Request, ServeEngine
+
+# (M, K) @ (K, N): a ragged GEMM (nothing divides the default tiles)
+# and a decode-shaped GEMV.
+SHAPES = (((5, 37), (37, 9)), ((1, 64), (64, 7)))
+
+
+def _operands(shape, seed=0):
+    rng = np.random.default_rng(seed)
+    (M, K), (_, N) = shape
+    return (rng.standard_normal((M, K)).astype(np.float32),
+            rng.standard_normal((K, N)).astype(np.float32))
+
+
+class TestSchedule:
+    def test_validation(self):
+        with pytest.raises(ValueError, match="truncated working precision"):
+            truncation_schedule(16, 16)      # p >= n: not a truncation
+        with pytest.raises(ValueError, match="truncated working precision"):
+            truncation_schedule(16, 20)
+        with pytest.raises(ValueError, match="truncated working precision"):
+            truncation_schedule(16, 3)       # below the delta+1 floor
+
+    @pytest.mark.parametrize("n,p", sorted(TRUNCATED_SPECS))
+    def test_is_the_p_digit_array(self, n, p):
+        cfg = truncation_schedule(n, p)
+        assert cfg == OnlinePrecision(n=p)
+
+    @pytest.mark.parametrize("n,p", sorted(TRUNCATED_SPECS))
+    def test_fig7_up_then_down_shape(self, n, p):
+        """The per-slice live width T(j) ramps up to the Eq. 8 plateau
+        and back down along the error profile — never exceeding the
+        working precision, and strictly below the full n-digit
+        schedule's total activity."""
+        cfg = truncation_schedule(n, p)
+        T = [working_precision(cfg, j) for j in range(-cfg.delta, cfg.n)]
+        peak = max(T)
+        assert peak <= reduced_precision(p)
+        rise = T.index(peak)
+        assert all(a <= b for a, b in zip(T[:rise], T[1:rise + 1]))
+        assert all(a >= b for a, b in zip(T[rise:], T[rise + 1:]))
+        assert T[-1] < peak                  # the decreasing tail exists
+        full = OnlinePrecision(n=n)
+        T_full = [working_precision(full, j)
+                  for j in range(-full.delta, full.n)]
+        assert sum(T) < sum(T_full)
+
+
+class TestRegistration:
+    def test_specs_registered_and_servable(self):
+        modes = DotEngine.modes()
+        for (n, p), name in sorted(TRUNCATED_MODES.items()):
+            assert name == f"olm{n}t{p}"
+            assert name in modes
+            assert engine_for(n, trunc=p).mode == name
+        # acceptance: at least one 16- and one 32-wide tier exists
+        assert any(n == 16 for n, _ in TRUNCATED_SPECS)
+        assert any(n == 32 for n, _ in TRUNCATED_SPECS)
+
+    def test_precisions_table(self):
+        for (n, p), cfg in TRUNCATED_PRECISIONS.items():
+            assert cfg.n == p
+
+    def test_engine_for_rejects_unknown_pairs(self):
+        with pytest.raises(ValueError, match="no truncated olm mode"):
+            engine_for(16, trunc=11)
+        with pytest.raises(ValueError, match="no truncated olm mode"):
+            engine_for(8, trunc=6)
+
+
+class TestNumerics:
+    @pytest.mark.parametrize("n,p", sorted(TRUNCATED_SPECS))
+    @pytest.mark.parametrize("shape", SHAPES)
+    def test_error_within_extended_bound(self, n, p, shape):
+        a, b = _operands(shape)
+        y = np.asarray(olm_matmul(jnp.asarray(a), jnp.asarray(b),
+                                  n_bits=n, trunc=p))
+        oracle = a.astype(np.float64) @ b.astype(np.float64)
+        bound = np.asarray(olm_error_bound(jnp.asarray(a), jnp.asarray(b),
+                                           n_bits=n, trunc=p))
+        assert np.all(np.abs(y - oracle) <= bound)
+
+    @pytest.mark.parametrize("n,p", sorted(TRUNCATED_SPECS))
+    def test_bit_identical_to_p_digit_mode(self, n, p):
+        a, b = _operands(SHAPES[0], seed=3)
+        tier = np.asarray(olm_matmul(jnp.asarray(a), jnp.asarray(b),
+                                     n_bits=n, trunc=p))
+        plain = np.asarray(olm_matmul(jnp.asarray(a), jnp.asarray(b),
+                                      n_bits=p))
+        np.testing.assert_array_equal(tier, plain)
+
+    def test_trunc_none_bound_unchanged(self):
+        a, b = _operands(SHAPES[0], seed=4)
+        base = np.asarray(olm_error_bound(jnp.asarray(a), jnp.asarray(b),
+                                          n_bits=16))
+        ext = np.asarray(olm_error_bound(jnp.asarray(a), jnp.asarray(b),
+                                         n_bits=16, trunc=12))
+        assert np.all(ext > base)            # truncation term is additive
+
+    @pytest.mark.parametrize("n,p", sorted(TRUNCATED_SPECS))
+    def test_digit_byte_cut_is_exactly_p_over_n(self, n, p):
+        full = digit_traffic(64, 64, 32, n_bits=n)
+        cut = digit_traffic(64, 64, 32, n_bits=n, trunc=p)
+        assert cut["grid_bytes"] * n == full["grid_bytes"] * p
+        # the fused path moves raw float tiles: width-independent
+        assert cut["fused_bytes"] == full["fused_bytes"]
+
+    def test_digit_traffic_validates_trunc(self):
+        with pytest.raises(ValueError):
+            digit_traffic(8, 8, 8, n_bits=16, trunc=16)
+
+    @pytest.mark.parametrize("mode", sorted(TRUNCATED_MODES.values()))
+    def test_mode_runs_through_dot_engine(self, mode):
+        a, b = _operands(SHAPES[1], seed=5)
+        eng = DotEngine(mode=mode)
+        y = np.asarray(eng.dot(jnp.asarray(a), jnp.asarray(b)))
+        assert y.shape == (a.shape[0], b.shape[1])
+        assert np.isfinite(y).all()
+
+
+class TestTuningSeparation:
+    def test_bucket_keys_differ_per_tier(self):
+        keys = {bucket_key(64, 64, 32, 16)}
+        for n, p in TRUNCATED_SPECS:
+            k = bucket_key(64, 64, 32, n, p)
+            assert k.endswith(f"b{n}t{p}")
+            assert k not in keys
+            keys.add(k)
+
+    def test_cache_entries_do_not_cross_tiers(self, tmp_path):
+        cache = TuningCache(str(tmp_path / "tuning.json"))
+        cache.store(64, 64, 32, 32, Tiling(16, 4, 4), source="measured")
+        assert cache.lookup(64, 64, 32, 32) is not None
+        assert cache.lookup(64, 64, 32, 32, trunc=20) is None
+        cache.store(64, 64, 32, 32, Tiling(16, 2, 8), source="measured",
+                    trunc=20)
+        assert cache.lookup(64, 64, 32, 32, trunc=20) == Tiling(16, 2, 8)
+        assert cache.lookup(64, 64, 32, 32) == Tiling(16, 4, 4)
+
+    def test_get_tiling_buckets_and_tags_per_tier(self, tmp_path):
+        cache = TuningCache(str(tmp_path / "tuning.json"))
+        t = get_tiling(64, 64, 512, 32, cache, trunc=16)
+        assert t["k_tile"] == pinned_k_tile(512, 16)
+        # the heuristic entry it wrote is keyed t{p} and tagged trunc
+        key = bucket_key(64, 64, 512, 32, 16)
+        entry = cache._load()[key]
+        assert entry["trunc"] == 16
+        assert bucket_key(64, 64, 512, 32) not in cache._load()
+
+
+class TestLayerModes:
+    def test_roles_resolve(self):
+        eng = DotEngine(mode="olm32",
+                        layer_modes={"mlp": "olm32t20", "head": "olm32"})
+        assert eng.for_role("mlp").mode == "olm32t20"
+        assert eng.for_role("mlp").layer_modes is None
+        assert eng.for_role("attn") is eng
+        assert eng.for_role("head") is eng   # same-mode override: no-op
+        assert hash(eng) is not None         # normalized tuple stays static
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="unknown layer_modes roles"):
+            DotEngine(mode="olm16", layer_modes={"lm_head": "olm16"})
+        with pytest.raises(ValueError, match="unregistered modes"):
+            DotEngine(mode="olm16", layer_modes={"mlp": "olm16t11"})
+        with pytest.raises(ValueError, match="unknown GEMM role"):
+            DotEngine(mode="olm16").for_role("embedding")
+
+    def test_model_forward_uses_per_role_engines(self):
+        """A model whose MLPs run a truncated tier must reproduce the
+        forward of the same model hand-assembled at those modes — and
+        differ from the all-base forward."""
+        cfg = ModelConfig(name="t", family="dense", n_layers=1, d_model=16,
+                          n_heads=2, n_kv_heads=2, d_ff=32, vocab_size=64,
+                          param_dtype="float32", compute_dtype="float32")
+        base = Model(cfg, DotEngine(mode="olm16"))
+        params = base.init(jax.random.PRNGKey(0))
+        split = Model(cfg, DotEngine(mode="olm16",
+                                     layer_modes={"mlp": "olm16t10"}))
+        batch = {"tokens": np.arange(6, dtype=np.int32)[None] % 64}
+        y_base, _ = base.forward(params, batch)
+        y_split, _ = split.forward(params, batch)
+        assert not np.array_equal(np.asarray(y_base), np.asarray(y_split))
+        # all-roles override == plain engine at the override mode
+        all_t = Model(cfg, DotEngine(
+            mode="olm16", layer_modes={"attn": "olm16t10",
+                                       "mlp": "olm16t10",
+                                       "head": "olm16t10"}))
+        plain = Model(cfg, DotEngine(mode="olm16t10"))
+        np.testing.assert_array_equal(
+            np.asarray(all_t.forward(params, batch)[0]),
+            np.asarray(plain.forward(params, batch)[0]))
+
+
+class TestHwModel:
+    @pytest.mark.parametrize("n,p", sorted(TRUNCATED_SPECS))
+    def test_delta_reports_positive_savings(self, n, p):
+        d = truncated_delta(n, p)
+        for key in ("area", "power", "activity"):
+            assert 0 < d[f"{key}_save_pct"] < 100
+            assert d[f"trunc_{key}"] < d[f"full_{key}"]
+        assert d["latency_delta"] == n - p
+        assert d["full_latency"] == n + 4    # n + delta + 1
+        assert d["trunc_latency"] == p + 4
+
+    def test_savings_land_in_paper_band(self):
+        """Table I reports 38%/44% power/area savings for Eq. 8
+        truncation; the deeper olm{n}t{p} tiers must save at least as
+        much as a shallow one, monotonically in the cut depth."""
+        ps = sorted((p for n, p in TRUNCATED_SPECS if n == 32),
+                    reverse=True)
+        saves = [truncated_delta(32, p)["area_save_pct"] for p in ps]
+        assert saves == sorted(saves)
+
+
+VOCAB = 64
+
+
+def _serve_model(mode="olm16", **eng_over):
+    cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=16,
+                      n_heads=2, n_kv_heads=2, d_ff=32, vocab_size=VOCAB,
+                      param_dtype="float32", compute_dtype="float32")
+    model = Model(cfg, DotEngine(mode=mode, **eng_over))
+    return model, model.init(jax.random.PRNGKey(1))
+
+
+def _prompts(lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, VOCAB, n).astype(np.int32) for n in lens]
+
+
+class TestServingQualityTier:
+    def test_unknown_tier_rejected(self):
+        model, params = _serve_model()
+        eng = ServeEngine(model, params, slots=1, max_len=16,
+                          quality_tiers={"fast": "olm16t10"})
+        with pytest.raises(ValueError, match="unknown quality_tier"):
+            eng.submit(Request(rid=0, prompt=_prompts([4])[0],
+                               quality_tier="turbo"))
+
+    def test_tier_mode_must_be_registered(self):
+        model, params = _serve_model()
+        with pytest.raises(ValueError, match="unknown DotEngine mode"):
+            ServeEngine(model, params, slots=1, max_len=16,
+                        quality_tiers={"fast": "olm16t11"})
+
+    def test_tier_tokens_match_dedicated_deployment(self):
+        """Token-level acceptance: a request decoded under
+        quality_tier="fast" must emit exactly the tokens a dedicated
+        olm16t10 deployment emits, and the default tier must be
+        unaffected by the tiers mapping existing."""
+        model, params = _serve_model()
+        prompts = _prompts([5, 7])
+
+        def serve(tier, **kw):
+            eng = ServeEngine(model, params, slots=2, max_len=16, **kw)
+            for rid, p in enumerate(prompts):
+                eng.submit(Request(rid=rid, prompt=p, max_new_tokens=4,
+                                   quality_tier=tier))
+            return sorted(eng.run(), key=lambda r: r.rid)
+
+        tiered = serve("fast", quality_tiers={"fast": "olm16t10"})
+        dedicated_eng = ServeEngine(model, params, slots=2, max_len=16,
+                                    dot_mode="olm16t10")
+        for rid, p in enumerate(prompts):
+            dedicated_eng.submit(Request(rid=rid, prompt=p,
+                                         max_new_tokens=4))
+        dedicated = sorted(dedicated_eng.run(), key=lambda r: r.rid)
+        for a, b in zip(tiered, dedicated):
+            assert a.output == b.output
+        base_with = serve(None, quality_tiers={"fast": "olm16t10"})
+        base_without = serve(None)
+        for a, b in zip(base_with, base_without):
+            assert a.output == b.output
+        # the tier actually changes numerics for this checkpoint
+        assert [r.output for r in tiered] != [r.output for r in base_with]
+
+    def test_mixed_queue_stays_tier_homogeneous_and_fifo(self):
+        """Interleaved base/fast submissions: every request completes,
+        each under its own tier's numerics, with strict FIFO across the
+        tier boundary (a later same-tier request never jumps a
+        different-tier head)."""
+        model, params = _serve_model()
+        prompts = _prompts([4, 5, 6, 4], seed=2)
+        tiers = [None, "fast", "fast", None]
+        eng = ServeEngine(model, params, slots=2, max_len=16,
+                          quality_tiers={"fast": "olm16t10"})
+        for rid, (p, tier) in enumerate(zip(prompts, tiers)):
+            eng.submit(Request(rid=rid, prompt=p, max_new_tokens=3,
+                               quality_tier=tier))
+        done = sorted(eng.run(), key=lambda r: r.rid)
+        assert len(done) == 4
+        assert all(r.finish_reason == "length" for r in done)
+        # per-request reference: a dedicated engine at that tier's mode
+        for req, tier in zip(done, tiers):
+            mode = "olm16t10" if tier == "fast" else "olm16"
+            ref_eng = ServeEngine(model, params, slots=1, max_len=16,
+                                  dot_mode=mode)
+            ref_eng.submit(Request(rid=0, prompt=prompts[req.rid],
+                                   max_new_tokens=3))
+            ref = ref_eng.run()[0]
+            assert req.output == ref.output, (req.rid, tier)
+        # FIFO: first-token order follows submission order
+        firsts = [r.s_first for r in done]
+        assert firsts == sorted(firsts)
+
+    def test_redundant_tier_shares_compiles(self):
+        model, params = _serve_model()
+        eng = ServeEngine(model, params, slots=1, max_len=16,
+                          quality_tiers={"same": "olm16"})
+        assert eng._tier_fns["same"] is eng._tier_fns[None]

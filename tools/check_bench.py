@@ -37,7 +37,17 @@ runnable tool. Three independent checks (all on by default):
               entry's recorded shape) must re-pin k_tile to the kernel
               numerics default — the PR-4 invariant that a stale or
               hand-edited cache can adjust blocks (pure perf) but can
-              never change model outputs.
+              never change model outputs. Truncated-mode entries carry
+              "trunc" (the working precision p): their bucket key must
+              end in t{p} — so truncated and full tiers of the same
+              n_bits can never share an entry — and every precision-
+              dependent check runs at p.
+  truncated — from results/bench/BENCH_olm_matmul_truncated.json: every
+              registered olm{n}t{p} tier (numerics.TRUNCATED_SPECS)
+              must be present, cut its digit operand bytes by >= p/n
+              vs the same-width full mode, and keep its measured max
+              error within the extended olm_error_bound (the bench's
+              ulp column is the error/bound fraction).
 
 Usage (CI runs it bare from the repo root after the bench smoke step):
 
@@ -56,12 +66,13 @@ import sys
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, os.path.join(_REPO_ROOT, "src"))
 
-from repro.configs.olm_array import MATMUL_MODES                  # noqa: E402
+from repro.configs.olm_array import (MATMUL_MODES,                # noqa: E402
+                                     TRUNCATED_SPECS)
 from repro.kernels.online_dot.tuning import (TuningCache,         # noqa: E402
-                                             get_tiling, max_k_tile,
-                                             pinned_k_tile)
+                                             bucket_key, get_tiling,
+                                             max_k_tile, pinned_k_tile)
 
-_BUCKET_KEY = re.compile(r"^m\d+n\d+k\d+b\d+$")
+_BUCKET_KEY = re.compile(r"^m\d+n\d+k\d+b\d+(t\d+)?$")
 _TUNING_REQUIRED = {"k_tile": int, "block_m": int, "block_n": int,
                     "source": str, "shape": list, "n_bits": int}
 
@@ -207,6 +218,42 @@ def check_serving(bench_dir: str) -> None:
           f"({100 * paged['bytes_moved'] / contig['bytes_moved']:.1f}%)")
 
 
+def check_truncated(bench_dir: str) -> None:
+    """olm{n}t{p} acceptance gate: every registered truncated spec must
+    appear in BENCH_olm_matmul_truncated.json, its digit operand bytes
+    must be cut by >= p/n vs the same-width full mode, and its measured
+    max error must sit within the extended olm_error_bound (the bench
+    stores ulp as the error/bound fraction)."""
+    rows = _load(os.path.join(
+        bench_dir, "BENCH_olm_matmul_truncated.json"))["rows"]
+    full = {r["n"]: r for r in rows
+            if r["op"] == "olm_matmul_truncated/full"}
+    trunc = {(r["n"], int(r["op"].rsplit("/t", 1)[1])): r for r in rows
+             if re.fullmatch(r"olm_matmul_truncated/t\d+", r["op"])}
+    if missing := set(TRUNCATED_SPECS) - set(trunc):
+        raise CheckFailure(
+            f"truncated bench is missing registered tiers "
+            f"{sorted(missing)}: the sweep must cover every "
+            "TRUNCATED_SPECS entry")
+    for (n, p), r in sorted(trunc.items()):
+        if n not in full:
+            raise CheckFailure(
+                f"olm{n}t{p}: no same-width full-mode row to compare "
+                "against")
+        tb, fb = r["bytes_moved"], full[n]["bytes_moved"]
+        if tb * n > fb * p:
+            raise CheckFailure(
+                f"olm{n}t{p}: digit operand bytes {tb} vs full {fb} — "
+                f"below the documented >= {p}/{n} cut")
+        if not isinstance(r["ulp"], (int, float)) or r["ulp"] > 1.0:
+            raise CheckFailure(
+                f"olm{n}t{p}: error/bound fraction {r['ulp']!r} exceeds "
+                "1.0 — outside the extended olm_error_bound")
+        print(f"  truncated olm{n}t{p}: {tb} B vs full {fb} B "
+              f"({fb / tb:.2f}x >= {n}/{p} cut), err/bound "
+              f"{r['ulp']:.3f} ok")
+
+
 def check_tuning(tuning_path: str) -> None:
     """Schema + the k_tile-re-pin numerics invariant, per cached entry."""
     data = _load(tuning_path)
@@ -233,22 +280,40 @@ def check_tuning(tuning_path: str) -> None:
                 f"got {e['shape']}")
         if min(e["block_m"], e["block_n"], e["k_tile"]) < 1:
             raise CheckFailure(f"{tuning_path} {key}: non-positive tiling")
-        # Cached k_tile must stay inside this width's exact decode
-        # window (n_bits + 2*ceil(log2 k_tile) <= the per-dtype window):
+        # Truncated-mode entries record their working precision under
+        # "trunc"; every precision-dependent check below runs at the
+        # WORK digits, and the bucket key must carry the matching t{p}
+        # suffix — a truncated entry that could answer a full-mode
+        # lookup (or vice versa) would serve the wrong tier's tiling.
+        trunc = e.get("trunc")
+        if trunc is not None and (not isinstance(trunc, int)
+                                  or not 0 < trunc < e["n_bits"]):
+            raise CheckFailure(
+                f"{tuning_path} {key}: trunc must be an int in "
+                f"(0, n_bits={e['n_bits']}), got {trunc!r}")
+        M, N, K = e["shape"]
+        want_key = bucket_key(M, N, K, e["n_bits"], trunc)
+        if key != want_key:
+            raise CheckFailure(
+                f"{tuning_path} {key}: key does not match its entry "
+                f"(shape/n_bits/trunc rebucket to {want_key!r}) — "
+                "truncated and full tiers may not share entries")
+        work = trunc if trunc is not None else e["n_bits"]
+        # Cached k_tile must stay inside the work width's exact decode
+        # window (work + 2*ceil(log2 k_tile) <= the per-dtype window):
         # a hand-edited or stale entry past max_k_tile would decode an
         # over-long digit stream and silently lose bit-exactness.
-        if e["k_tile"] > max_k_tile(e["n_bits"]):
+        if e["k_tile"] > max_k_tile(work):
             raise CheckFailure(
                 f"{tuning_path} {key}: k_tile {e['k_tile']} exceeds "
-                f"max_k_tile({e['n_bits']}) = {max_k_tile(e['n_bits'])} — "
+                f"max_k_tile({work}) = {max_k_tile(work)} — "
                 "the stream would leave the exact decode window")
         # The invariant: whatever k_tile the entry stores, what
         # tiling="auto" serves for this entry's shape must be the
         # kernel numerics default (tuning.pinned_k_tile — the same
         # formula the auto path itself uses, so the guard can't drift).
-        M, N, K = e["shape"]
-        served = get_tiling(M, N, K, e["n_bits"], cache)
-        pinned = pinned_k_tile(K, e["n_bits"])
+        served = get_tiling(M, N, K, e["n_bits"], cache, trunc=trunc)
+        pinned = pinned_k_tile(K, work)
         if served["k_tile"] != pinned:
             raise CheckFailure(
                 f"{tuning_path} {key}: auto would serve k_tile="
@@ -268,7 +333,8 @@ def main(argv=None) -> int:
                                                      "tuning.json"))
     ap.add_argument("--tol", type=float, default=0.1,
                     help="relative tolerance for derived/ulp columns")
-    ap.add_argument("--only", default="traffic,baseline,serving,tuning",
+    ap.add_argument("--only",
+                    default="traffic,baseline,serving,tuning,truncated",
                     help="comma-separated subset of checks to run")
     args = ap.parse_args(argv)
     checks = {
@@ -277,6 +343,7 @@ def main(argv=None) -> int:
                                            args.tol),
         "serving": lambda: check_serving(args.bench),
         "tuning": lambda: check_tuning(args.tuning),
+        "truncated": lambda: check_truncated(args.bench),
     }
     failed = False
     for name in args.only.split(","):
