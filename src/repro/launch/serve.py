@@ -5,6 +5,14 @@ pass --kv-layout contiguous for the dense-oracle layout, --kv-blocks /
 --kv-block-size to size the paged pool, and --prefill-chunk to split
 long prompts into decode-interleaved chunks.
 
+Robustness knobs (see serving/engine.py): --max-queue bounds admission
+(overflow sheds with finish_reason="rejected"), --deadline-steps gives
+every request a scheduler-step budget, --no-preempt restores terminal
+cache_full instead of preemption-with-recompute, --degrade-ladder
+names a comma-separated downshift ladder of DotEngine modes (rung 0 =
+the deployment base mode), and --numerics-check finishes NaN/Inf lanes
+with finish_reason="numerics".
+
 Usage (CPU smoke — deliverable (b) example):
   PYTHONPATH=src python -m repro.launch.serve --arch internlm2_1_8b --smoke \
       --requests 12 --slots 4 --max-new 24
@@ -41,6 +49,22 @@ def main(argv=None):
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="split long prompts into chunks of this many "
                          "tokens, interleaved with decode steps")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bound the admission queue; overflow submits "
+                         "finish with reason 'rejected'")
+    ap.add_argument("--deadline-steps", type=int, default=None,
+                    help="scheduler-step budget per request; expired "
+                         "requests finish with reason 'deadline'")
+    ap.add_argument("--no-preempt", action="store_true",
+                    help="terminal cache_full on block exhaustion "
+                         "instead of preemption-with-recompute")
+    ap.add_argument("--degrade-ladder", default=None,
+                    help="comma-separated DotEngine-mode downshift "
+                         "ladder, rung 0 = the base mode (e.g. "
+                         "'olm32,olm32t24,olm32t16')")
+    ap.add_argument("--numerics-check", action="store_true",
+                    help="finish NaN/Inf lanes with reason 'numerics' "
+                         "instead of streaming garbage tokens")
     args = ap.parse_args(argv)
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -49,28 +73,38 @@ def main(argv=None):
                          "use examples/ for enc-dec")
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
+    ladder = (args.degrade_ladder.split(",")
+              if args.degrade_ladder else None)
     engine = ServeEngine(model, params, slots=args.slots,
                          max_len=args.max_len,
                          kv_layout=args.kv_layout,
                          kv_block_size=args.kv_block_size,
                          kv_blocks=args.kv_blocks,
-                         prefill_chunk=args.prefill_chunk)
+                         prefill_chunk=args.prefill_chunk,
+                         max_queue=args.max_queue,
+                         preempt=not args.no_preempt,
+                         numerics_check=args.numerics_check,
+                         degrade_ladder=ladder)
 
     rng = np.random.default_rng(args.seed)
     for rid in range(args.requests):
         plen = int(rng.integers(4, args.max_len // 4))
         prompt = rng.integers(0, cfg.vocab_size, size=plen).astype(np.int32)
         engine.submit(Request(rid=rid, prompt=prompt,
-                              max_new_tokens=args.max_new))
+                              max_new_tokens=args.max_new,
+                              deadline_steps=args.deadline_steps))
     done = engine.run()
     rep = engine.latency_report(done)
     for r in done[:4]:
+        tier = f", tier {r.served_tier}" if r.served_tier else ""
         print(f"req {r.rid}: prompt {len(r.prompt)} toks -> {len(r.output)} "
-              f"new ({r.finish_reason})")
+              f"new ({r.finish_reason}{tier})")
     print(json.dumps(rep))
     print(json.dumps(engine.kv_report()))
+    print(json.dumps({"counters": dict(sorted(engine.counters.items()))}))
     assert len(done) == args.requests, "engine dropped requests"
     rep["kv"] = engine.kv_report()
+    rep["counters"] = dict(engine.counters)
     return rep
 
 

@@ -102,9 +102,13 @@ def paged_pool_write(pool, table, lane_pos, vals):
 
     pool (NB, bs, H, D); table (B, MBL) int32; lane_pos (B,) absolute
     position each lane writes; vals (B, 1, H, D). Lanes whose table row
-    is unowned (all TRASH_BLOCK) land in the trash block.
+    is unowned (all TRASH_BLOCK) land in the trash block, and so does
+    any out-of-range id (a corrupted table entry): dynamic_update_slice
+    would otherwise clamp it to the last block — silently overwriting
+    another lane's live KV instead of a sacrificial one.
     """
-    bs = pool.shape[1]
+    NB, bs = pool.shape[0], pool.shape[1]
+    table = jnp.where((table >= 0) & (table < NB), table, TRASH_BLOCK)
     blk = lane_pos // bs
     off = lane_pos - blk * bs
 
@@ -124,9 +128,13 @@ def paged_pool_view(pool, table):
     """Materialize each lane's owned blocks as a contiguous (B, T, H, D)
     view, T = MBL * block_size, via a sequential dynamic_slice walk over
     the block table (unowned slots read the trash block — garbage, but
-    always causally masked because they sit past the lane's position)."""
+    always causally masked because they sit past the lane's position).
+    Out-of-range ids (corrupted table entries) also read the trash block
+    instead of dynamic_slice's silent clamp-to-last-block, so a corrupt
+    entry can never leak another lane's KV into this lane's scores."""
     NB, bs, H, D = pool.shape
     B, MBL = table.shape
+    table = jnp.where((table >= 0) & (table < NB), table, TRASH_BLOCK)
     out = jnp.zeros((B, MBL * bs, H, D), pool.dtype)
     lanes = jnp.asarray(np.repeat(np.arange(B, dtype=np.int32), MBL))
     slots = jnp.asarray(np.tile(np.arange(MBL, dtype=np.int32), B))

@@ -1,2 +1,5 @@
+from .degrade import DegradeLadder
 from .engine import Request, ServeEngine
+from .faults import (FaultConfig, FaultInjector, TransientPrefillError,
+                     build_fault_plan)
 from .replay import ReplayConfig, build_workload, run_replay, step_report

@@ -32,14 +32,49 @@ Finished lanes (EOS or max_tokens) are recycled immediately — the decode
 batch never drains waiting for stragglers, which is the serving-side
 analogue of the paper's pipeline never idling between vector elements
 (Table III).
+
+**Fault tolerance.** Resource pressure no longer has a single terminal
+answer (`finish_reason="cache_full"`); the engine degrades instead:
+
+  * **Deadlines** — `Request.deadline_steps` is a scheduler-step budget
+    from submission; expired requests finish with
+    `finish_reason="deadline"` at the schedule and decode boundaries
+    (never mid-token), keeping whatever tokens they already produced.
+  * **Backpressure** — `max_queue` bounds the admission queue; an
+    overflowing submit is shed immediately with
+    `finish_reason="rejected"` instead of growing the queue without
+    bound (sheds are drained into the `run`/`step` done list).
+  * **Preemption with recompute** — decode-time block exhaustion evicts
+    the lowest-priority active lane (lowest `Request.priority`, then
+    youngest activation): its paged blocks return to the free list, its
+    table rows trash-reset, and it requeues at the head to re-prefill
+    from prompt + already-generated tokens. The paged view's
+    slot == position invariant makes the recomputed stream
+    **token-identical** to an uninterrupted run. `preempt_limit` bounds
+    ping-pong; `preempt=False` restores the old terminal behavior.
+  * **Tier degradation** — `degrade_ladder` (serving/degrade.py) walks
+    rejected/preempted requests down a ladder of registered DotEngine
+    modes under queue/KV pressure; `Request.served_tier` records the
+    mode actually served, whose `olm_error_bound` still holds.
+  * **Integrity + numerics guards** — the block allocator validates
+    every id it hands out (in-range, singly-owned) and detects
+    double-frees loudly; `integrity_audit=True` additionally audits the
+    lane tables each step and recovers corrupted lanes by
+    preempt-and-recompute; `numerics_check=True` finishes a lane whose
+    logits go NaN/Inf with `finish_reason="numerics"` rather than
+    streaming garbage. Both off by default — the fast path is
+    unchanged. `serving/faults.py` injects deterministic faults
+    against all of this through the `reserve_blocks` /
+    `corrupt_table_entry` / `logits_tap` / `prefill_fault` surfaces.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
 import time
-from collections import deque
-from typing import Any, Deque, Dict, List, Optional, Tuple, Union
+from collections import Counter, deque
+from typing import Any, Callable, Deque, Dict, List, Optional, Sequence, \
+    Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -47,6 +82,9 @@ import numpy as np
 
 from repro.models.layers import TRASH_BLOCK, paged_scatter_rows
 from repro.models.model import Model
+
+from .degrade import DegradeLadder
+from .faults import TransientPrefillError
 
 __all__ = ["Request", "ServeEngine"]
 
@@ -73,19 +111,39 @@ class Request:
     # keeps decode batches tier-homogeneous, so a request asking for a
     # truncated olm{n}t{p} tier decodes every token under that mode.
     quality_tier: Optional[str] = None
+    # Scheduler-step budget from submission (None = no deadline): a
+    # request still unfinished `deadline_steps` steps after submit
+    # finishes with finish_reason="deadline", keeping its partial
+    # output. Enforced at the schedule/decode boundaries, never
+    # mid-token, so a deadlined stream is a prefix of the full stream.
+    deadline_steps: Optional[int] = None
+    # Preemption victim ordering: lower priority is evicted first when
+    # the block pool runs dry (ties: youngest activation, then highest
+    # rid). Priority does not reorder the FIFO admission queue.
+    priority: int = 0
     # filled by the engine:
     output: List[int] = dataclasses.field(default_factory=list)
     t_submit: float = 0.0
     t_first: Optional[float] = None
     t_done: Optional[float] = None
     t_queue: float = 0.0                # seconds waited before prefill
-    finish_reason: Optional[str] = None  # eos | length | max_len | cache_full
+    # eos | length | max_len | cache_full | deadline | rejected |
+    # numerics | failed
+    finish_reason: Optional[str] = None
     # scheduler-step stamps: deterministic virtual-time analogues of the
     # wall-clock fields, used by the replay bench so its committed
     # baseline doesn't depend on host speed.
     s_submit: Optional[int] = None
     s_first: Optional[int] = None
     s_done: Optional[int] = None
+    # robustness bookkeeping (filled by the engine):
+    n_preempts: int = 0                 # times evicted + requeued
+    n_retries: int = 0                  # transient prefill retries
+    served_tier: Optional[str] = None   # DotEngine mode actually served
+    degrade_rung: int = 0               # ladder rung actually served
+    # engine-internal: effective tier after degradation (a key of the
+    # engine's quality_tiers map; None = the request's own tier).
+    eff_tier: Optional[str] = None
 
 
 class ServeEngine:
@@ -98,7 +156,17 @@ class ServeEngine:
                  kv_blocks: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
                  prefill_bucket_min: int = 8,
-                 quality_tiers: Optional[Dict[str, str]] = None):
+                 quality_tiers: Optional[Dict[str, str]] = None,
+                 max_queue: Optional[int] = None,
+                 preempt: bool = True,
+                 preempt_limit: int = 8,
+                 numerics_check: bool = False,
+                 integrity_audit: bool = False,
+                 prefill_retries: int = 3,
+                 prefill_backoff: int = 1,
+                 degrade_ladder: Optional[Sequence[str]] = None,
+                 degrade_free_frac: float = 0.25,
+                 degrade_queue_headroom: Optional[int] = None):
         # Per-deployment numerics override: serve the same checkpoint under
         # any registered DotEngine mode — every configs/olm_array
         # ARRAY_PRECISIONS width ("olm8" .. "olm32") routes decode GEMMs
@@ -153,9 +221,55 @@ class ServeEngine:
         # prefill/decode entry points; the scheduler keeps batches
         # tier-homogeneous (below). Tier None is the base deployment.
         self.quality_tiers = dict(quality_tiers or {})
+
+        # Tier-degradation ladder: rungs 1.. are registered as internal
+        # quality tiers keyed by their mode name, so a degraded request
+        # rides the existing tier-homogeneous scheduler unchanged and is
+        # served exactly as a dedicated deployment at that mode would
+        # serve it.
+        self.degrade: Optional[DegradeLadder] = None
+        if degrade_ladder is not None:
+            headroom = (max(1, slots) if degrade_queue_headroom is None
+                        else degrade_queue_headroom)
+            self.degrade = DegradeLadder.build(
+                degrade_ladder, base_mode=model.eng.mode,
+                free_frac=degrade_free_frac, queue_headroom=headroom)
+            for m in self.degrade.ladder[1:]:
+                if self.quality_tiers.setdefault(m, m) != m:
+                    raise ValueError(
+                        f"degrade_ladder rung {m!r} collides with a "
+                        f"quality tier of the same name mapped to mode "
+                        f"{self.quality_tiers[m]!r}")
         self._active_tier: Optional[str] = None
         self._tier_models: Dict[Optional[str], Model] = {}
         self._tier_fns: Dict[Optional[str], tuple] = {}
+
+        if max_queue is not None and max_queue < 1:
+            raise ValueError("max_queue must be >= 1 (or None: unbounded)")
+        if preempt_limit < 1:
+            raise ValueError("preempt_limit must be >= 1")
+        if prefill_retries < 0 or prefill_backoff < 0:
+            raise ValueError("prefill_retries/prefill_backoff must be >= 0")
+        self.max_queue = max_queue
+        self.preempt = preempt
+        self.preempt_limit = preempt_limit
+        self.numerics_check = numerics_check
+        self.integrity_audit = integrity_audit
+        self.prefill_retries = prefill_retries
+        self.prefill_backoff = prefill_backoff
+        # Robustness event counters (recoveries; terminal finish_reason
+        # counts also land here, keyed by the reason string).
+        self.counters: Counter = Counter()
+        # Requests shed at submit (finish_reason="rejected"); drained
+        # into the done list at the next step()/run() boundary.
+        self.shed: Deque[Request] = deque()
+        # Fault-injection / instrumentation surfaces (serving/faults.py):
+        # logits_tap(lg_np, phase, step) -> lg_np runs host-side on the
+        # raw logits; prefill_fault(step, reqs) may raise
+        # TransientPrefillError to exercise the retry/backoff path.
+        self.logits_tap: Optional[Callable] = None
+        self.prefill_fault: Optional[Callable] = None
+        self._prefill_backoff_until = 0
 
         cfg = model.cfg
         kinds = tuple(cfg.block_pattern) + tuple(cfg.remainder_blocks)
@@ -213,10 +327,21 @@ class ServeEngine:
             self._owned: Dict[int, List[int]] = {s: [] for s in range(slots)}
             self._table = np.full((slots, mbl), TRASH_BLOCK, np.int32)
             self.blocks_peak_used = 0
+            # Integrity shadow state: every usable block is in exactly
+            # one of {free, owned-by-one-lane, held}. _owner/_free_set
+            # let alloc/free validate ids in O(1) and detect double
+            # frees loudly; _held tracks blocks reserved out of the pool
+            # (fault injection / future prefix-cache pinning).
+            self._owner: Dict[int, int] = {}
+            self._free_set = set(self._free)
+            self._held: set = set()
         else:
             self.kv_blocks = 0
             self.blocks_per_lane = 0
             self.blocks_peak_used = 0
+            self._owner = {}
+            self._free_set = set()
+            self._held = set()
             self.cache = model.init_cache(slots, max_len)
         self.active: Dict[int, Request] = {}       # slot -> request
         self.pos = np.zeros((slots,), np.int32)
@@ -286,9 +411,25 @@ class ServeEngine:
             raise ValueError(
                 f"unknown quality_tier {req.quality_tier!r}; configured "
                 f"tiers: {sorted(self.quality_tiers) or 'none'}")
+        if req.deadline_steps is not None and req.deadline_steps < 1:
+            raise ValueError(
+                f"deadline_steps must be >= 1, got {req.deadline_steps}")
         req.t_submit = time.monotonic()
         req.s_submit = self.step_count
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            # Backpressure: past the hard bound, try re-admitting one
+            # ladder rung down (bounded extra headroom); otherwise shed
+            # with finish_reason="rejected" — never grow without bound.
+            if (self.degrade is not None
+                    and len(self.queue)
+                    < self.max_queue + self.degrade.queue_headroom
+                    and self._downshift(req)):
+                self.queue.append(req)
+                return True
+            self._finish(None, req, "rejected", self.shed)
+            return False
         self.queue.append(req)
+        return True
 
     def run(self, *, max_steps: int = 10_000) -> List[Request]:
         done: List[Request] = []
@@ -297,16 +438,24 @@ class ServeEngine:
                 and steps < max_steps:
             self.step(done)
             steps += 1
+        self._drain_shed(done)
         return done
 
     def step(self, done: List[Request]):
         """One scheduler iteration: advance/admit prefill work, then one
         batched decode step for every active lane. Exposed so drivers
         (the traffic-replay bench) can interleave submissions."""
+        self._drain_shed(done)
+        if self.integrity_audit and self.kv_layout == "paged":
+            self._audit_tables(done)
         self._schedule_prefill(done)
         if self.active:
             self._decode_step(done)
         self.step_count += 1
+
+    def _drain_shed(self, done: List[Request]):
+        while self.shed:
+            done.append(self.shed.popleft())
 
     # ------------- block allocator (paged layout) -------------
     @property
@@ -321,11 +470,20 @@ class ServeEngine:
         self.blocks_peak_used = max(self.blocks_peak_used, used)
 
     def _alloc_blocks(self, slot: int, n: int) -> bool:
-        """Give `slot` its next n blocks; all-or-nothing."""
+        """Give `slot` its next n blocks; all-or-nothing. Every id the
+        free list yields is validated (in-range, not currently owned)
+        before it can reach a lane table."""
         if len(self._free) < n:
             return False
         for _ in range(n):
             bid = self._free.pop()
+            self._free_set.discard(bid)
+            if not 1 <= bid < self.kv_blocks or bid in self._owner:
+                raise RuntimeError(
+                    f"block-allocator integrity: free list yielded block "
+                    f"{bid} (usable range [1, {self.kv_blocks}), owner "
+                    f"{self._owner.get(bid)!r}) — free list corrupted")
+            self._owner[bid] = slot
             j = len(self._owned[slot])
             self._owned[slot].append(bid)
             self._table[slot, j] = bid
@@ -336,10 +494,106 @@ class ServeEngine:
     def _free_slot_blocks(self, slot: int):
         owned = self._owned[slot]
         if owned:
+            for bid in owned:
+                if bid in self._free_set or self._owner.get(bid) != slot:
+                    why = ("already in the free list" if bid in self._free_set
+                           else f"owned by lane {self._owner.get(bid)!r}")
+                    raise RuntimeError(
+                        f"double-free: lane {slot} freeing block {bid} "
+                        f"which is {why} — allocator state corrupted")
+                del self._owner[bid]
             self._free.extend(reversed(owned))
+            self._free_set.update(owned)
             self._owned[slot] = []
             self._table[slot, :] = TRASH_BLOCK
             self._table_dirty = True
+
+    def reserve_blocks(self, n: int) -> List[int]:
+        """Take up to n blocks out of the free pool (fault injection /
+        future prefix-cache pinning); they count as used until
+        release_blocks returns them. Returns the reserved ids."""
+        if self.kv_layout != "paged":
+            raise ValueError("reserve_blocks requires kv_layout='paged'")
+        ids: List[int] = []
+        for _ in range(min(n, len(self._free))):
+            bid = self._free.pop()
+            self._free_set.discard(bid)
+            self._held.add(bid)
+            ids.append(bid)
+        self._note_usage()
+        return ids
+
+    def release_blocks(self, ids: Sequence[int]):
+        """Return blocks taken by reserve_blocks to the free pool."""
+        for bid in ids:
+            if bid not in self._held:
+                raise RuntimeError(
+                    f"release_blocks: block {bid} was not reserved")
+            self._held.discard(bid)
+            self._free.append(bid)
+            self._free_set.add(bid)
+
+    def corrupt_table_entry(self, slot: int, j: int, bid: int):
+        """FAULT-INJECTION surface: overwrite one host block-table entry
+        (and flush it to the device) bypassing the allocator guards,
+        simulating table corruption. The integrity audit
+        (integrity_audit=True) detects and recovers it."""
+        if self.kv_layout != "paged":
+            raise ValueError("corrupt_table_entry requires kv_layout='paged'")
+        self._table[slot, j] = bid
+        self._table_dirty = True
+        self._flush_tables()
+
+    def _audit_tables(self, done: List[Request]):
+        """Step-boundary integrity audit + recovery: a lane whose table
+        row disagrees with the allocator's owned list (foreign or
+        out-of-range id, lost entry) is repaired — an active lane is
+        preempted and recomputes from its accumulated tokens (which the
+        paged slot==position invariant makes bit-identical), an idle
+        lane's row is rebuilt from the allocator's truth. Faults inject
+        at the step boundary and the audit runs at step start, so a
+        corrupted entry is never used for a cache write or read."""
+        mbl = self.blocks_per_lane
+        for slot in range(self.slots):
+            owned = self._owned[slot]
+            want = owned + [TRASH_BLOCK] * (mbl - len(owned))
+            if list(self._table[slot]) == want:
+                continue
+            self.counters["table_repairs"] += 1
+            req = self.active.get(slot)
+            if req is not None:
+                self._preempt(slot, req, done)
+            else:
+                self._table[slot, :] = TRASH_BLOCK
+                self._table[slot, :len(owned)] = owned
+                self._table_dirty = True
+
+    def _integrity_ok(self) -> bool:
+        """Self-check: usable blocks partition into free/owned/held with
+        no duplicates, shadow maps agree, and every lane table row is
+        its owned list followed by trash padding."""
+        if self.kv_layout != "paged":
+            return True
+        free, held = set(self._free), set(self._held)
+        owned_all = [b for blks in self._owned.values() for b in blks]
+        owned = set(owned_all)
+        if len(free) != len(self._free) or len(owned) != len(owned_all):
+            return False  # duplicate ids inside one class
+        if (free & owned) or (free & held) or (owned & held):
+            return False  # a block in two classes at once
+        if free | owned | held != set(range(1, self.kv_blocks)):
+            return False  # lost or out-of-range blocks
+        if free != self._free_set:
+            return False
+        if any(self._owner.get(b) != s
+               for s, blks in self._owned.items() for b in blks) \
+                or len(self._owner) != len(owned):
+            return False
+        mbl = self.blocks_per_lane
+        return all(
+            list(self._table[s]) == self._owned[s]
+            + [TRASH_BLOCK] * (mbl - len(self._owned[s]))
+            for s in range(self.slots))
 
     def _flush_tables(self):
         """Push the host-side block tables into the device cache pytree.
@@ -366,11 +620,92 @@ class ServeEngine:
         self.cache = walk(self.cache)
         self._table_dirty = False
 
+    # ------------- robustness helpers -------------
+    def _req_tokens(self, req: Request) -> np.ndarray:
+        """Tokens to prefill for a request: the prompt, plus — after a
+        preemption — everything it already generated, so the recomputed
+        lane resumes at exactly the pre-eviction position (the paged
+        slot==position invariant makes the resumed stream
+        bit-identical to an uninterrupted run)."""
+        if not req.output:
+            return np.asarray(req.prompt, np.int32)
+        return np.concatenate([np.asarray(req.prompt, np.int32),
+                               np.asarray(req.output, np.int32)])
+
+    def _tier_of(self, req: Request) -> Optional[str]:
+        """Effective scheduling tier: the degraded tier if the ladder
+        downshifted this request, else its own quality_tier."""
+        return req.eff_tier if req.eff_tier is not None else req.quality_tier
+
+    def _tier_mode(self, tier: Optional[str]) -> str:
+        return self._tier_models[tier].eng.mode
+
+    def _downshift(self, req: Request) -> bool:
+        """Move a request one ladder rung down (tracked via eff_tier, a
+        mode-named internal quality tier). False at the bottom rung."""
+        if self.degrade is None:
+            return False
+        rung = self.degrade.rung_of(self._tier_mode(self._tier_of(req)))
+        nxt = self.degrade.next_mode(rung)
+        if nxt is None:
+            return False
+        req.eff_tier = nxt
+        req.degrade_rung = rung + 1
+        self.counters["degraded"] += 1
+        return True
+
+    def _expired(self, req: Request) -> bool:
+        return (req.deadline_steps is not None
+                and req.s_submit is not None
+                and self.step_count - req.s_submit >= req.deadline_steps)
+
+    def _purge_queue_deadlines(self, done: List[Request]):
+        if not any(r.deadline_steps is not None for r in self.queue):
+            return
+        kept: Deque[Request] = deque()
+        for req in self.queue:
+            if self._expired(req):
+                self._finish(None, req, "deadline", done)
+            else:
+                kept.append(req)
+        self.queue = kept
+
+    def _pick_victim(self) -> Tuple[int, Request]:
+        """Deterministic preemption victim among active lanes: lowest
+        priority first, then youngest activation, then highest rid."""
+        return min(self.active.items(),
+                   key=lambda kv: (kv[1].priority,
+                                   -(kv[1].s_first or 0), -kv[1].rid))
+
+    def _preempt(self, slot: int, req: Request, done: List[Request]):
+        """Evict an active lane: free its paged blocks (trash-resetting
+        its table row), requeue it at the head to re-prefill from its
+        accumulated tokens. Past preempt_limit the eviction becomes
+        terminal (cache_full) to bound ping-pong. Under KV pressure a
+        requeued request downshifts one degrade-ladder rung."""
+        self.active.pop(slot, None)
+        self.pos[slot] = 0
+        self.last_tok[slot] = 0
+        if self.kv_layout == "paged":
+            self._free_slot_blocks(slot)
+        if req.n_preempts >= self.preempt_limit:
+            self._finish(None, req, "cache_full", done)
+            return
+        req.n_preempts += 1
+        self.counters["preempted"] += 1
+        if self.degrade is not None and self.degrade.kv_pressure(
+                self.free_blocks, self.kv_blocks - 1):
+            self._downshift(req)
+        self.queue.appendleft(req)
+
     # ------------- prefill scheduling -------------
     def _schedule_prefill(self, done: List[Request]):
+        self._purge_queue_deadlines(done)
         if self.pending_chunk is not None:
             self._advance_chunk(done)
             return
+        if self.step_count < self._prefill_backoff_until:
+            return  # backing off after a transient prefill failure
         free = [s for s in range(self.slots) if s not in self.active]
         if not free or not self.queue:
             return
@@ -380,11 +715,12 @@ class ServeEngine:
         # the running lanes to drain (strict FIFO — later same-tier
         # requests don't jump it); an idle engine adopts the head's
         # tier for the next wave.
-        if self.active and head.quality_tier != self._active_tier:
+        if self.active and self._tier_of(head) != self._active_tier:
             return
         if not self.active:
-            self._active_tier = head.quality_tier
-        if self.prefill_chunk and len(head.prompt) > self.prefill_chunk:
+            self._active_tier = self._tier_of(head)
+        if self.prefill_chunk \
+                and len(self._req_tokens(head)) > self.prefill_chunk:
             self._start_chunk(free[0], done)
             return
         batch: List[Tuple[int, Request]] = []
@@ -392,20 +728,24 @@ class ServeEngine:
             if not self.queue:
                 break
             req = self.queue[0]
-            if req.quality_tier != self._active_tier:
+            if self._tier_of(req) != self._active_tier:
                 break  # tier boundary: next wave, after lanes drain
-            if self.prefill_chunk and len(req.prompt) > self.prefill_chunk:
+            toks = self._req_tokens(req)
+            if self.prefill_chunk and len(toks) > self.prefill_chunk:
                 break  # long prompt: chunked on a later step, alone
             if self.kv_layout == "paged":
-                need = -(-len(req.prompt) // self.kv_block_size)
+                need = -(-len(toks) // self.kv_block_size)
                 if not self._alloc_blocks(slot, need):
-                    if not batch and not self.active:
-                        # nothing running and the whole free pool still
-                        # can't hold this prompt: it can never be served
+                    if not batch and not self.active \
+                            and need > self.kv_blocks - 1:
+                        # the whole pool can't hold this prompt even
+                        # when idle: it can never be served (transient
+                        # shortfalls — reserved blocks, other lanes —
+                        # wait instead)
                         self.queue.popleft()
                         self._finish(None, req, "cache_full", done)
                         continue
-                    break  # wait for running lanes to free blocks
+                    break  # wait for blocks to come back
             self.queue.popleft()
             batch.append((slot, req))
             if not self._bucketed:
@@ -418,7 +758,14 @@ class ServeEngine:
         """One batched GEMM-shaped prefill over up to len(free-slots)
         waiting requests, padded to pow2 (rows, length) buckets."""
         t_start = time.monotonic()
-        lens = [len(r.prompt) for _, r in batch]
+        if self.prefill_fault is not None:
+            try:
+                self.prefill_fault(self.step_count, [r for _, r in batch])
+            except TransientPrefillError:
+                self._prefill_retry(batch, done)
+                return
+        seqs = [self._req_tokens(r) for _, r in batch]
+        lens = [len(s) for s in seqs]
         n = len(batch)
         if self._bucketed:
             Sb = min(_pow2_bucket(max(lens), self.prefill_bucket_min),
@@ -431,7 +778,7 @@ class ServeEngine:
         slot_ids = np.zeros((Bp,), np.int32)
         valid = np.zeros((Bp,), bool)
         for i, (slot, req) in enumerate(batch):
-            tokens[i, :lens[i]] = req.prompt
+            tokens[i, :lens[i]] = seqs[i]
             last_idx[i] = lens[i] - 1
             slot_ids[i] = slot
             valid[i] = True
@@ -439,18 +786,58 @@ class ServeEngine:
         logits, row_cache, _mem = self._prefill(
             self.params, {"tokens": jnp.asarray(tokens)}, row_cache,
             jnp.asarray(last_idx))
-        toks = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        if self.logits_tap is not None or self.numerics_check:
+            lg = np.asarray(logits)
+            if self.logits_tap is not None:
+                lg = self.logits_tap(lg, "prefill", self.step_count)
+            if self.numerics_check:
+                finite = np.isfinite(lg).all(axis=-1)
+                for i, (slot, req) in enumerate(batch):
+                    if not finite[i]:
+                        # bad row: never scattered, never activated
+                        valid[i] = False
+                        if self.kv_layout == "paged":
+                            self._free_slot_blocks(slot)
+                        self._finish(None, req, "numerics", done)
+            with np.errstate(invalid="ignore"):
+                toks = lg.argmax(axis=-1).astype(np.int32)
+        else:
+            toks = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
         self._scatter_rows(row_cache, slot_ids, valid, Sb)
         now = time.monotonic()
         for i, (slot, req) in enumerate(batch):
+            if not valid[i]:
+                continue  # finished above (numerics)
             req.t_queue = t_start - req.t_submit
             self._activate(slot, req, int(toks[i]), lens[i], now, done)
+
+    def _prefill_retry(self, batch: List[Tuple[int, Request]],
+                       done: List[Request]):
+        """Transient prefill failure: release the batch's blocks, return
+        it to the queue head in arrival order, and back off
+        exponentially (prefill_backoff * 2**(attempt-1) steps). A
+        request past prefill_retries finishes with reason "failed"."""
+        self.counters["prefill_retries"] += 1
+        for slot, req in reversed(batch):
+            if self.kv_layout == "paged":
+                self._free_slot_blocks(slot)
+            req.n_retries += 1
+            if req.n_retries > self.prefill_retries:
+                self._finish(None, req, "failed", done)
+            else:
+                self.queue.appendleft(req)
+        attempt = max(r.n_retries for _, r in batch)
+        self._prefill_backoff_until = (
+            self.step_count + self.prefill_backoff * (1 << (attempt - 1)))
 
     def _activate(self, slot: int, req: Request, first_tok: int, P: int,
                   now: float, done: List[Request]):
         req.output.append(first_tok)
-        req.t_first = now
-        req.s_first = self.step_count
+        if req.t_first is None:
+            # a preempted request's TTFT is its *first* activation
+            req.t_first = now
+            req.s_first = self.step_count
+        req.served_tier = self._tier_mode(self._active_tier)
         self.last_tok[slot] = first_tok
         self.pos[slot] = P
         self.active[slot] = req
@@ -525,32 +912,58 @@ class ServeEngine:
     # ------------- chunked prefill -------------
     def _start_chunk(self, slot: int, done: List[Request]):
         req = self.queue[0]
-        P = len(req.prompt)
+        seq = self._req_tokens(req)
+        P = len(seq)
         chunk = self.prefill_chunk
         nchunks = -(-P // chunk)
         total = nchunks * chunk            # <= max_len: chunk | max_len
         if self.kv_layout == "paged":
             need = -(-P // self.kv_block_size)
             if not self._alloc_blocks(slot, need):
-                if not self.active:
+                if not self.active and need > self.kv_blocks - 1:
                     self.queue.popleft()
                     self._finish(None, req, "cache_full", done)
                 return
         self.queue.popleft()
         req.t_queue = time.monotonic() - req.t_submit
         self.pending_chunk = {
-            "req": req, "slot": slot, "next": 0, "nchunks": nchunks,
+            "req": req, "slot": slot, "seq": seq,
+            "next": 0, "nchunks": nchunks,
             "row_cache": self.model.init_cache(1, total),
         }
+
+    def _abort_chunk(self) -> Dict[str, Any]:
+        """Tear down the in-flight chunk state (deadline / transient
+        failure), releasing the lane's blocks; nothing was activated or
+        scattered yet, so dropping the row cache loses nothing."""
+        c = self.pending_chunk
+        self.pending_chunk = None
+        if self.kv_layout == "paged":
+            self._free_slot_blocks(c["slot"])
+        return c
 
     def _advance_chunk(self, done: List[Request]):
         """Run one prompt chunk; decode lanes keep stepping in between."""
         c = self.pending_chunk
         req, slot, chunk = c["req"], c["slot"], self.prefill_chunk
-        P = len(req.prompt)
+        if self._expired(req):
+            self._abort_chunk()
+            self._finish(None, req, "deadline", done)
+            return
+        if self.prefill_fault is not None:
+            try:
+                self.prefill_fault(self.step_count, [req])
+            except TransientPrefillError:
+                # restart from chunk 0 after backoff (fresh row cache,
+                # so the retried prefill is deterministic)
+                self._abort_chunk()
+                self._prefill_retry([(slot, req)], done)
+                return
+        seq = c["seq"]
+        P = len(seq)
         s0 = c["next"] * chunk
         piece = np.zeros((1, chunk), np.int32)
-        real = req.prompt[s0:s0 + chunk]
+        real = seq[s0:s0 + chunk]
         piece[0, :len(real)] = real
         is_last = c["next"] == c["nchunks"] - 1
         li = np.asarray([(P - 1 - s0) if is_last else chunk - 1], np.int32)
@@ -561,9 +974,15 @@ class ServeEngine:
         if not is_last:
             return
         self.pending_chunk = None
+        lg = np.asarray(logits[0])
+        if self.numerics_check and not np.isfinite(lg).all():
+            if self.kv_layout == "paged":
+                self._free_slot_blocks(slot)
+            self._finish(None, req, "numerics", done)
+            return
         self._scatter_rows(c["row_cache"], np.asarray([slot], np.int32),
                            np.asarray([True]), c["nchunks"] * chunk)
-        tok = int(np.asarray(jnp.argmax(logits[0])))
+        tok = int(lg.argmax())
         self._activate(slot, req, tok, P, time.monotonic(), done)
 
     # ------------- decode -------------
@@ -582,6 +1001,7 @@ class ServeEngine:
         req.finish_reason = reason
         req.t_done = time.monotonic()
         req.s_done = self.step_count
+        self.counters[reason] += 1
         done.append(req)
         if slot is not None:
             self.active.pop(slot, None)
@@ -592,17 +1012,31 @@ class ServeEngine:
 
     def _ensure_decode_blocks(self, done: List[Request]):
         """Pre-step block allocation: a lane about to write position p
-        needs block p // bs; grant it or terminate the request with
-        finish_reason="cache_full"."""
+        needs block p // bs. When the pool is dry, preempt the
+        lowest-priority active lane (possibly the needy lane itself)
+        instead of terminating — preempt=False keeps the old terminal
+        cache_full behavior."""
         bs = self.kv_block_size
-        for slot, req in list(self.active.items()):
-            j = int(self.pos[slot]) // bs
-            if j < len(self._owned[slot]):
-                continue
-            if not self._alloc_blocks(slot, 1):
-                self._finish(slot, req, "cache_full", done)
+        for slot, req in sorted(self.active.items()):
+            if slot not in self.active:
+                continue  # preempted earlier in this pass
+            while int(self.pos[slot]) // bs >= len(self._owned[slot]):
+                if self._alloc_blocks(slot, 1):
+                    break
+                if not self.preempt:
+                    self._finish(slot, req, "cache_full", done)
+                    break
+                vslot, vreq = self._pick_victim()
+                self._preempt(vslot, vreq, done)
+                if vslot == slot:
+                    break  # the needy lane itself was evicted
 
     def _decode_step(self, done: List[Request]):
+        for slot, req in list(self.active.items()):
+            if self._expired(req):
+                self._finish(slot, req, "deadline", done)
+        if not self.active:
+            return
         if self.kv_layout == "paged":
             self._ensure_decode_blocks(done)
             self._flush_tables()
@@ -612,7 +1046,21 @@ class ServeEngine:
         pos = jnp.asarray(self.pos)
         logits, self.cache = self._decode(
             self.params, toks, pos, self.cache, self.memory)
-        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        if self.logits_tap is not None or self.numerics_check:
+            lg = np.asarray(logits)
+            if self.logits_tap is not None:
+                lg = self.logits_tap(lg, "decode", self.step_count)
+            if self.numerics_check:
+                finite = np.isfinite(lg).all(axis=-1)
+                for slot, req in list(self.active.items()):
+                    if not finite[slot]:
+                        # the poisoned token is never appended: the
+                        # stream stays a clean prefix
+                        self._finish(slot, req, "numerics", done)
+            with np.errstate(invalid="ignore"):
+                nxt = lg.argmax(axis=-1).astype(np.int32)
+        else:
+            nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
         for slot, req in list(self.active.items()):
             t = int(nxt[slot])
             req.output.append(t)
@@ -647,8 +1095,13 @@ class ServeEngine:
         t0 = min(r.t_submit for r in done)
         t1 = max((r.t_done for r in done if r.t_done), default=t0)
         span = max(t1 - t0, 1e-9)
+        reasons: Dict[str, int] = {}
+        for r in done:
+            key = r.finish_reason or "unknown"
+            reasons[key] = reasons.get(key, 0) + 1
         return {
             "n": len(done),
+            "finish_reasons": reasons,
             "ttft_mean_s": ttft_mean,
             "ttft_p50_s": ttft_p50,
             "ttft_p99_s": ttft_p99,
@@ -695,5 +1148,7 @@ class ServeEngine:
             "kv_block_size": self.kv_block_size if self.kv_layout == "paged" else 0,
             "kv_blocks_usable": max(self.kv_blocks - 1, 0),
             "kv_blocks_free": self.free_blocks,
+            "kv_blocks_held": len(self._held),
             "kv_blocks_peak_used": self.blocks_peak_used,
+            "integrity_ok": self._integrity_ok(),
         }

@@ -10,7 +10,14 @@ eos_id=None, so termination never depends on sampled token values),
 which makes them stable across hosts and JAX versions: the replay bench
 commits them to `results/baseline/` and `tools/check_bench.py` diffs
 every run against that seed. Wall-clock figures are reported alongside
-for humans but never gated.
+for humans but never gated in CI (`REPRO_REPLAY_WALLCLOCK=1` turns on
+an opt-in tolerance gate — see tools/check_bench.py).
+
+A replay optionally carries a :class:`~repro.serving.faults.FaultInjector`
+(``run_replay(..., faults=...)``): faults are applied at each step
+boundary *before* the engine steps, so a given (workload seed, fault
+plan) pair resolves identically every run — the `serve_faults` bench
+baselines that resolution.
 """
 from __future__ import annotations
 
@@ -21,6 +28,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from .engine import Request, ServeEngine
+from .faults import FaultInjector
 
 __all__ = ["ReplayConfig", "build_workload", "run_replay", "step_report"]
 
@@ -33,6 +41,14 @@ class ReplayConfig:
     prompt_len_range: Tuple[int, int] = (4, 24)   # inclusive
     max_new_range: Tuple[int, int] = (4, 10)      # inclusive
     vocab: int = 512
+    # Deadlines: every deadline_every-th request (1-indexed; 0 = none)
+    # gets a deadline of deadline_steps scheduler steps. Defaults keep
+    # pre-existing seeded workloads byte-identical.
+    deadline_every: int = 0
+    deadline_steps: int = 0
+    # Priorities: cycle request priority over 0..priority_levels-1
+    # (1 = all equal, the default) to exercise victim selection.
+    priority_levels: int = 1
 
 
 def build_workload(cfg: ReplayConfig) -> List[Dict[str, object]]:
@@ -47,28 +63,40 @@ def build_workload(cfg: ReplayConfig) -> List[Dict[str, object]]:
     lens = rng.integers(lo, hi + 1, cfg.n_requests)
     nlo, nhi = cfg.max_new_range
     max_new = rng.integers(nlo, nhi + 1, cfg.n_requests)
-    return [
-        {
+    out: List[Dict[str, object]] = []
+    for i in range(cfg.n_requests):
+        w: Dict[str, object] = {
             "arrival_step": int(arrivals[i]),
             "prompt": rng.integers(1, cfg.vocab, int(lens[i])).astype(np.int32),
             "max_new": int(max_new[i]),
         }
-        for i in range(cfg.n_requests)
-    ]
+        if cfg.deadline_every and (i + 1) % cfg.deadline_every == 0:
+            w["deadline_steps"] = int(cfg.deadline_steps)
+        if cfg.priority_levels > 1:
+            w["priority"] = int(i % cfg.priority_levels)
+        out.append(w)
+    return out
 
 
 def run_replay(engine: ServeEngine, workload: List[Dict[str, object]],
-               *, max_steps: int = 100_000
+               *, max_steps: int = 100_000,
+               faults: Optional[FaultInjector] = None,
                ) -> Tuple[List[Request], Dict[str, float]]:
     """Drive the engine through the workload; returns (done, step_report).
 
     Requests are submitted when the engine's step counter reaches their
     arrival step, so queueing pressure replays identically every run.
+    With a FaultInjector, fault events fire at the step boundary right
+    after that step's submissions — deterministic in the virtual clock.
     """
     pending = sorted(workload, key=lambda w: w["arrival_step"])
     reqs = [Request(rid=i, prompt=w["prompt"], max_new_tokens=w["max_new"],
-                    eos_id=None)
+                    eos_id=None,
+                    deadline_steps=w.get("deadline_steps"),
+                    priority=w.get("priority", 0))
             for i, w in enumerate(pending)]
+    if faults is not None:
+        faults.attach(engine)
     done: List[Request] = []
     i = 0
     t0 = time.monotonic()
@@ -77,10 +105,16 @@ def run_replay(engine: ServeEngine, workload: List[Dict[str, object]],
                 pending[i]["arrival_step"] <= engine.step_count:
             engine.submit(reqs[i])
             i += 1
+        if faults is not None:
+            faults.apply(engine, engine.step_count)
         if i == len(pending) and not engine.queue and not engine.active \
                 and engine.pending_chunk is None:
+            # fully drained: deferred fault events can never fire now
             break
         engine.step(done)
+    if faults is not None:
+        faults.finalize(engine)
+    engine._drain_shed(done)
     wall_s = time.monotonic() - t0
     report = step_report(done)
     report["wall_s"] = wall_s
@@ -114,4 +148,11 @@ def step_report(done: List[Request]) -> Dict[str, float]:
         "steps_total": steps,
         "tokens_per_step": round(new_tokens / steps, 4),
         "n_cache_full": sum(r.finish_reason == "cache_full" for r in done),
+        "n_deadline": sum(r.finish_reason == "deadline" for r in done),
+        "n_rejected": sum(r.finish_reason == "rejected" for r in done),
+        "n_numerics": sum(r.finish_reason == "numerics" for r in done),
+        "n_failed": sum(r.finish_reason == "failed" for r in done),
+        "n_preempts": sum(r.n_preempts for r in done),
+        "n_retries": sum(r.n_retries for r in done),
+        "n_degraded": sum(r.degrade_rung > 0 for r in done),
     }

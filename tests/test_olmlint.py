@@ -219,6 +219,18 @@ def test_ast_serving_raw_dot_double_flagged(tmp_path):
         ["ast-raw-dot", "ast-serving-contraction"]
 
 
+@pytest.mark.parametrize("rel", ["src/repro/serving/faults.py",
+                                 "src/repro/serving/degrade.py"])
+def test_ast_serving_rule_covers_fault_tolerance_modules(tmp_path, rel):
+    # the rule is prefix-scoped, so the Issue-9 fault-tolerance modules
+    # are covered automatically — a contraction smuggled into either
+    # would trip it
+    found = _lint_src(tmp_path, rel,
+                      "import jax.numpy as jnp\n"
+                      "def f(a, b):\n    return jnp.matmul(a, b)\n")
+    assert [r for r, _, _, _ in found] == ["ast-serving-contraction"], rel
+
+
 def test_ast_einsum_fine_outside_serving(tmp_path):
     found = _lint_src(tmp_path, "src/repro/models/new_layer.py",
                       "import jax.numpy as jnp\n"

@@ -1,0 +1,337 @@
+"""Fault-injection harness tests (Issue 9): seeded plan determinism,
+replay-with-faults determinism and per-family recovery contracts, the
+transient-prefill retry/backoff path, and unit tests of the
+check_bench chaos / wall-clock gates."""
+import json
+import os
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis import ast_lint
+from repro.core.numerics import DotEngine
+from repro.models.config import ModelConfig
+from repro.models.model import Model
+from repro.serving.engine import Request, ServeEngine
+from repro.serving.faults import (FaultConfig, FaultInjector,
+                                  TransientPrefillError, build_fault_plan)
+from repro.serving.replay import ReplayConfig, build_workload, run_replay
+
+VOCAB = 512
+
+
+def _tiny_cfg():
+    return ModelConfig(name="t", family="dense", n_layers=2, d_model=16,
+                       n_heads=2, n_kv_heads=2, d_ff=32, vocab_size=VOCAB,
+                       param_dtype="float32", compute_dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    model = Model(_tiny_cfg(), DotEngine())
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _prompt(n, seed=0):
+    return np.random.default_rng(seed).integers(1, VOCAB, n) \
+        .astype(np.int32)
+
+
+# ------------------------------------------------------------- fault plans
+
+
+class TestFaultPlan:
+    def test_seeded_plan_deterministic(self):
+        cfg = FaultConfig(seed=7, horizon_steps=40, n_exhaust=2,
+                          n_corrupt=2, n_nan=2, n_prefill_fail=2)
+        a, b = build_fault_plan(cfg), build_fault_plan(cfg)
+        assert a == b
+        assert len(a) == 8
+        assert a == sorted(a, key=lambda e: (e["step"], e["kind"]))
+        assert all(2 <= e["step"] < 40 for e in a)
+
+    def test_different_seeds_differ(self):
+        a = build_fault_plan(FaultConfig(seed=0, n_exhaust=4, n_corrupt=4,
+                                         n_nan=4, n_prefill_fail=4))
+        b = build_fault_plan(FaultConfig(seed=1, n_exhaust=4, n_corrupt=4,
+                                         n_nan=4, n_prefill_fail=4))
+        assert a != b
+
+    def test_attach_requires_numerics_check_for_nan(self, tiny):
+        model, params = tiny
+        eng = ServeEngine(model, params, slots=1, max_len=16)
+        inj = FaultInjector(build_fault_plan(FaultConfig()))
+        with pytest.raises(ValueError, match="numerics_check"):
+            inj.attach(eng)
+        ok = ServeEngine(model, params, slots=1, max_len=16,
+                         numerics_check=True)
+        inj.attach(ok)
+        assert ok.logits_tap is not None and ok.prefill_fault is not None
+
+    def test_unknown_fault_kind_rejected(self):
+        inj = FaultInjector([{"kind": "zap", "step": 0}])
+        with pytest.raises(ValueError, match="unknown fault kind"):
+            inj.apply(None, 0)
+
+
+# ----------------------------------------------- transient prefill retries
+
+
+class TestPrefillRetry:
+    def test_retry_then_bit_identical(self, tiny):
+        model, params = tiny
+        kw = dict(slots=1, max_len=16, kv_block_size=4)
+        clean = ServeEngine(model, params, **kw)
+        clean.submit(Request(rid=0, prompt=_prompt(4), max_new_tokens=4))
+        ref = clean.run()[0]
+
+        eng = ServeEngine(model, params, prefill_retries=3,
+                          prefill_backoff=1, **kw)
+        budget = {"n": 2}
+
+        def gate(step, reqs):
+            if budget["n"] > 0:
+                budget["n"] -= 1
+                raise TransientPrefillError("injected")
+
+        eng.prefill_fault = gate
+        eng.submit(Request(rid=0, prompt=_prompt(4), max_new_tokens=4))
+        done = eng.run()
+        assert done[0].finish_reason == "length"
+        assert done[0].n_retries == 2
+        assert eng.counters["prefill_retries"] == 2
+        # the retried prefill restarts from scratch: tokens identical
+        assert done[0].output == ref.output
+        assert eng.free_blocks == eng.kv_blocks - 1
+
+    def test_exhausted_retries_finish_failed(self, tiny):
+        model, params = tiny
+        eng = ServeEngine(model, params, slots=1, max_len=16,
+                          kv_block_size=4, prefill_retries=1,
+                          prefill_backoff=1)
+
+        def gate(step, reqs):
+            raise TransientPrefillError("always down")
+
+        eng.prefill_fault = gate
+        eng.submit(Request(rid=0, prompt=_prompt(4), max_new_tokens=4))
+        done = eng.run()
+        assert done[0].finish_reason == "failed"
+        assert done[0].output == []
+        assert done[0].n_retries == 2       # initial + 1 retry allowance
+        assert eng.kv_report()["integrity_ok"]
+
+
+# --------------------------------------------------- replay under faults
+
+
+class TestFaultedReplay:
+    """One seeded workload driven fault-free, then twice under the same
+    fault plan: the faulted runs must match each other byte for byte,
+    and every fault must resolve per the recovery contract."""
+
+    WORKLOAD = ReplayConfig(seed=0, n_requests=8, prompt_len_range=(3, 8),
+                            max_new_range=(3, 6), vocab=VOCAB)
+
+    def _engine(self, tiny):
+        model, params = tiny
+        return ServeEngine(model, params, slots=2, max_len=32,
+                           kv_block_size=4, kv_blocks=9, max_queue=8,
+                           numerics_check=True, integrity_audit=True)
+
+    def test_deterministic_and_recovers(self, tiny):
+        wl = build_workload(self.WORKLOAD)
+        ref_done, ref_rep = run_replay(self._engine(tiny), wl)
+        ref = {r.rid: r for r in ref_done}
+        fcfg = FaultConfig(seed=0,
+                           horizon_steps=max(10,
+                                             int(ref_rep["steps_total"])
+                                             * 2 // 3),
+                           exhaust_blocks=8, exhaust_hold_steps=4)
+
+        def go():
+            eng = self._engine(tiny)
+            inj = FaultInjector(build_fault_plan(fcfg))
+            done, rep = run_replay(eng, wl, faults=inj)
+            rep.pop("wall_s")
+            return eng, inj, {r.rid: r for r in done}, rep
+
+        eng1, inj1, d1, rep1 = go()
+        eng2, inj2, d2, rep2 = go()
+        # determinism: same plan + same workload -> same resolution
+        assert inj1.summary() == inj2.summary()
+        assert rep1 == rep2
+        assert dict(eng1.counters) == dict(eng2.counters)
+        for rid in d1:
+            assert d1[rid].output == d2[rid].output
+            assert d1[rid].finish_reason == d2[rid].finish_reason
+
+        # every family actually fired against this workload
+        stats = inj1.summary()
+        for fam in ("exhaust", "corrupt", "nan", "prefill_fail"):
+            assert stats.get(fam, 0) >= 1, stats
+
+        # recovery bookkeeping balances: injected == resolved
+        assert len(d1) == len(wl)
+        assert rep1["n_numerics"] == stats["nan"]
+        assert eng1.counters["table_repairs"] == stats["corrupt"]
+        assert eng1.counters["prefill_retries"] == stats["prefill_fail"]
+        assert eng1.counters["preempted"] >= 1
+
+        # token-level contract per request
+        known = {"eos", "length", "max_len", "cache_full", "deadline",
+                 "rejected", "numerics", "failed"}
+        for rid, r in d1.items():
+            assert r.finish_reason in known
+            b = ref[rid]
+            if r.finish_reason == "numerics":
+                # clean prefix: the poisoned token never lands
+                assert r.output == b.output[:len(r.output)]
+            elif r.finish_reason == b.finish_reason:
+                # recovered (preempted / retried / repaired) or untouched
+                # requests are bit-identical to the fault-free run
+                assert r.output == b.output, rid
+        untouched = [r for r in d1.values()
+                     if r.n_preempts == 0 and r.n_retries == 0
+                     and r.finish_reason != "numerics"]
+        assert untouched, "fault plan touched every request"
+
+        # nothing leaked: pool fully returned, shadow state consistent
+        kvr = eng1.kv_report()
+        assert kvr["integrity_ok"] and kvr["kv_blocks_held"] == 0
+        assert kvr["kv_blocks_free"] == kvr["kv_blocks_usable"]
+
+    def test_workload_robustness_knobs(self):
+        cfg = ReplayConfig(seed=0, n_requests=6, deadline_every=2,
+                           deadline_steps=9, priority_levels=3,
+                           vocab=VOCAB)
+        wl = build_workload(cfg)
+        assert [w.get("deadline_steps") for w in wl] == \
+            [None, 9, None, 9, None, 9]
+        assert [w["priority"] for w in wl] == [0, 1, 2, 0, 1, 2]
+        # defaults keep pre-existing seeded workloads byte-identical
+        plain = build_workload(ReplayConfig(seed=0, n_requests=6,
+                                            vocab=VOCAB))
+        for w, p in zip(wl, plain):
+            assert w["arrival_step"] == p["arrival_step"]
+            np.testing.assert_array_equal(w["prompt"], p["prompt"])
+            assert w["max_new"] == p["max_new"]
+            assert "deadline_steps" not in p and "priority" not in p
+
+
+# ------------------------------------------------- check_bench fault gates
+
+
+def _check_bench():
+    tools_dir = os.path.join(ast_lint._REPO_ROOT, "tools")
+    if tools_dir not in sys.path:
+        sys.path.insert(0, tools_dir)
+    import check_bench
+    return check_bench
+
+
+def _faults_rows():
+    vals = dict(completed=20, steps_total=48, injected_exhaust=1,
+                injected_corrupt=1, injected_nan=1, injected_prefill_fail=1,
+                preempted=3, table_repairs=1, prefill_retries=1, degraded=4,
+                n_deadline=2, n_rejected=0, n_numerics=1, n_cache_full=0,
+                identical_to_ref=19)
+    return [{"op": f"serve_faults/s{seed}/{op}", "derived": v}
+            for seed in (0, 1) for op, v in vals.items()]
+
+
+def _write_bench(dirpath, name, rows):
+    os.makedirs(dirpath, exist_ok=True)
+    with open(os.path.join(dirpath, name), "w") as f:
+        json.dump({"rows": rows}, f)
+
+
+class TestCheckFaults:
+    def test_committed_baseline_passes(self):
+        cb = _check_bench()
+        cb.check_faults(os.path.join(ast_lint._REPO_ROOT, "results",
+                                     "baseline"))
+
+    def test_synthetic_rows_pass(self, tmp_path):
+        cb = _check_bench()
+        _write_bench(tmp_path, "BENCH_serve_faults.json", _faults_rows())
+        cb.check_faults(str(tmp_path))
+
+    def test_unfired_family_rejected(self, tmp_path):
+        cb = _check_bench()
+        rows = _faults_rows()
+        for r in rows:
+            if r["op"] == "serve_faults/s1/injected_exhaust":
+                r["derived"] = 0
+        _write_bench(tmp_path, "BENCH_serve_faults.json", rows)
+        with pytest.raises(cb.CheckFailure, match="must.*actually fire"):
+            cb.check_faults(str(tmp_path))
+
+    def test_unresolved_fault_rejected(self, tmp_path):
+        cb = _check_bench()
+        rows = _faults_rows()
+        for r in rows:
+            if r["op"] == "serve_faults/s0/n_numerics":
+                r["derived"] = 0            # injected_nan stays 1
+        _write_bench(tmp_path, "BENCH_serve_faults.json", rows)
+        with pytest.raises(cb.CheckFailure, match="did not resolve"):
+            cb.check_faults(str(tmp_path))
+
+    def test_missing_row_rejected(self, tmp_path):
+        cb = _check_bench()
+        rows = [r for r in _faults_rows()
+                if r["op"] != "serve_faults/s0/preempted"]
+        _write_bench(tmp_path, "BENCH_serve_faults.json", rows)
+        with pytest.raises(cb.CheckFailure, match="missing rows"):
+            cb.check_faults(str(tmp_path))
+
+
+def _replay_rows(us):
+    return [
+        {"op": "serve_replay/ttft_p50", "derived": 1.0},
+        {"op": "serve_replay/ttft_p99", "derived": 2.0},
+        {"op": "serve_replay/e2e_p50", "derived": 5.0},
+        {"op": "serve_replay/e2e_p99", "derived": 9.0},
+        {"op": "serve_replay/tokens_per_step", "derived": 1.5, "us": us},
+        {"op": "serve_replay/completed", "derived": 10},
+        {"op": "serve_replay/cache_full", "derived": 0},
+        {"op": "serve_replay/prefill_compiles", "derived": 3},
+        {"op": "serve_replay/blocks_peak", "derived": 5},
+        {"op": "serve_replay/kv_paged", "derived": 0,
+         "bytes_moved": 1000, "bytes_float": 2000},
+        {"op": "serve_replay/kv_contig", "derived": 0,
+         "bytes_moved": 4000},
+    ]
+
+
+class TestWallClockGate:
+    def _dirs(self, tmp_path, fresh_us, base_us):
+        bench, base = tmp_path / "bench", tmp_path / "baseline"
+        _write_bench(bench, "BENCH_serve_replay.json",
+                     _replay_rows(fresh_us))
+        _write_bench(base, "BENCH_serve_replay.json",
+                     _replay_rows(base_us))
+        return str(bench), str(base)
+
+    def test_off_by_default_ignores_wall_regression(self, tmp_path,
+                                                    monkeypatch):
+        cb = _check_bench()
+        monkeypatch.delenv("REPRO_REPLAY_WALLCLOCK", raising=False)
+        bench, base = self._dirs(tmp_path, 10_000_000, 1_000_000)
+        cb.check_serving(bench, base, wall_tol=0.5)  # no raise
+
+    def test_opt_in_catches_regression(self, tmp_path, monkeypatch):
+        cb = _check_bench()
+        monkeypatch.setenv("REPRO_REPLAY_WALLCLOCK", "1")
+        bench, base = self._dirs(tmp_path, 10_000_000, 1_000_000)
+        with pytest.raises(cb.CheckFailure, match="wall-clock regression"):
+            cb.check_serving(bench, base, wall_tol=0.5)
+
+    def test_opt_in_passes_within_tolerance(self, tmp_path, monkeypatch):
+        cb = _check_bench()
+        monkeypatch.setenv("REPRO_REPLAY_WALLCLOCK", "1")
+        bench, base = self._dirs(tmp_path, 1_200_000, 1_000_000)
+        cb.check_serving(bench, base, wall_tol=0.5)  # no raise

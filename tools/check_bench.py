@@ -30,7 +30,23 @@ runnable tool. Three independent checks (all on by default):
               virtual clock), so the baseline check also diffs them;
               serve_replay/* rows get `derived` compared within --tol
               (percentile interpolation emits floats) while KV byte
-              columns stay exact.
+              columns stay exact. Wall-clock stays ungated in CI; set
+              REPRO_REPLAY_WALLCLOCK=1 to additionally compare the
+              tokens_per_step row's recorded wall time against the
+              committed baseline within --wall-tol (opt-in: shared CI
+              runners are too noisy — turn it on where hardware is
+              stable).
+  faults    — from results/bench/BENCH_serve_faults.json: the chaos
+              bench (seeded fault injection through the serving engine,
+              two seeds) must cover its full counter schema, every
+              fault family must actually have fired on each seed, and
+              the bench's resolution bookkeeping must balance: each
+              injected NaN resolves to a finish_reason="numerics", each
+              table corruption to a recorded repair, each transient
+              prefill failure to a retry, and exhaustion to >= 1
+              preemption. Row values are exact ints, so the baseline
+              check doubles as a cross-run/cross-host determinism gate
+              for the whole fault-recovery pipeline.
   tuning    — results/tuning.json must parse against the TuningCache
               schema, and for every cached entry the value
               `tiling="auto"` would actually serve (get_tiling on the
@@ -176,8 +192,10 @@ _SERVING_REQUIRED_OPS = (
 )
 
 
-def check_serving(bench_dir: str) -> None:
-    """Serving replay schema + the paged-residency invariant."""
+def check_serving(bench_dir: str, baseline_dir: str,
+                  wall_tol: float) -> None:
+    """Serving replay schema + the paged-residency invariant (+ the
+    opt-in REPRO_REPLAY_WALLCLOCK=1 wall-clock gate)."""
     rows = {r["op"]: r
             for r in _load(os.path.join(bench_dir,
                                         "BENCH_serve_replay.json"))["rows"]}
@@ -216,6 +234,85 @@ def check_serving(bench_dir: str) -> None:
           f"{n} requests completed, paged KV {paged['bytes_moved']} B < "
           f"contiguous {contig['bytes_moved']} B "
           f"({100 * paged['bytes_moved'] / contig['bytes_moved']:.1f}%)")
+    # Opt-in wall-clock gate (ROADMAP serving item (d)): scheduler-step
+    # rows are the CI gate; on stable hardware REPRO_REPLAY_WALLCLOCK=1
+    # additionally holds the recorded wall time of the whole replay
+    # (the `us` column of the tokens_per_step row) to the committed
+    # baseline within --wall-tol relative.
+    if os.environ.get("REPRO_REPLAY_WALLCLOCK") == "1":
+        base = {r["op"]: r for r in _load(os.path.join(
+            baseline_dir, "BENCH_serve_replay.json"))["rows"]}
+        op = "serve_replay/tokens_per_step"
+        want, got = base[op].get("us"), rows[op].get("us")
+        if not want or not got:
+            raise CheckFailure(
+                f"{op}: wall-clock gate enabled but us column is "
+                f"empty (baseline {want!r}, fresh {got!r})")
+        if not _close(want, got, wall_tol):
+            raise CheckFailure(
+                f"{op}: wall {got:.0f} us vs baseline {want:.0f} us "
+                f"exceeds rel tol {wall_tol} (wall-clock regression; "
+                "unset REPRO_REPLAY_WALLCLOCK on noisy hosts)")
+        print(f"  serving wall-clock: {got:.0f} us vs baseline "
+              f"{want:.0f} us within {wall_tol:.0%} (opt-in gate)")
+
+
+_FAULTS_COUNTER_OPS = (
+    "completed", "steps_total", "injected_exhaust", "injected_corrupt",
+    "injected_nan", "injected_prefill_fail", "preempted", "table_repairs",
+    "prefill_retries", "degraded", "n_deadline", "n_rejected", "n_numerics",
+    "n_cache_full", "identical_to_ref",
+)
+_FAULTS_SEEDS = (0, 1)
+
+
+def check_faults(bench_dir: str) -> None:
+    """Chaos-bench schema + fault-resolution bookkeeping, per seed."""
+    rows = {r["op"]: r
+            for r in _load(os.path.join(bench_dir,
+                                        "BENCH_serve_faults.json"))["rows"]}
+    for seed in _FAULTS_SEEDS:
+        pre = f"serve_faults/s{seed}/"
+        want = {pre + op for op in _FAULTS_COUNTER_OPS}
+        if missing := want - set(rows):
+            raise CheckFailure(
+                f"serve_faults bench is missing rows {sorted(missing)}: "
+                "the chaos schema may not silently narrow")
+        v = {op: rows[pre + op]["derived"] for op in _FAULTS_COUNTER_OPS}
+        for op, d in v.items():
+            if not isinstance(d, int) or d < 0:
+                raise CheckFailure(
+                    f"{pre}{op}: derived must be an int >= 0, got {d!r}")
+        for fam in ("injected_exhaust", "injected_corrupt", "injected_nan",
+                    "injected_prefill_fail"):
+            if v[fam] < 1:
+                raise CheckFailure(
+                    f"seed {seed}: {fam} = 0 — every fault family must "
+                    "actually fire for the chaos gate to mean anything")
+        # every injected fault resolves to an explicit finish or a
+        # recorded recovery (the bench asserts the token-level side)
+        balances = (("injected_nan", "n_numerics"),
+                    ("injected_corrupt", "table_repairs"),
+                    ("injected_prefill_fail", "prefill_retries"))
+        for inj, res in balances:
+            if v[inj] != v[res]:
+                raise CheckFailure(
+                    f"seed {seed}: {inj} = {v[inj]} but {res} = {v[res]} "
+                    "— an injected fault did not resolve explicitly")
+        if v["preempted"] < 1:
+            raise CheckFailure(
+                f"seed {seed}: block exhaustion fired but preempted = 0 "
+                "— preemption-with-recompute never engaged")
+        if not 1 <= v["identical_to_ref"] <= v["completed"]:
+            raise CheckFailure(
+                f"seed {seed}: identical_to_ref = {v['identical_to_ref']} "
+                f"outside [1, completed={v['completed']}]")
+        print(f"  faults seed {seed}: {v['completed']} resolved "
+              f"({v['identical_to_ref']} identical to fault-free), "
+              f"injected e/c/n/p = {v['injected_exhaust']}/"
+              f"{v['injected_corrupt']}/{v['injected_nan']}/"
+              f"{v['injected_prefill_fail']}, preempted {v['preempted']}, "
+              f"degraded {v['degraded']} — bookkeeping balances")
 
 
 def check_truncated(bench_dir: str) -> None:
@@ -333,17 +430,23 @@ def main(argv=None) -> int:
                                                      "tuning.json"))
     ap.add_argument("--tol", type=float, default=0.1,
                     help="relative tolerance for derived/ulp columns")
+    ap.add_argument("--wall-tol", type=float, default=0.5,
+                    help="relative tolerance for the opt-in "
+                         "REPRO_REPLAY_WALLCLOCK=1 wall-clock gate")
     ap.add_argument("--only",
-                    default="traffic,baseline,serving,tuning,truncated",
+                    default="traffic,baseline,serving,tuning,truncated,"
+                            "faults",
                     help="comma-separated subset of checks to run")
     args = ap.parse_args(argv)
     checks = {
         "traffic": lambda: check_traffic(args.bench),
         "baseline": lambda: check_baseline(args.bench, args.baseline,
                                            args.tol),
-        "serving": lambda: check_serving(args.bench),
+        "serving": lambda: check_serving(args.bench, args.baseline,
+                                         args.wall_tol),
         "tuning": lambda: check_tuning(args.tuning),
         "truncated": lambda: check_truncated(args.bench),
+        "faults": lambda: check_faults(args.bench),
     }
     failed = False
     for name in args.only.split(","):
