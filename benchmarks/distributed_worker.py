@@ -1,0 +1,118 @@
+"""Subprocess worker for the `olm_matmul_distributed` bench.
+
+The distributed bench must run on 1-device CI hosts and laptops, so it
+cannot share the parent's already-initialized jax runtime: this worker
+is spawned as a fresh `python -m benchmarks.distributed_worker`, forces
+`--xla_force_host_platform_device_count=<devices>` BEFORE importing jax
+(only stdlib is imported at module scope), and verifies the sharded olm
+matmul contract on a real multi-device host mesh:
+
+  * partition "m"/"n": output asserted BIT-IDENTICAL to the
+    single-device `olm_matmul` for every requested mode (full and
+    truncated) — rows carry ulp=0.0 and derived=1 as the identity
+    marker.
+  * partition "k": psum'd partials asserted within `olm_error_bound`
+    — rows carry ulp = max(|err| / bound) (the consumed bound
+    fraction) and derived=<device count>.
+
+Per-row traffic columns come from `sharded_traffic`: bytes_moved is the
+per-device LOCAL fused operand traffic, bytes_float the collective
+bytes on the wire (0 for m/n; the f32 all-reduce total for k).
+
+Output: one JSON object {"devices", "size", "rows"} on stdout (human
+progress lines go to stderr), parsed by benchmarks/run.py and by the
+tests/test_distributed_matmul.py subprocess smoke.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def _parse_cases(widths: str, trunc: str):
+    cases = [(int(n), None) for n in widths.split(",") if n]
+    for pair in (p for p in trunc.split(",") if p):
+        n, p = pair.split(":")
+        cases.append((int(n), int(p)))
+    return cases
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, default=8)
+    ap.add_argument("--size", type=int, default=64,
+                    help="square GEMM dimension (M = N = K)")
+    ap.add_argument("--widths", default="8,16,24,32",
+                    help="comma-separated full-precision widths")
+    ap.add_argument("--trunc", default="32:16",
+                    help="comma-separated truncated n:p pairs")
+    args = ap.parse_args(argv)
+
+    # Must happen before the first jax import anywhere in this process.
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={args.devices}").strip()
+
+    import jax
+    import numpy as np
+
+    from repro.kernels.online_dot.matmul import olm_error_bound, olm_matmul
+    from repro.kernels.online_dot.matmul_sharded import (olm_matmul_sharded,
+                                                        sharded_traffic)
+
+    if len(jax.devices()) < args.devices:
+        print(f"worker: forced {args.devices} devices but jax sees "
+              f"{len(jax.devices())}", file=sys.stderr)
+        return 2
+
+    mesh = jax.make_mesh((args.devices,), ("model",))
+    S = args.size
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((S, S)).astype(np.float32)
+    w = rng.standard_normal((S, S)).astype(np.float32)
+    exact = x.astype(np.float64) @ w.astype(np.float64)
+
+    rows = []
+    for n, p in _parse_cases(args.widths, args.trunc):
+        label = f"olm{n}" if p is None else f"olm{n}t{p}"
+        ref = np.asarray(olm_matmul(x, w, n_bits=n, trunc=p))
+        bound = np.asarray(olm_error_bound(x, w, n_bits=n, trunc=p))
+        for part in ("m", "n", "k"):
+            t0 = time.perf_counter()
+            out = np.asarray(olm_matmul_sharded(
+                x, w, mesh=mesh, partition=part, n_bits=n, trunc=p))
+            us = (time.perf_counter() - t0) * 1e6
+            tr = sharded_traffic(S, S, S, partition=part,
+                                 devices=args.devices, n_bits=n, trunc=p)
+            if part in ("m", "n"):
+                if not np.array_equal(out, ref):
+                    print(f"worker: {label}/{part} NOT bit-identical to "
+                          "single-device", file=sys.stderr)
+                    return 1
+                ulp, derived = 0.0, 1
+            else:
+                frac = float((np.abs(out - exact) / bound).max())
+                if not frac <= 1.0:
+                    print(f"worker: {label}/k outside olm_error_bound "
+                          f"({frac:.3f}x)", file=sys.stderr)
+                    return 1
+                ulp, derived = round(frac, 4), args.devices
+            print(f"  {label:>9}/{part}: ulp={ulp} "
+                  f"local={tr['local']['fused_bytes']}B "
+                  f"wire={tr['collective_bytes']}B", file=sys.stderr)
+            rows.append({
+                "op": f"olm_matmul_distributed/{label}/{part}",
+                "n": n, "k": S, "us": round(us, 2), "ulp": ulp,
+                "derived": derived,
+                "bytes_moved": int(tr["local"]["fused_bytes"]),
+                "bytes_float": int(tr["collective_bytes"]),
+            })
+    print(json.dumps({"devices": args.devices, "size": S, "rows": rows}))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

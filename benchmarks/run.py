@@ -654,6 +654,52 @@ def serve_faults_bench():
     return rows
 
 
+def olm_matmul_distributed_bench():
+    """Mesh-sharded olm matmul over a forced 8-device host mesh.
+
+    Runs in a fresh subprocess (benchmarks/distributed_worker.py) so the
+    parent's jax runtime — typically initialized with the single real
+    CPU device — is untouched: the worker forces
+    --xla_force_host_platform_device_count=8 before its own jax import,
+    which makes this bench deterministic on ANY host, 1-device CI
+    runners included. The worker asserts the distributed contract
+    in-bench (m/n partitions bit-identical to single-device per mode,
+    k partition within olm_error_bound) and reports per-device local
+    digit traffic (bytes_moved) + collective wire bytes (bytes_float);
+    rows are diffed against results/baseline by
+    tools/check_bench.py --only distributed.
+    """
+    import subprocess
+    import sys
+
+    from repro.configs.olm_array import MATMUL_MODES
+    from repro.core.numerics import TRUNCATED_SPECS
+
+    devices, size = 8, 64
+    print(f"\n== olm_matmul_distributed: {size}^3 GEMM over "
+          f"{devices} forced host devices ==")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.distributed_worker",
+         "--devices", str(devices), "--size", str(size),
+         "--widths", ",".join(str(n) for n in sorted(MATMUL_MODES)),
+         "--trunc", ",".join(f"{n}:{p}"
+                             for n, p in sorted(TRUNCATED_SPECS))],
+        capture_output=True, text=True, env=env)
+    sys.stderr.write(proc.stderr)
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"distributed worker failed (rc={proc.returncode}) — the "
+            "sharded-vs-single-device contract did not hold; see stderr")
+    rows = json.loads(proc.stdout)["rows"]
+    for r in rows:
+        print(f"{r['op']},{r['us']:.1f},{r['ulp']}")
+    mn = [r for r in rows if r["op"].endswith(("/m", "/n"))]
+    assert mn and all(r["ulp"] == 0.0 for r in mn)
+    return rows
+
+
 def pipeline_activity():
     """Fig. 7 reproduction: per-cycle live slices + measured switching."""
     from repro.core.pipeline import run_pipeline
@@ -714,6 +760,7 @@ BENCHES = {
     "olm_matmul": olm_matmul_bench,
     "olm_matmul_fused": olm_matmul_fused_bench,
     "olm_matmul_truncated": olm_matmul_truncated_bench,
+    "olm_matmul_distributed": olm_matmul_distributed_bench,
     "serve_replay": serve_replay_bench,
     "serve_faults": serve_faults_bench,
     "fig7": pipeline_activity,

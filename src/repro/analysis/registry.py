@@ -66,15 +66,26 @@ class KernelCase:
 def representative_tilings(n_bits: int) -> dict:
     """label -> (k_tile, block_m, block_n): the tiling buckets the
     matmul kernels actually run under for this width — the static
-    default plus the autotuner's GEMV and training-GEMM heuristics —
+    default, the autotuner's GEMV and training-GEMM heuristics, and the
+    shard-LOCAL shapes the shard_map front-end
+    (kernels/online_dot/matmul_sharded.py) autotunes on when those same
+    GEMMs are partitioned over an 8-way mesh axis (tiling="auto" runs
+    get_tiling on the PER-DEVICE shard, so the served buckets differ
+    from the global-shape ones and must be proved separately) —
     deduplicated (wide modes often collapse buckets)."""
     kt_static = pinned_k_tile(MATMUL_TILING["k_tile"], n_bits)
     buckets = {
         "static": (kt_static, MATMUL_TILING["block_m"],
                    MATMUL_TILING["block_n"]),
     }
-    for label, (M, N, K) in (("gemv", (1, 4096, 4096)),
-                             ("train", (8192, 4096, 4096))):
+    for label, (M, N, K) in (
+            ("gemv", (1, 4096, 4096)),
+            ("train", (8192, 4096, 4096)),
+            # shard-local mates over an 8-device axis: the decode GEMV
+            # N-sharded, the training GEMM M-sharded and K-sharded.
+            ("shard8-gemv-n", (1, 512, 4096)),
+            ("shard8-train-m", (1024, 4096, 4096)),
+            ("shard8-train-k", (8192, 4096, 512))):
         t = heuristic_tiling(M, N, K, n_bits)
         tiling = (t.k_tile, t.block_m, t.block_n)
         if tiling not in buckets.values():

@@ -12,6 +12,8 @@ mesh context         ``jax.set_mesh``       ``jax.sharding.use_mesh`` if
                                             present, else the ``Mesh``
                                             object's own context manager
 x64 scope            ``jax.enable_x64``     ``jax.experimental.enable_x64``
+shard_map            ``jax.shard_map``      ``jax.experimental.shard_map.
+                     (check_vma kwarg)      shard_map`` (check_rep kwarg)
 AbstractMesh ctor    ``AbstractMesh(sizes,  ``AbstractMesh(((name, size),
                      names)``               ...))`` (0.4.x shape_tuple
                                             positional signature)
@@ -27,7 +29,7 @@ from typing import ContextManager, Sequence, Tuple
 import jax
 
 __all__ = ["jax_version", "use_mesh", "enable_x64", "make_abstract_mesh",
-           "shardings_for"]
+           "shard_map", "shardings_for"]
 
 
 def jax_version() -> Tuple[int, ...]:
@@ -59,6 +61,28 @@ def enable_x64(enable: bool = True) -> ContextManager:
         return jax.enable_x64(enable)
     from jax.experimental import enable_x64 as _enable_x64
     return _enable_x64(enable)
+
+
+def shard_map(f, mesh, in_specs, out_specs):
+    """Per-shard-mapped ``f`` across the ``shard_map`` API moves.
+
+    Maps to ``jax.shard_map`` (>= 0.6; ``check_rep`` was renamed
+    ``check_vma`` along the way) or ``jax.experimental.shard_map.shard_map``
+    (0.4.x / 0.5.x). The replication/varying-manual-axes check is disabled
+    on every path: the body closes over ``pallas_call``, which has no
+    replication rule on the 0.4.x line, and the olm GEMM out_specs are
+    always explicit so the check buys nothing here.
+    """
+    if hasattr(jax, "shard_map"):
+        for kw in ({"check_vma": False}, {"check_rep": False}, {}):
+            try:
+                return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                     out_specs=out_specs, **kw)
+            except TypeError:
+                continue
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)
 
 
 def shardings_for(mesh, spec_tree):

@@ -2,7 +2,8 @@
 arrays at n = 8/16/24/32 bits (delta=3, t=2, Eq.8 truncation, G=2 tail),
 plus the DotEngine wiring that lets a model select those arrays as its
 matmul numerics (modes "olm8" / "olm16" / "olm24" / "olm32")."""
-from repro.core.numerics import TRUNCATED_SPECS, DotEngine
+from repro.core.numerics import (TRUNCATED_SPECS, DotEngine, EngineSpec,
+                                 resolve_engine)
 from repro.core.precision import OnlinePrecision, truncation_schedule
 
 ARRAY_PRECISIONS = {n: OnlinePrecision(n=n) for n in (8, 16, 24, 32)}
@@ -58,7 +59,13 @@ def engine_for(n_bits: int, *, trunc: int | None = None,
     the static default; tiling=None pins the static paper-array
     MATMUL_TILING. Any DotEngine field (k_tile, block_m, block_n,
     use_pallas, interpret) may be overridden and wins over the
-    autotuner."""
+    autotuner.
+
+    Since the EngineSpec redesign this is a thin shim: it validates the
+    (n_bits, trunc) pair against this module's registries (keeping the
+    historical error messages), builds an EngineSpec, and resolves it
+    through core.numerics.resolve_engine — the one construction path
+    every engine now takes."""
     if trunc is not None:
         if (n_bits, trunc) not in TRUNCATED_MODES:
             raise ValueError(
@@ -74,4 +81,4 @@ def engine_for(n_bits: int, *, trunc: int | None = None,
     if tiling not in (None, "auto"):
         raise ValueError(f"tiling must be 'auto' or None, got {tiling!r}")
     base = {"tiling": "auto"} if tiling == "auto" else dict(MATMUL_TILING)
-    return DotEngine(mode=mode, **{**base, **overrides})
+    return resolve_engine(EngineSpec(mode=mode, **{**base, **overrides}))

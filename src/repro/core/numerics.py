@@ -44,12 +44,13 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable, Dict, Mapping, Optional, Tuple, Union
+from typing import Any, Callable, Dict, Mapping, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["DotEngine", "DotMode", "register_mode", "TRUNCATED_SPECS"]
+__all__ = ["DotEngine", "DotMode", "EngineSpec", "register_mode",
+           "resolve_engine", "TRUNCATED_SPECS"]
 
 # The registered truncated working-precision modes, as (n, p) pairs:
 # mode `olm{n}t{p}` is the n-digit array run at p working digits
@@ -150,7 +151,22 @@ def _olm_dot(eng: "DotEngine", x: jax.Array, w: jax.Array,
     tiling = {k: v for k, v in (("k_tile", eng.k_tile),
                                 ("block_m", eng.block_m),
                                 ("block_n", eng.block_n)) if v is not None}
-    if eng.tiling == "auto" and eng.use_pallas is not False:
+    auto = eng.tiling == "auto" and eng.use_pallas is not False
+    sharded = eng.mesh is not None and eng.shard is not None
+    if trunc is not None:
+        tiling["trunc"] = trunc
+    if sharded:
+        # Mesh-sharded dispatch: hand the GEMM to the shard_map front-end
+        # with the same knobs. tiling="auto" is resolved INSIDE the
+        # sharded wrapper against the per-shard local shapes, so a
+        # sharded GEMM hits the same autotuner bucket as an equivalent
+        # single-device GEMM of the shard size (pinned knobs still win).
+        from repro.kernels.online_dot.matmul_sharded import olm_matmul_sharded
+        fn = functools.partial(
+            olm_matmul_sharded, mesh=eng.mesh, partition=eng.shard,
+            axis=eng.shard_axis, tiling="auto" if auto else None, **tiling)
+        return _lowered_dot(eng, x, w, fn, n_bits)
+    if auto:
         # Shape-aware autotuned tiling per GEMM (shapes are static at
         # trace time, so the lookup runs on the host during tracing).
         # Explicitly pinned engine knobs win over the autotuner. With
@@ -163,8 +179,6 @@ def _olm_dot(eng: "DotEngine", x: jax.Array, w: jax.Array,
         auto = get_tiling(math.prod(x.shape[:-1]), w.shape[-1],
                           x.shape[-1], n_bits, trunc=trunc)
         tiling = {**auto, **tiling}
-    if trunc is not None:
-        tiling["trunc"] = trunc
     fn = functools.partial(olm_matmul, **tiling) if tiling else olm_matmul
     return _lowered_dot(eng, x, w, fn, n_bits)
 
@@ -270,6 +284,19 @@ class DotEngine:
     # (jit static args). None / missing role = this engine's base mode.
     layer_modes: Union[Mapping[str, str],
                        Tuple[Tuple[str, str], ...], None] = None
+    # Mesh-sharded dispatch (the distributed front-end): when BOTH mesh
+    # and shard are set, olm GEMMs route through the shard_map wrapper
+    # (kernels/online_dot/matmul_sharded) instead of the single-device
+    # kernel. shard names the partitioned GEMM dimension: "m"/"n" keep
+    # every output tile fully local (bit-identical per shard to the
+    # single-device kernel), "k" splits the contraction and psums the
+    # f32 partial accumulators (olm_error_bound still holds; the
+    # reduction ORDER differs from single-device — see matmul_sharded).
+    # jax.sharding.Mesh is hashable, so the engine stays a valid jit
+    # static argument. Non-olm modes ignore all three.
+    mesh: Optional[jax.sharding.Mesh] = None
+    shard: Optional[str] = None       # None | "m" | "n" | "k"
+    shard_axis: str = "model"         # mesh axis the shard maps over
 
     _ROLES = frozenset({"attn", "mlp", "head"})
 
@@ -282,6 +309,10 @@ class DotEngine:
             raise ValueError(
                 f"unknown DotEngine tiling {self.tiling!r}; expected "
                 "None (static knobs / kernel defaults) or 'auto'")
+        if self.shard not in (None, "m", "n", "k"):
+            raise ValueError(
+                f"unknown DotEngine shard {self.shard!r}; expected None "
+                "or one of 'm', 'n', 'k'")
         if self.layer_modes is not None:
             pairs = tuple(sorted(dict(self.layer_modes).items()))
             if bad := {r for r, _ in pairs} - self._ROLES:
@@ -321,6 +352,16 @@ class DotEngine:
         source of the README mode table)."""
         return tuple(_MODES[m] for m in sorted(_MODES))
 
+    def spec(self) -> "EngineSpec":
+        """This engine as an EngineSpec: every field pinned, so
+        ``resolve_engine(eng.spec()) == eng`` (round-trip contract)."""
+        return EngineSpec(
+            mode=self.mode, interpret=self.interpret,
+            use_pallas=self.use_pallas, k_tile=self.k_tile,
+            block_m=self.block_m, block_n=self.block_n, tiling=self.tiling,
+            layer_modes=self.layer_modes, mesh=self.mesh, shard=self.shard,
+            shard_axis=self.shard_axis)
+
     def dot(self, x: jax.Array, w: jax.Array) -> jax.Array:
         """x (..., K) @ w (K, N) -> (..., N), in this engine's numerics.
 
@@ -332,3 +373,119 @@ class DotEngine:
 
     def einsum(self, spec: str, a: jax.Array, b: jax.Array) -> jax.Array:
         return jnp.einsum(spec, a, b)
+
+
+class _Unset:
+    """Sentinel distinguishing "leave this field to the base engine"
+    from an explicit None/value in EngineSpec (e.g. k_tile=None means
+    CLEAR the pin back to the kernel default; k_tile=_UNSET means
+    inherit whatever the base engine had)."""
+    _instance = None
+
+    def __new__(cls):
+        if cls._instance is None:
+            cls._instance = super().__new__(cls)
+        return cls._instance
+
+    def __repr__(self):
+        return "<unset>"
+
+
+_UNSET = _Unset()
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineSpec:
+    """One declarative description of a numerics engine — the single
+    front door that replaces the three-way construction sprawl
+    (``engine_for(n, trunc=p)`` / direct ``DotEngine(...)`` kwargs /
+    ``ServeEngine(dot_mode=..., dot_tiling=..., quality_tiers=...)``).
+
+    ``resolve_engine(spec)`` turns it into a concrete DotEngine. Name
+    the mode either directly (``mode="olm32t16"``) or structurally
+    (``n_bits=32, trunc=16``) — never both. Every other field defaults
+    to the _UNSET sentinel, meaning "inherit from the base engine"
+    when resolving against one (``resolve_engine(spec, base=model.eng)``);
+    an explicit None overrides the base (clears a pin). The serving-only
+    fields (quality_tiers, degrade_ladder) ride the spec unchanged and
+    are consumed by ServeEngine, not by resolve_engine.
+
+    Frozen and hashable: dict-valued fields are normalized to sorted
+    tuples at construction, mirroring DotEngine.layer_modes.
+    """
+    mode: Optional[str] = None
+    n_bits: Optional[int] = None
+    trunc: Optional[int] = None
+    interpret: Any = _UNSET
+    use_pallas: Any = _UNSET
+    k_tile: Any = _UNSET
+    block_m: Any = _UNSET
+    block_n: Any = _UNSET
+    tiling: Any = _UNSET
+    layer_modes: Any = _UNSET
+    # Distributed front-end (DotEngine.mesh/shard/shard_axis).
+    mesh: Any = _UNSET
+    shard: Any = _UNSET
+    shard_axis: Any = _UNSET
+    # Serving-only: per-request quality tiers {tier: mode-or-spec-dict}
+    # and the degrade ladder (see serving/engine.py). None = unset.
+    quality_tiers: Any = None
+    degrade_ladder: Any = None
+
+    def __post_init__(self):
+        if self.mode is not None and self.n_bits is not None:
+            raise ValueError(
+                "EngineSpec: give mode= or n_bits= (structural), not both")
+        if self.trunc is not None and self.n_bits is None:
+            raise ValueError(
+                "EngineSpec: trunc= requires n_bits= (structural naming)")
+        if isinstance(self.layer_modes, Mapping):
+            object.__setattr__(self, "layer_modes",
+                               tuple(sorted(self.layer_modes.items())))
+        if isinstance(self.quality_tiers, Mapping):
+            object.__setattr__(self, "quality_tiers",
+                               tuple(sorted(self.quality_tiers.items())))
+        if isinstance(self.degrade_ladder, list):
+            object.__setattr__(self, "degrade_ladder",
+                               tuple(self.degrade_ladder))
+
+
+# DotEngine fields an EngineSpec can override (same names on both).
+_SPEC_ENGINE_FIELDS = ("interpret", "use_pallas", "k_tile", "block_m",
+                       "block_n", "tiling", "layer_modes", "mesh", "shard",
+                       "shard_axis")
+
+
+def resolve_engine(spec: EngineSpec, base: Optional[DotEngine] = None,
+                   mesh=None) -> DotEngine:
+    """Resolve an EngineSpec into a concrete DotEngine.
+
+    Field resolution order: explicit spec field > ``mesh=`` argument
+    (mesh only) > ``base`` engine field > DotEngine default. The mode
+    comes from ``spec.mode``, or is derived from ``spec.n_bits`` /
+    ``spec.trunc`` (``olm{n}`` / ``olm{n}t{p}``) and validated against
+    the registry; with neither set, the base engine's mode (or the
+    DotEngine default) stands.
+    """
+    if base is not None and not isinstance(base, DotEngine):
+        raise TypeError(f"base must be a DotEngine, got {type(base).__name__}")
+    kw = ({} if base is None else
+          {f.name: getattr(base, f.name) for f in dataclasses.fields(DotEngine)})
+    if spec.mode is not None:
+        kw["mode"] = spec.mode
+    elif spec.n_bits is not None:
+        name = (f"olm{spec.n_bits}t{spec.trunc}" if spec.trunc is not None
+                else f"olm{spec.n_bits}")
+        if name not in _MODES:
+            raise ValueError(
+                f"EngineSpec(n_bits={spec.n_bits}, trunc={spec.trunc}) "
+                f"resolves to unregistered mode {name!r}; registered: "
+                f"{', '.join(sorted(_MODES))}")
+        kw["mode"] = name
+    if mesh is not None:
+        kw["mesh"] = mesh
+    for name in _SPEC_ENGINE_FIELDS:
+        v = getattr(spec, name)
+        if v is not _UNSET:
+            kw[name] = v
+    return DotEngine(**kw)

@@ -28,7 +28,26 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models.config import ModelConfig
 
-__all__ = ["Sharder"]
+__all__ = ["Sharder", "gemm_partition_specs"]
+
+
+def gemm_partition_specs(partition: str, axis: str = "model"):
+    """((x_spec, w_spec), out_spec) for one mesh-sharded olm GEMM.
+
+    The canonical specs live next to the kernel front-end
+    (kernels/online_dot/matmul_sharded — the shard_map wrapper and this
+    table must never drift apart); this re-export is the model-layer
+    entry point alongside the param/activation/cache rules above.
+
+      m — x rows over `axis`, w replicated, output rows sharded
+          (bit-identical per shard to single-device);
+      n — w columns over `axis`, output columns sharded (bit-identical);
+      k — contraction co-sharded, f32 partials psum'd, output
+          replicated (olm_error_bound holds; reduction order differs).
+    """
+    from repro.kernels.online_dot.matmul_sharded import (
+        gemm_partition_specs as _specs)
+    return _specs(partition, axis)
 
 
 def _path_str(path) -> str:

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.compat import shardings_for
+from repro.core.numerics import EngineSpec, resolve_engine
 from repro.models.config import ModelConfig
 from repro.models.model import Model, lm_loss
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
@@ -64,8 +65,20 @@ def build_train_step(
     microbatches: int = 1,
     compress_grads: bool = False,
     schedule_total: int = 10_000,
+    engine_spec: Optional[EngineSpec] = None,
 ):
-    """Returns (train_step(state, batch) -> (state, metrics), specs)."""
+    """Returns (train_step(state, batch) -> (state, metrics), specs).
+
+    engine_spec: optional numerics override for this training run — an
+    EngineSpec resolved against the model's engine on the sharder's
+    mesh (core.numerics.resolve_engine), so the dot_mode / trunc /
+    tiling knobs AND the mesh-sharded dispatch (spec.shard="m"/"n"/"k")
+    ride one declarative object. With spec.shard set, every weight GEMM
+    in the step runs through the shard_map olm front-end on this mesh.
+    """
+    if engine_spec is not None:
+        model = Model(model.cfg, resolve_engine(
+            engine_spec, base=model.eng, mesh=sharder.mesh))
     cfg = model.cfg
     opt_cfg = opt_cfg or AdamWConfig()
     act_spec = sharder.activation_spec()

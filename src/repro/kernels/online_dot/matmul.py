@@ -43,6 +43,11 @@ operands) and the truncated multiplier <= 1.1 ulp (G=2 tail, measured
 <= 0.93); the adder tree is exact. The documented per-lane ledger is
 ULP_PER_LANE = 3.1 output ulp at the tile's power-of-two scale product,
 matching the k * (2 + 1.1) * 2^-n bound the array example quotes.
+
+Mesh-sharded GEMMs go through `matmul_sharded.olm_matmul_sharded`, a
+shard_map wrapper that runs this same front-end per device shard —
+output-sharded partitions ("m"/"n") are bit-identical to this module;
+the K-sharded partition psums f32 partials within olm_error_bound.
 """
 from __future__ import annotations
 

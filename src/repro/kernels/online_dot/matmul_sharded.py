@@ -1,0 +1,199 @@
+"""Mesh-sharded front-end for the olm matmul: shard_map over the array.
+
+The digit-serial inner-product array is embarrassingly parallel along the
+output dimensions — partitioning a GEMM into independent lanes is the same
+move ChipFlow's partitioned multiplier makes in hardware. This module
+wraps the single-device `olm_matmul` (grid/fused Pallas kernel or the
+broadcast oracle) in `shard_map` so every shard runs the unchanged array
+kernel on its local tile:
+
+``partition="m"`` / ``"n"``
+    Tensor-parallel output sharding: each device owns M/d rows (or N/d
+    columns) of the output and the FULL contraction. No collective runs
+    and every per-shard K-tile accumulation is the same sequential order
+    as single-device, so the sharded output is **bit-identical** to the
+    single-device kernel — block shapes are bit-invariant and k_tile is
+    whatever the caller (or the autotuner's pinned default) says.
+
+``partition="k"``
+    Contraction sharding: each device computes a full (M, N) partial sum
+    over its K/d slice, then the f32 partial accumulators are combined
+    with `jax.lax.psum`. The total number of additions per output element
+    is unchanged, but the **reduction order differs** from the
+    single-device kernel's sequential K-tile walk (the collective adds
+    d per-shard subtotals instead). The result is therefore NOT
+    bit-identical; it stays within `olm_error_bound` (each shard's
+    contribution is bounded by its own tiles' ledger and f32 addition is
+    order-sensitive only below the bound's ulp resolution — the wide
+    (T + 1) * 2^-26 term already covers one rounding per tile plus the
+    accumulator roundings, which is exactly what the psum re-spends).
+    This is the one documented numerics caveat of the distributed path.
+
+tiling="auto" resolves the grid knobs against the per-shard LOCAL shapes,
+so a sharded GEMM lands in the same autotuner bucket as an equivalent
+single-device GEMM of the shard size (a decode GEMV sharded 8-way over N
+tunes like an N/8 GEMV, not like the global shape). Explicit knob pins
+win, and auto never changes k_tile (tuning.pinned_k_tile), so auto vs
+static cannot change bits on the m/n paths.
+
+The n = 32 broadcast-oracle path needs real int64: `shard_map` bodies are
+always traced, so the `enable_x64` scope is hoisted OUT of the body and
+wrapped around the eager shard_map call here (mirroring olm_matmul's own
+host-wrapper rule that the scope is only safe around an eager entry).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import enable_x64, shard_map
+from repro.kernels.common import int64_enabled, resolve_use_pallas
+
+from .matmul import (DEFAULT_BLOCK_M, DEFAULT_BLOCK_N, DEFAULT_K_TILE,
+                     DEFAULT_QUANTIZE, _olm_cfg, digit_traffic, olm_matmul)
+from .ref import oracle_needs_x64
+
+__all__ = ["olm_matmul_sharded", "gemm_partition_specs", "local_shapes",
+           "sharded_traffic"]
+
+_PARTITIONS = ("m", "n", "k")
+
+
+def gemm_partition_specs(partition: str, axis: str = "model"):
+    """((x_spec, w_spec), out_spec) for a GEMM sharded on `partition`.
+
+    m: x rows sharded, w replicated, output rows sharded.
+    n: x replicated, w columns sharded, output columns sharded.
+    k: x columns + w rows co-sharded, output replicated (post-psum).
+    """
+    if partition == "m":
+        return (P(axis, None), P(None, None)), P(axis, None)
+    if partition == "n":
+        return (P(None, None), P(None, axis)), P(None, axis)
+    if partition == "k":
+        return (P(None, axis), P(axis, None)), P(None, None)
+    raise ValueError(
+        f"unknown GEMM partition {partition!r}; expected one of "
+        f"{_PARTITIONS}")
+
+
+def local_shapes(M: int, N: int, K: int, partition: str,
+                 devices: int) -> tuple:
+    """Per-shard (M, N, K) under `partition` over `devices` shards.
+    Raises when the partitioned dimension does not divide evenly —
+    shard_map gives no padding, and silent padding would change the
+    digit-tile plan (and with it the error ledger) per shard."""
+    if partition not in _PARTITIONS:
+        raise ValueError(
+            f"unknown GEMM partition {partition!r}; expected one of "
+            f"{_PARTITIONS}")
+    dim = {"m": M, "n": N, "k": K}[partition]
+    if dim % devices:
+        raise ValueError(
+            f"partition={partition!r} needs {partition.upper()} divisible "
+            f"by the mesh axis size; got {dim} over {devices} devices")
+    return {"m": (M // devices, N, K),
+            "n": (M, N // devices, K),
+            "k": (M, N, K // devices)}[partition]
+
+
+def olm_matmul_sharded(
+    x: jax.Array,  # (M, K) float
+    w: jax.Array,  # (K, N) float
+    *,
+    mesh: jax.sharding.Mesh,
+    partition: str = "m",
+    axis: str = "model",
+    n_bits: int = 16,
+    k_tile: Optional[int] = None,
+    trunc: Optional[int] = None,
+    use_pallas: Optional[bool] = None,
+    block_m: Optional[int] = None,
+    block_n: Optional[int] = None,
+    quantize: str = DEFAULT_QUANTIZE,
+    interpret: bool = True,
+    tiling: Optional[str] = None,
+) -> jax.Array:
+    """`olm_matmul` sharded over `mesh`'s `axis`; (M, N) float32.
+
+    partition="m"/"n" shard the output rows/columns (bit-identical to
+    single-device); partition="k" shards the contraction and psums the
+    f32 partials (within olm_error_bound; reduction order differs — see
+    the module docstring). Unlike `olm_matmul`, the grid knobs default
+    to None = "kernel default, or the autotuner's pick when
+    tiling='auto'" so pinned knobs stay distinguishable from defaults.
+    """
+    M, K = x.shape
+    K2, N = w.shape
+    if K != K2:
+        raise ValueError(f"contraction mismatch: x (M,{K}) @ w ({K2},N)")
+    if tiling not in (None, "auto"):
+        raise ValueError(f"tiling must be 'auto' or None, got {tiling!r}")
+    if axis not in mesh.shape:
+        raise ValueError(
+            f"mesh has no axis {axis!r}; axes: {tuple(mesh.axis_names)}")
+    d = int(mesh.shape[axis])
+    Ml, Nl, Kl = local_shapes(M, N, K, partition, d)
+
+    knobs = {k: v for k, v in (("k_tile", k_tile), ("block_m", block_m),
+                               ("block_n", block_n)) if v is not None}
+    if tiling == "auto" and use_pallas is not False:
+        # Same bucket as a single-device GEMM of the LOCAL shard shape.
+        from .tuning import get_tiling
+        auto = get_tiling(Ml, Nl, Kl, n_bits, trunc=trunc)
+        knobs = {**auto, **knobs}
+    kt = knobs.get("k_tile", DEFAULT_K_TILE)
+    bm = knobs.get("block_m", DEFAULT_BLOCK_M)
+    bn = knobs.get("block_n", DEFAULT_BLOCK_N)
+
+    in_specs, out_spec = gemm_partition_specs(partition, axis)
+
+    def body(xs, ws):
+        out = olm_matmul(xs, ws, n_bits=n_bits, k_tile=kt, trunc=trunc,
+                         use_pallas=use_pallas, block_m=bm, block_n=bn,
+                         quantize=quantize, interpret=interpret)
+        if partition == "k":
+            out = jax.lax.psum(out, axis)
+        return out
+
+    fn = shard_map(body, mesh, in_specs=in_specs, out_specs=out_spec)
+
+    # The shard_map body is always traced, so olm_matmul's own eager
+    # enable_x64 wrap can never fire inside it — hoist the scope around
+    # the shard_map call when the resolved path is the n = 32 oracle.
+    work = trunc if trunc is not None else n_bits
+    cfg = _olm_cfg(work)
+    use = resolve_use_pallas(cfg, use_pallas)
+    if not use and oracle_needs_x64(cfg.n, cfg.delta) and not int64_enabled():
+        if isinstance(x, jax.core.Tracer) or isinstance(w, jax.core.Tracer):
+            raise ValueError(
+                f"the n_bits={work} broadcast-oracle path needs int64 "
+                "but olm_matmul_sharded was called inside an already-"
+                "traced computation: wrap the outer jit call in "
+                "repro.compat.enable_x64(), or use the Pallas path "
+                "(use_pallas=None/True), whose Eq.8-truncated datapath "
+                "fits int32")
+        with enable_x64():
+            return fn(x, w)
+    return fn(x, w)
+
+
+def sharded_traffic(M: int, N: int, K: int, *, partition: str,
+                    devices: int, n_bits: int = 16,
+                    k_tile: int = DEFAULT_K_TILE,
+                    trunc: Optional[int] = None,
+                    block_m: int = DEFAULT_BLOCK_M,
+                    block_n: int = DEFAULT_BLOCK_N) -> dict:
+    """Movement ledger for one sharded GEMM: the per-device LOCAL digit
+    traffic (matmul.digit_traffic on the shard shapes) plus the total
+    collective bytes on the wire. m/n move nothing between devices; k
+    all-reduces an (M, N) f32 buffer — modeled as ring reduce-scatter +
+    all-gather, 2 * 4 * M * N * (devices - 1) bytes total."""
+    Ml, Nl, Kl = local_shapes(M, N, K, partition, devices)
+    local = digit_traffic(Ml, Nl, Kl, n_bits=n_bits, k_tile=k_tile,
+                          trunc=trunc, block_m=block_m, block_n=block_n)
+    collective = 0 if partition in ("m", "n") else 8 * M * N * (devices - 1)
+    return {"partition": partition, "devices": devices,
+            "local": local, "collective_bytes": collective}

@@ -28,6 +28,7 @@ import numpy as np
 from repro.configs import get_config, smoke_config
 from repro.models.model import Model
 from repro.serving.engine import Request, ServeEngine
+from repro.serving.report import ServeReport
 
 
 def main(argv=None):
@@ -94,17 +95,16 @@ def main(argv=None):
                               max_new_tokens=args.max_new,
                               deadline_steps=args.deadline_steps))
     done = engine.run()
-    rep = engine.latency_report(done)
+    # One unified summary (serving/report.py): wall-clock latency +
+    # finish_reasons at the top level, KV residency under "kv", engine
+    # event counters under "counters" — one JSON line per deployment.
+    rep = ServeReport.collect(engine, done)
     for r in done[:4]:
         tier = f", tier {r.served_tier}" if r.served_tier else ""
         print(f"req {r.rid}: prompt {len(r.prompt)} toks -> {len(r.output)} "
               f"new ({r.finish_reason}{tier})")
     print(json.dumps(rep))
-    print(json.dumps(engine.kv_report()))
-    print(json.dumps({"counters": dict(sorted(engine.counters.items()))}))
     assert len(done) == args.requests, "engine dropped requests"
-    rep["kv"] = engine.kv_report()
-    rep["counters"] = dict(engine.counters)
     return rep
 
 

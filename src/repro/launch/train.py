@@ -22,6 +22,7 @@ import numpy as np
 from repro.checkpoint import CheckpointManager
 from repro.compat import use_mesh
 from repro.configs import get_config, smoke_config
+from repro.core.numerics import EngineSpec
 from repro.data.synthetic import SyntheticLMDataset
 from repro.distributed.fault import PreemptionGuard, StragglerWatchdog
 from repro.distributed.sharding import Sharder
@@ -48,6 +49,18 @@ def main(argv=None):
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
+    # Numerics override as an EngineSpec (core/numerics.py): route the
+    # training GEMMs through a registered DotEngine mode, optionally
+    # mesh-sharded through the shard_map olm front-end.
+    ap.add_argument("--dot-mode", default=None,
+                    help="DotEngine mode for the run's weight GEMMs "
+                         "(e.g. olm16, olm32t16); default: the config's")
+    ap.add_argument("--dot-tiling", default=None, choices=("auto",),
+                    help="'auto' = shape-aware autotuned grid tiling")
+    ap.add_argument("--dot-shard", default=None, choices=("m", "n", "k"),
+                    help="shard olm GEMMs over the mesh 'model' axis: "
+                         "m/n = output-sharded (bit-identical), k = "
+                         "psum'd contraction (within olm_error_bound)")
     args = ap.parse_args(argv)
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -68,6 +81,14 @@ def main(argv=None):
             start_step = ckpt.latest_step()
             state = ckpt.restore(state)
             print(f"resumed from step {start_step}")
+        spec_kw = {}
+        if args.dot_mode is not None:
+            spec_kw["mode"] = args.dot_mode
+        if args.dot_tiling is not None:
+            spec_kw["tiling"] = args.dot_tiling
+        if args.dot_shard is not None:
+            spec_kw["shard"] = args.dot_shard
+        engine_spec = EngineSpec(**spec_kw) if spec_kw else None
         step_fn = jit_train_step(
             model, sharder, state, ("tokens",) + (
                 ("frames",) if cfg.family == "encdec" else
@@ -75,7 +96,8 @@ def main(argv=None):
             opt_cfg=AdamWConfig(lr=args.lr),
             microbatches=args.microbatches,
             compress_grads=args.compress_grads,
-            schedule_total=args.steps)
+            schedule_total=args.steps,
+            engine_spec=engine_spec)
 
         watchdog = StragglerWatchdog(
             on_straggler=lambda s, dt: print(f"  [watchdog] step {s} straggled: {dt:.2f}s"))

@@ -3,3 +3,4 @@ from .engine import Request, ServeEngine
 from .faults import (FaultConfig, FaultInjector, TransientPrefillError,
                      build_fault_plan)
 from .replay import ReplayConfig, build_workload, run_replay, step_report
+from .report import ServeReport

@@ -80,11 +80,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.numerics import EngineSpec, resolve_engine
 from repro.models.layers import TRASH_BLOCK, paged_scatter_rows
 from repro.models.model import Model
 
 from .degrade import DegradeLadder
 from .faults import TransientPrefillError
+from .report import ServeReport
 
 __all__ = ["Request", "ServeEngine"]
 
@@ -166,7 +168,9 @@ class ServeEngine:
                  prefill_backoff: int = 1,
                  degrade_ladder: Optional[Sequence[str]] = None,
                  degrade_free_frac: float = 0.25,
-                 degrade_queue_headroom: Optional[int] = None):
+                 degrade_queue_headroom: Optional[int] = None,
+                 engine: Optional[EngineSpec] = None,
+                 mesh=None):
         # Per-deployment numerics override: serve the same checkpoint under
         # any registered DotEngine mode — every configs/olm_array
         # ARRAY_PRECISIONS width ("olm8" .. "olm32") routes decode GEMMs
@@ -182,32 +186,65 @@ class ServeEngine:
         # explicit k_tile / block_m / block_n pins override it (e.g.
         # widen block_n for the fat decode GEMVs). Params are unchanged
         # — the digit modes quantize at use from the stored dtype.
-        if isinstance(dot_tiling, str):
-            if dot_tiling != "auto":
+        # EngineSpec front door: `engine=` is the unified declarative
+        # form of the legacy dot_mode/dot_tiling/quality_tiers/
+        # degrade_ladder kwargs (core.numerics.EngineSpec), resolved
+        # against the model's engine. A user-supplied spec is taken as
+        # written — no auto-clearing of block pins; say tiling="auto"
+        # with unset blocks to mean "autotune". `mesh=` (or spec.mesh +
+        # spec.shard) routes the olm GEMMs through the mesh-sharded
+        # shard_map dispatch, tiers included. The legacy kwargs below
+        # keep their exact historical semantics but now build an
+        # EngineSpec internally — every construction path resolves
+        # through core.numerics.resolve_engine.
+        if engine is not None:
+            if (dot_mode is not None or dot_tiling is not None
+                    or quality_tiers is not None
+                    or degrade_ladder is not None):
                 raise ValueError(
-                    f"unknown dot_tiling {dot_tiling!r}: the only string "
-                    "form is 'auto' (or pass a dict of knobs)")
-            dot_tiling = {"tiling": "auto"}
-        override = dict(dot_tiling or {})
-        if bad := set(override) - {"k_tile", "block_m", "block_n", "tiling"}:
-            raise ValueError(f"unknown dot_tiling knobs: {sorted(bad)}")
-        if override.get("tiling") == "auto":
-            # Asking for the autotuner must actually engage it: clear
-            # the block knobs the model's engine had pinned (explicit
-            # knobs win over auto inside the engine, so stale static
-            # pins would silently turn "auto" into a no-op). Blocks are
-            # pure perf, so clearing them is safe; a pinned k_tile is a
-            # numerics choice (quantization slice width / tree depth)
-            # and survives — auto would supply the same default anyway
-            # unless the model builder pinned it deliberately. Knobs
-            # passed in this same dot_tiling dict survive too.
-            for knob in ("block_m", "block_n"):
-                override.setdefault(knob, None)
-        if dot_mode is not None and dot_mode != model.eng.mode:
-            override["mode"] = dot_mode
-        if override:
-            model = Model(model.cfg,
-                          dataclasses.replace(model.eng, **override))
+                    "pass either engine= (EngineSpec) or the legacy "
+                    "dot_mode/dot_tiling/quality_tiers/degrade_ladder "
+                    "kwargs, not both")
+            eng = resolve_engine(engine, base=model.eng, mesh=mesh)
+            if eng != model.eng:
+                model = Model(model.cfg, eng)
+            if engine.quality_tiers is not None:
+                quality_tiers = dict(engine.quality_tiers)
+            if engine.degrade_ladder is not None:
+                degrade_ladder = tuple(engine.degrade_ladder)
+        else:
+            if isinstance(dot_tiling, str):
+                if dot_tiling != "auto":
+                    raise ValueError(
+                        f"unknown dot_tiling {dot_tiling!r}: the only "
+                        "string form is 'auto' (or pass a dict of knobs)")
+                dot_tiling = {"tiling": "auto"}
+            override = dict(dot_tiling or {})
+            if bad := set(override) - {"k_tile", "block_m", "block_n",
+                                       "tiling"}:
+                raise ValueError(f"unknown dot_tiling knobs: {sorted(bad)}")
+            if override.get("tiling") == "auto":
+                # Asking for the autotuner must actually engage it: clear
+                # the block knobs the model's engine had pinned (explicit
+                # knobs win over auto inside the engine, so stale static
+                # pins would silently turn "auto" into a no-op). Blocks
+                # are pure perf, so clearing them is safe; a pinned
+                # k_tile is a numerics choice (quantization slice width /
+                # tree depth) and survives — auto would supply the same
+                # default anyway unless the model builder pinned it
+                # deliberately. Knobs passed in this same dot_tiling dict
+                # survive too. (An explicit None in the spec means
+                # "clear the pin" — EngineSpec's _UNSET sentinel keeps
+                # it distinct from "inherit".)
+                for knob in ("block_m", "block_n"):
+                    override.setdefault(knob, None)
+            if dot_mode is not None and dot_mode != model.eng.mode:
+                override["mode"] = dot_mode
+            if override or mesh is not None:
+                eng = resolve_engine(EngineSpec(**override),
+                                     base=model.eng, mesh=mesh)
+                if eng != model.eng:
+                    model = Model(model.cfg, eng)
         self.model = model
         self.params = params
         self.slots = slots
@@ -1072,11 +1109,14 @@ class ServeEngine:
 
     # ------------- metrics -------------
     @staticmethod
-    def latency_report(done: List[Request]) -> Dict[str, float]:
+    def latency_report(done: List[Request]) -> ServeReport:
         """Wall-clock latency summary: mean/p50/p99 TTFT and end-to-end,
-        queue wait, and aggregate tokens/s over the span of the batch."""
+        queue wait, and aggregate tokens/s over the span of the batch.
+        Returns a ServeReport (empty when nothing finished); see
+        serving/report.py for the unified key surface and
+        ServeReport.collect for the full deployment summary."""
         if not done:
-            return {}
+            return ServeReport()
 
         def pcts(vals):
             if not vals:
@@ -1095,13 +1135,9 @@ class ServeEngine:
         t0 = min(r.t_submit for r in done)
         t1 = max((r.t_done for r in done if r.t_done), default=t0)
         span = max(t1 - t0, 1e-9)
-        reasons: Dict[str, int] = {}
-        for r in done:
-            key = r.finish_reason or "unknown"
-            reasons[key] = reasons.get(key, 0) + 1
-        return {
+        return ServeReport({
             "n": len(done),
-            "finish_reasons": reasons,
+            "finish_reasons": ServeReport.finish_reasons(done),
             "ttft_mean_s": ttft_mean,
             "ttft_p50_s": ttft_p50,
             "ttft_p99_s": ttft_p99,
@@ -1111,9 +1147,9 @@ class ServeEngine:
             "queue_wait_mean_s": float(np.mean(queue)),
             "new_tokens": new_tokens,
             "tokens_per_s": new_tokens / span,
-        }
+        })
 
-    def kv_report(self) -> Dict[str, int]:
+    def kv_report(self) -> ServeReport:
         """KV residency accounting: bytes actually resident for attention
         K/V storage under the current layout vs what the contiguous
         `slots * max_len` layout would pin. Deterministic (pure shape
@@ -1141,7 +1177,7 @@ class ServeEngine:
         resident = nbytes(self.cache)
         contiguous = nbytes(jax.eval_shape(
             lambda: self.model.init_cache(self.slots, self.max_len)))
-        return {
+        return ServeReport({
             "kv_layout": self.kv_layout,
             "kv_bytes_resident": resident,
             "kv_bytes_contiguous": contiguous,
@@ -1151,4 +1187,4 @@ class ServeEngine:
             "kv_blocks_held": len(self._held),
             "kv_blocks_peak_used": self.blocks_peak_used,
             "integrity_ok": self._integrity_ok(),
-        }
+        })

@@ -29,6 +29,7 @@ import numpy as np
 
 from .engine import Request, ServeEngine
 from .faults import FaultInjector
+from .report import ServeReport
 
 __all__ = ["ReplayConfig", "build_workload", "run_replay", "step_report"]
 
@@ -81,8 +82,16 @@ def build_workload(cfg: ReplayConfig) -> List[Dict[str, object]]:
 def run_replay(engine: ServeEngine, workload: List[Dict[str, object]],
                *, max_steps: int = 100_000,
                faults: Optional[FaultInjector] = None,
-               ) -> Tuple[List[Request], Dict[str, float]]:
+               ) -> Tuple[List[Request], ServeReport]:
     """Drive the engine through the workload; returns (done, step_report).
+
+    The report is a :class:`~repro.serving.report.ServeReport` — virtual-
+    clock step metrics plus the unified counter surface (finish_reasons /
+    preempts / retries / degrades, legacy ``n_*`` keys readable as
+    aliases) and ``wall_s``. Deliberately NO wall-clock latency fields
+    beyond wall_s: the chaos bench diffs every non-wall_s entry exactly
+    across runs, so everything here must be a pure function of the
+    (workload, fault plan, engine config) triple.
 
     Requests are submitted when the engine's step counter reaches their
     arrival step, so queueing pressure replays identically every run.
@@ -121,11 +130,17 @@ def run_replay(engine: ServeEngine, workload: List[Dict[str, object]],
     return done, report
 
 
-def step_report(done: List[Request]) -> Dict[str, float]:
+def step_report(done: List[Request]) -> ServeReport:
     """Latency percentiles in scheduler steps (deterministic; see module
-    docstring). p50/p99 use numpy's default linear interpolation."""
+    docstring). p50/p99 use numpy's default linear interpolation.
+
+    Returns a ServeReport: per-reason counts live under the one
+    `finish_reasons` mapping and the robustness counters under their
+    canonical names (preempts/retries/degrades); the historical
+    `n_cache_full` / `n_preempts` / ... spellings stay readable as
+    ServeReport aliases."""
     if not done:
-        return {}
+        return ServeReport()
 
     def pcts(vals):
         return (round(float(np.percentile(vals, 50)), 4),
@@ -138,8 +153,9 @@ def step_report(done: List[Request]) -> Dict[str, float]:
     new_tokens = sum(len(r.output) for r in done)
     steps = max(max((r.s_done for r in done if r.s_done is not None),
                     default=1), 1)
-    return {
+    return ServeReport({
         "n": len(done),
+        "finish_reasons": ServeReport.finish_reasons(done),
         "ttft_steps_p50": ttft_p50,
         "ttft_steps_p99": ttft_p99,
         "e2e_steps_p50": e2e_p50,
@@ -147,12 +163,7 @@ def step_report(done: List[Request]) -> Dict[str, float]:
         "new_tokens": new_tokens,
         "steps_total": steps,
         "tokens_per_step": round(new_tokens / steps, 4),
-        "n_cache_full": sum(r.finish_reason == "cache_full" for r in done),
-        "n_deadline": sum(r.finish_reason == "deadline" for r in done),
-        "n_rejected": sum(r.finish_reason == "rejected" for r in done),
-        "n_numerics": sum(r.finish_reason == "numerics" for r in done),
-        "n_failed": sum(r.finish_reason == "failed" for r in done),
-        "n_preempts": sum(r.n_preempts for r in done),
-        "n_retries": sum(r.n_retries for r in done),
-        "n_degraded": sum(r.degrade_rung > 0 for r in done),
-    }
+        "preempts": sum(r.n_preempts for r in done),
+        "retries": sum(r.n_retries for r in done),
+        "degrades": sum(r.degrade_rung > 0 for r in done),
+    })

@@ -3,8 +3,19 @@ import os
 import numpy as np
 import pytest
 
-# NOTE: do NOT set XLA_FLAGS device-count here — smoke tests and benches
-# must see the single real CPU device; only launch/dryrun.py forces 512.
+# NOTE: do NOT set XLA_FLAGS device-count here unconditionally — smoke
+# tests and benches must see the single real CPU device by default;
+# launch/dryrun.py forces 512 for itself. The one sanctioned opt-in is
+# REPRO_TEST_DEVICES=N (the CI `distributed` job sets 8): it forces N
+# host devices for the whole pytest process so tests/
+# test_distributed_matmul.py can build a real multi-device mesh. This
+# must run at conftest import time, before anything imports jax — safe
+# here because this module imports only os/numpy/pytest.
+_n_dev = os.environ.get("REPRO_TEST_DEVICES", "")
+if _n_dev.isdigit() and int(_n_dev) > 1:
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={int(_n_dev)}").strip()
 
 
 @pytest.fixture(scope="session", autouse=True)

@@ -1,0 +1,401 @@
+"""Mesh-sharded olm GEMMs + the EngineSpec/ServeReport API surface.
+
+Two tiers of tests live here:
+
+  * the sharded sweeps need a REAL multi-device mesh — they run under
+    REPRO_TEST_DEVICES=8 (tests/conftest.py forces
+    --xla_force_host_platform_device_count=8 before jax loads; the CI
+    `distributed` job sets it) and skip cleanly on the default
+    single-device tier-1 run. The contract they pin: partition "m"/"n"
+    is BIT-IDENTICAL to single-device `olm_matmul` for every registered
+    mode (full and truncated), partition "k" psums f32 partials and
+    stays within `olm_error_bound` (reduction order differs — the one
+    documented distributed numerics caveat).
+  * the EngineSpec round-trip/shim/validation tests, the ServeEngine
+    `engine=` front-door tests, the ServeReport alias tests, and the
+    bench-worker subprocess smoke all run on ANY device count — they are
+    part of plain tier-1.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.olm_array import MATMUL_TILING, engine_for
+from repro.core.numerics import (TRUNCATED_SPECS, DotEngine, EngineSpec,
+                                 resolve_engine)
+from repro.kernels.online_dot.matmul import olm_error_bound, olm_matmul
+from repro.kernels.online_dot.matmul_sharded import (gemm_partition_specs,
+                                                     local_shapes,
+                                                     olm_matmul_sharded,
+                                                     sharded_traffic)
+from repro.serving.report import ServeReport
+
+# Every registered olm matmul mode: (n_bits, trunc-or-None).
+FULL_WIDTHS = (8, 16, 24, 32)
+ALL_CASES = [(n, None) for n in FULL_WIDTHS] + list(TRUNCATED_SPECS)
+MESH_DEVICES = 8
+
+
+def _label(n, p):
+    return f"olm{n}" if p is None else f"olm{n}t{p}"
+
+
+@pytest.fixture(scope="module")
+def mesh8():
+    if len(jax.devices()) < MESH_DEVICES:
+        pytest.skip(f"needs {MESH_DEVICES} devices (REPRO_TEST_DEVICES="
+                    f"{MESH_DEVICES}); jax sees {len(jax.devices())}")
+    return jax.make_mesh((MESH_DEVICES,), ("model",))
+
+
+@pytest.fixture(scope="module")
+def operands():
+    rng = np.random.default_rng(0xD15C)
+    S = 32
+    x = rng.standard_normal((S, S)).astype(np.float32)
+    w = rng.standard_normal((S, S)).astype(np.float32)
+    return x, w
+
+
+class TestShardedSweep:
+    """The sharded-vs-single-device contract, every registered mode."""
+
+    @pytest.mark.parametrize("n,p", ALL_CASES,
+                             ids=[_label(n, p) for n, p in ALL_CASES])
+    @pytest.mark.parametrize("part", ["m", "n"])
+    def test_output_sharded_bit_identical(self, mesh8, operands, n, p, part):
+        x, w = operands
+        ref = olm_matmul(x, w, n_bits=n, trunc=p)
+        out = olm_matmul_sharded(x, w, mesh=mesh8, partition=part,
+                                 n_bits=n, trunc=p)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+    @pytest.mark.parametrize("n,p", ALL_CASES,
+                             ids=[_label(n, p) for n, p in ALL_CASES])
+    def test_k_sharded_within_bound(self, mesh8, operands, n, p):
+        x, w = operands
+        out = np.asarray(olm_matmul_sharded(x, w, mesh=mesh8, partition="k",
+                                            n_bits=n, trunc=p))
+        exact = x.astype(np.float64) @ w.astype(np.float64)
+        bound = np.asarray(olm_error_bound(x, w, n_bits=n, trunc=p))
+        assert (np.abs(out - exact) <= bound).all()
+
+    def test_k_sharded_not_assumed_identical(self, mesh8, operands):
+        # Documentation guard: the k path is only BOUND-accurate. If it
+        # ever became bit-identical too this assert would flag it so the
+        # docs/bench markers could be tightened — today the psum order
+        # genuinely differs from the sequential K-tile walk.
+        x, w = operands
+        ref = np.asarray(olm_matmul(x, w, n_bits=16))
+        out = np.asarray(olm_matmul_sharded(x, w, mesh=mesh8, partition="k",
+                                            n_bits=16))
+        assert not np.array_equal(out, ref)
+
+    def test_auto_tiling_bit_identical(self, mesh8, operands):
+        # tiling="auto" tunes on the LOCAL shard shape; block shapes are
+        # bit-invariant and k_tile stays pinned, so auto == static on
+        # the output-sharded paths.
+        x, w = operands
+        for part in ("m", "n"):
+            a = olm_matmul_sharded(x, w, mesh=mesh8, partition=part,
+                                   n_bits=16, tiling="auto")
+            b = olm_matmul_sharded(x, w, mesh=mesh8, partition=part,
+                                   n_bits=16)
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_divisibility_error(self, mesh8):
+        x = np.ones((12, 16), np.float32)   # 12 % 8 != 0
+        w = np.ones((16, 16), np.float32)
+        with pytest.raises(ValueError, match="divisible by the mesh axis"):
+            olm_matmul_sharded(x, w, mesh=mesh8, partition="m", n_bits=16)
+
+    def test_unknown_axis_error(self, mesh8, operands):
+        x, w = operands
+        with pytest.raises(ValueError, match="mesh has no axis"):
+            olm_matmul_sharded(x, w, mesh=mesh8, partition="m",
+                               axis="nope", n_bits=16)
+
+
+class TestEngineDispatch:
+    """DotEngine(mesh=, shard=) routes _olm_dot through the sharded
+    front-end — same numerics contract as calling it directly."""
+
+    @pytest.mark.parametrize("part", ["m", "n"])
+    def test_engine_sharded_matches_single_device(self, mesh8, operands,
+                                                  part):
+        x, w = operands
+        single = DotEngine(mode="olm16")
+        sharded = DotEngine(mode="olm16", mesh=mesh8, shard=part)
+        np.testing.assert_array_equal(np.asarray(sharded.dot(x, w)),
+                                      np.asarray(single.dot(x, w)))
+
+    def test_engine_k_sharded_within_bound(self, mesh8, operands):
+        x, w = operands
+        eng = DotEngine(mode="olm32t16", mesh=mesh8, shard="k")
+        out = np.asarray(eng.dot(x, w))
+        exact = x.astype(np.float64) @ w.astype(np.float64)
+        bound = np.asarray(olm_error_bound(x, w, n_bits=32, trunc=16))
+        assert (np.abs(out - exact) <= bound).all()
+
+    def test_engine_3d_lead_axes(self, mesh8):
+        # _lowered_dot flattens (..., K) onto 2-D before the sharded
+        # front-end sees it; the flattened M must still divide the mesh.
+        rng = np.random.default_rng(7)
+        x = rng.standard_normal((4, 8, 32)).astype(np.float32)
+        w = rng.standard_normal((32, 32)).astype(np.float32)
+        single = DotEngine(mode="olm16")
+        sharded = DotEngine(mode="olm16", mesh=mesh8, shard="m")
+        out = sharded.dot(x, w)
+        assert out.shape == (4, 8, 32)
+        np.testing.assert_array_equal(np.asarray(out),
+                                      np.asarray(single.dot(x, w)))
+
+    def test_engine_auto_tiling_sharded(self, mesh8, operands):
+        x, w = operands
+        auto = DotEngine(mode="olm16", mesh=mesh8, shard="n", tiling="auto")
+        static = DotEngine(mode="olm16", mesh=mesh8, shard="n")
+        np.testing.assert_array_equal(np.asarray(auto.dot(x, w)),
+                                      np.asarray(static.dot(x, w)))
+
+    def test_mesh_without_shard_stays_single_device(self, mesh8, operands):
+        # mesh= alone is inert: shard= is the opt-in.
+        x, w = operands
+        eng = DotEngine(mode="olm16", mesh=mesh8)
+        np.testing.assert_array_equal(
+            np.asarray(eng.dot(x, w)),
+            np.asarray(DotEngine(mode="olm16").dot(x, w)))
+
+
+class TestPartitionSpecs:
+    def test_specs_and_local_shapes(self):
+        from jax.sharding import PartitionSpec as P
+        (xs, ws), out = gemm_partition_specs("m", "model")
+        assert (xs, ws, out) == (P("model", None), P(None, None),
+                                 P("model", None))
+        (xs, ws), out = gemm_partition_specs("k", "model")
+        assert (xs, ws, out) == (P(None, "model"), P("model", None),
+                                 P(None, None))
+        assert local_shapes(64, 32, 16, "m", 8) == (8, 32, 16)
+        assert local_shapes(64, 32, 16, "n", 8) == (64, 4, 16)
+        assert local_shapes(64, 32, 16, "k", 8) == (64, 32, 2)
+        with pytest.raises(ValueError, match="unknown GEMM partition"):
+            gemm_partition_specs("q")
+
+    def test_sharder_reexport(self):
+        from repro.distributed.sharding import \
+            gemm_partition_specs as from_sharding
+        assert from_sharding("n", "model") == gemm_partition_specs(
+            "n", "model")
+
+    def test_traffic_ledger(self):
+        mn = sharded_traffic(64, 64, 64, partition="m", devices=8, n_bits=16)
+        k = sharded_traffic(64, 64, 64, partition="k", devices=8, n_bits=16)
+        assert mn["collective_bytes"] == 0
+        # ring reduce-scatter + all-gather of the (M, N) f32 output
+        assert k["collective_bytes"] == 8 * 64 * 64 * 7
+        # per-device local traffic shrinks with the shard
+        assert k["local"]["fused_bytes"] < \
+            sharded_traffic(64, 64, 64, partition="k", devices=2,
+                            n_bits=16)["local"]["fused_bytes"]
+
+
+class TestEngineSpec:
+    """The unified construction front door (no mesh needed)."""
+
+    @pytest.mark.parametrize("eng", [
+        DotEngine(),
+        DotEngine(mode="olm16"),
+        DotEngine(mode="olm32t16", tiling="auto"),
+        DotEngine(mode="olm24", k_tile=8, block_m=16, block_n=8),
+        DotEngine(mode="olm16", layer_modes={"head": "olm32"}),
+        DotEngine(mode="olm16", shard="k", shard_axis="data"),
+    ], ids=lambda e: e.mode + (f"+{e.shard}" if e.shard else ""))
+    def test_round_trip(self, eng):
+        assert resolve_engine(eng.spec()) == eng
+
+    def test_structural_mode(self):
+        assert resolve_engine(EngineSpec(n_bits=16)).mode == "olm16"
+        assert resolve_engine(EngineSpec(n_bits=32, trunc=16)).mode \
+            == "olm32t16"
+
+    def test_structural_mode_unregistered(self):
+        with pytest.raises(ValueError, match="unregistered mode"):
+            resolve_engine(EngineSpec(n_bits=32, trunc=7))
+
+    def test_mode_and_n_bits_mutually_exclusive(self):
+        with pytest.raises(ValueError, match="not both"):
+            EngineSpec(mode="olm16", n_bits=16)
+
+    def test_trunc_requires_n_bits(self):
+        with pytest.raises(ValueError, match="trunc"):
+            EngineSpec(trunc=16)
+
+    def test_base_inheritance_and_none_clears(self):
+        base = DotEngine(mode="olm16", k_tile=8, tiling="auto")
+        # unset fields inherit from base; mode overrides
+        eng = resolve_engine(EngineSpec(mode="olm24"), base=base)
+        assert (eng.mode, eng.k_tile, eng.tiling) == ("olm24", 8, "auto")
+        # explicit None CLEARS an inherited pin (not the same as unset)
+        eng = resolve_engine(EngineSpec(k_tile=None), base=base)
+        assert eng.k_tile is None and eng.tiling == "auto"
+
+    def test_mesh_arg_resolution(self, mesh8):
+        base = DotEngine(mode="olm16")
+        eng = resolve_engine(EngineSpec(shard="m"), base=base, mesh=mesh8)
+        assert eng.mesh is mesh8 and eng.shard == "m"
+
+    def test_engine_for_shim_equivalence(self):
+        # the legacy helper is now a thin shim over resolve_engine —
+        # both construction paths must agree exactly.
+        assert engine_for(16) == resolve_engine(
+            EngineSpec(mode="olm16", tiling="auto"))
+        assert engine_for(32, trunc=16, tiling=None) == resolve_engine(
+            EngineSpec(mode="olm32t16", **MATMUL_TILING))
+        assert engine_for(16, block_n=32) == resolve_engine(
+            EngineSpec(mode="olm16", tiling="auto", block_n=32))
+
+    def test_engine_for_errors_preserved(self):
+        with pytest.raises(ValueError, match="no olm matmul mode"):
+            engine_for(12)
+        with pytest.raises(ValueError, match="no truncated olm mode"):
+            engine_for(32, trunc=7)
+
+    def test_dot_engine_shard_validation(self):
+        with pytest.raises(ValueError, match="unknown DotEngine shard"):
+            DotEngine(mode="olm16", shard="q")
+
+    def test_spec_hashable(self):
+        s = EngineSpec(mode="olm16", layer_modes={"mlp": "olm32t16"})
+        assert hash(s) == hash(EngineSpec(mode="olm16",
+                                          layer_modes={"mlp": "olm32t16"}))
+
+
+class TestServeEngineFrontDoor:
+    """ServeEngine(engine=EngineSpec(...)) vs the legacy kwargs."""
+
+    def _model(self):
+        from repro.models.config import ModelConfig
+        from repro.models.model import Model
+        cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=16,
+                          n_heads=2, n_kv_heads=2, d_ff=32, vocab_size=512,
+                          param_dtype="float32", compute_dtype="float32")
+        model = Model(cfg, DotEngine())
+        return model, model.init(jax.random.PRNGKey(0))
+
+    def _run(self, model, params, **kw):
+        from repro.serving.engine import Request, ServeEngine
+        eng = ServeEngine(model, params, slots=2, max_len=16, **kw)
+        rng = np.random.default_rng(0)
+        for rid in range(3):
+            eng.submit(Request(rid=rid,
+                               prompt=rng.integers(1, 512, 5).astype(np.int32),
+                               max_new_tokens=4))
+        done = sorted(eng.run(), key=lambda r: r.rid)
+        return eng, [list(r.output) for r in done]
+
+    def test_engine_spec_equals_legacy(self):
+        model, params = self._model()
+        e_new, out_new = self._run(model, params,
+                                   engine=EngineSpec(mode="olm16",
+                                                     tiling="auto"))
+        e_old, out_old = self._run(model, params, dot_mode="olm16",
+                                   dot_tiling="auto")
+        assert out_new == out_old
+        assert e_new.model.eng == e_old.model.eng
+
+    def test_engine_and_legacy_mutually_exclusive(self):
+        from repro.serving.engine import ServeEngine
+        model, params = self._model()
+        with pytest.raises(ValueError, match="not both"):
+            ServeEngine(model, params, engine=EngineSpec(mode="olm16"),
+                        dot_mode="olm16")
+
+    def test_spec_carries_serving_fields(self):
+        model, params = self._model()
+        spec = EngineSpec(mode="olm16",
+                          quality_tiers={"gold": "olm32", "bronze": "olm8"},
+                          degrade_ladder=("olm16", "olm8"))
+        eng, _ = self._run(model, params, engine=spec)
+        assert eng.quality_tiers["gold"] == "olm32"
+        assert eng.quality_tiers["bronze"] == "olm8"
+        assert eng.degrade is not None
+        assert eng.degrade.ladder == ("olm16", "olm8")
+
+
+class TestServeReport:
+    def test_empty_equals_dict(self):
+        assert ServeReport() == {}
+
+    def test_renamed_counter_aliases(self):
+        rep = ServeReport({"preempts": 3, "retries": 1, "degrades": 2})
+        assert rep["n_preempts"] == 3
+        assert rep["n_retries"] == 1
+        assert rep["n_degraded"] == 2
+        assert rep.get("n_preempts") == 3
+
+    def test_reason_aliases(self):
+        rep = ServeReport({"finish_reasons": {"eos": 4, "deadline": 1}})
+        assert rep["n_deadline"] == 1
+        assert rep["n_eos"] == 4
+        assert rep["n_cache_full"] == 0      # absent reason -> old 0 default
+        assert "n_deadline" in rep
+
+    def test_typo_still_raises(self):
+        rep = ServeReport({"finish_reasons": {}, "preempts": 0})
+        with pytest.raises(KeyError):
+            rep["n_deadlnie"]
+        assert "n_deadlnie" not in rep
+
+    def test_canonical_keys_only_in_json(self):
+        rep = ServeReport({"finish_reasons": {"deadline": 1}, "preempts": 2})
+        assert set(json.loads(json.dumps(rep))) == {"finish_reasons",
+                                                    "preempts"}
+        assert set(rep) == {"finish_reasons", "preempts"}
+
+    def test_producers_return_servereport(self):
+        from repro.serving.engine import ServeEngine
+        from repro.serving.replay import (ReplayConfig, build_workload,
+                                          run_replay)
+        model, params = TestServeEngineFrontDoor()._model()
+        engine = ServeEngine(model, params, slots=2, max_len=32)
+        _, rep = run_replay(engine, build_workload(ReplayConfig(
+            n_requests=3, max_new_range=(2, 2), prompt_len_range=(4, 8))))
+        assert isinstance(rep, ServeReport)
+        assert "finish_reasons" in rep and "preempts" in rep
+        assert rep["n_preempts"] == rep["preempts"]
+        assert isinstance(engine.latency_report([]), ServeReport)
+        assert isinstance(engine.kv_report(), ServeReport)
+
+
+class TestBenchWorkerSmoke:
+    def test_worker_subprocess(self, tmp_path):
+        """The olm_matmul_distributed bench path end to end: the worker
+        forces its own 8-device host platform, so this runs (and the
+        sharded contract is asserted) even on the 1-device tier-1 CI."""
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.abspath("src") + os.pathsep + \
+            env.get("PYTHONPATH", "")
+        env.pop("XLA_FLAGS", None)    # the worker sets its own
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.distributed_worker",
+             "--devices", "8", "--size", "32", "--widths", "16",
+             "--trunc", "32:16"],
+            capture_output=True, text=True, env=env,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+        assert proc.returncode == 0, proc.stderr
+        out = json.loads(proc.stdout)
+        assert out["devices"] == 8
+        ops = {r["op"] for r in out["rows"]}
+        assert ops == {f"olm_matmul_distributed/{lab}/{part}"
+                       for lab in ("olm16", "olm32t16")
+                       for part in ("m", "n", "k")}
+        for r in out["rows"]:
+            if r["op"].endswith(("/m", "/n")):
+                assert r["ulp"] == 0.0 and r["bytes_float"] == 0
+            else:
+                assert 0 <= r["ulp"] <= 1.0 and r["bytes_float"] > 0

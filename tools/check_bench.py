@@ -58,6 +58,17 @@ runnable tool. Three independent checks (all on by default):
               end in t{p} — so truncated and full tiers of the same
               n_bits can never share an entry — and every precision-
               dependent check runs at p.
+  distributed — from results/bench/BENCH_olm_matmul_distributed.json
+              (the shard_map bench; its worker forces an 8-device host
+              mesh, so the gate runs on 1-device CI too): every
+              registered width plus the olm32t16 tier must carry rows
+              for all three partitions; m/n rows must keep ulp = 0.0
+              exactly — the bit-identity marker the worker asserts
+              against single-device olm_matmul — with no collective
+              bytes; k rows must stay within olm_error_bound
+              (0 <= ulp <= 1, the consumed bound fraction), report the
+              device count under `derived`, and carry a positive f32
+              all-reduce byte figure.
   truncated — from results/bench/BENCH_olm_matmul_truncated.json: every
               registered olm{n}t{p} tier (numerics.TRUNCATED_SPECS)
               must be present, cut its digit operand bytes by >= p/n
@@ -351,6 +362,69 @@ def check_truncated(bench_dir: str) -> None:
               f"{r['ulp']:.3f} ok")
 
 
+def check_distributed(bench_dir: str) -> None:
+    """Sharded-GEMM acceptance gate: for every registered width and the
+    olm32t16 truncated tier, the m/n partitions must be bit-identical to
+    single-device (ulp stored as exactly 0.0, no wire bytes) and the k
+    partition's psum'd error must sit within olm_error_bound (ulp is the
+    consumed bound fraction) over the worker's forced 8-device mesh."""
+    rows = _load(os.path.join(
+        bench_dir, "BENCH_olm_matmul_distributed.json"))["rows"]
+    by_op = {r["op"]: r for r in rows}
+    labels = [f"olm{n}" for n in sorted(MATMUL_MODES)] + [
+        f"olm{n}t{p}" for n, p in sorted(TRUNCATED_SPECS)]
+    want = {f"olm_matmul_distributed/{lab}/{part}"
+            for lab in labels for part in ("m", "n", "k")}
+    if missing := want - set(by_op):
+        raise CheckFailure(
+            f"distributed bench is missing rows {sorted(missing)}: the "
+            "sharded sweep must cover every registered mode x partition")
+    for lab in labels:
+        devices = None
+        for part in ("m", "n", "k"):
+            r = by_op[f"olm_matmul_distributed/{lab}/{part}"]
+            if not isinstance(r.get("bytes_moved"), int) or \
+                    r["bytes_moved"] <= 0:
+                raise CheckFailure(
+                    f"{r['op']}: bytes_moved must be a positive int "
+                    f"(per-device local digit traffic), "
+                    f"got {r.get('bytes_moved')!r}")
+            if part in ("m", "n"):
+                # ulp == 0.0 is the worker's bit-identity marker, not a
+                # measured error — any nonzero value means a shard
+                # diverged from single-device olm_matmul.
+                if r["ulp"] != 0.0 or r["derived"] != 1:
+                    raise CheckFailure(
+                        f"{r['op']}: expected bit-identity marker "
+                        f"(ulp=0.0, derived=1), got ulp={r['ulp']!r} "
+                        f"derived={r['derived']!r}")
+                if r.get("bytes_float") != 0:
+                    raise CheckFailure(
+                        f"{r['op']}: output-sharded partitions move no "
+                        f"collective bytes, got {r.get('bytes_float')!r}")
+            else:
+                if not isinstance(r["ulp"], (int, float)) or \
+                        not 0 <= r["ulp"] <= 1.0:
+                    raise CheckFailure(
+                        f"{r['op']}: error/bound fraction {r['ulp']!r} "
+                        "outside [0, 1] — the psum'd contraction left "
+                        "olm_error_bound")
+                devices = r["derived"]
+                if not isinstance(devices, int) or devices < 2:
+                    raise CheckFailure(
+                        f"{r['op']}: derived must record the mesh device "
+                        f"count (>= 2), got {devices!r}")
+                if not isinstance(r.get("bytes_float"), int) or \
+                        r["bytes_float"] <= 0:
+                    raise CheckFailure(
+                        f"{r['op']}: k partition must report positive f32 "
+                        f"all-reduce bytes, got {r.get('bytes_float')!r}")
+        k = by_op[f"olm_matmul_distributed/{lab}/k"]
+        print(f"  distributed {lab}: m/n bit-identical over "
+              f"{devices} devices, k err/bound {k['ulp']:.3f} "
+              f"(wire {k['bytes_float']} B) ok")
+
+
 def check_tuning(tuning_path: str) -> None:
     """Schema + the k_tile-re-pin numerics invariant, per cached entry."""
     data = _load(tuning_path)
@@ -435,7 +509,7 @@ def main(argv=None) -> int:
                          "REPRO_REPLAY_WALLCLOCK=1 wall-clock gate")
     ap.add_argument("--only",
                     default="traffic,baseline,serving,tuning,truncated,"
-                            "faults",
+                            "faults,distributed",
                     help="comma-separated subset of checks to run")
     args = ap.parse_args(argv)
     checks = {
@@ -447,6 +521,7 @@ def main(argv=None) -> int:
         "tuning": lambda: check_tuning(args.tuning),
         "truncated": lambda: check_truncated(args.bench),
         "faults": lambda: check_faults(args.bench),
+        "distributed": lambda: check_distributed(args.bench),
     }
     failed = False
     for name in args.only.split(","):
